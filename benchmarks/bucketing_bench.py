@@ -1,0 +1,32 @@
+"""Benchmark: learned length buckets vs pow2 padding in the data path."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.data import fit_buckets, padding_waste, pow2_buckets
+from repro.core import sample_lognormal_sizes
+
+
+def run(n: int = 200_000) -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    lengths = sample_lognormal_sizes(rng, n, 900.0, 450.0, max_size=4096)
+    rows = []
+    for k in (4, 8, 16):
+        t0 = time.perf_counter()
+        scheme = fit_buckets(lengths, k)
+        dt = (time.perf_counter() - t0) * 1e6
+        w_learned, f_learned = padding_waste(scheme.boundaries, lengths)
+        w_base, f_base = padding_waste(scheme.baseline_boundaries, lengths)
+        rows.append((f"buckets_k{k}", dt,
+                     f"pad_frac_learned={f_learned:.4f};"
+                     f"pad_frac_pow2={f_base:.4f};"
+                     f"recovered={scheme.recovered_frac:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.0f},{derived}")

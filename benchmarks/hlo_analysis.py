@@ -1,0 +1,240 @@
+"""Trip-count-aware HLO cost walker.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so for
+scan-over-layers models it under-reports FLOPs by ~L x microbatches
+(verified empirically — see EXPERIMENTS.md §Dry-run methodology). This
+walker parses the post-SPMD optimized HLO text and computes, per device:
+
+  * dot FLOPs — every computation's cost multiplied through the while
+    trip counts enclosing its call sites. Trip counts come from XLA's
+    ``backend_config known_trip_count`` annotation on the while op
+    (fallback: the `compare(iv, constant(N)), direction=LT` in the
+    condition computation);
+  * collective bytes (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute), using each op's RESULT shape as
+    the per-device wire proxy (exact for all-reduce/permute; a
+    participant-factor bound for gather/scatter — documented in
+    EXPERIMENTS.md §Roofline);
+  * per-collective-kind breakdowns for bottleneck attribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\-.]+)\s*=\s*((?:\([^=]*?\))|(?:[a-z0-9]+"
+    r"\[[^\]]*\](?:\{[^}]*\})?))\s+([\w\-]+)")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\-.]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_PARAM_RE = re.compile(r"([\w\-.]+)\s*:\s*([a-z0-9]+\[[\d,]*\])")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    calls: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        m = _HDR_RE.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = [line]
+        elif cur is not None:
+            comps[cur].append(line)
+            if line.strip() == "}":
+                cur = None
+    return comps
+
+
+def _symbol_table(lines: List[str]) -> Dict[str, str]:
+    table: Dict[str, str] = {}
+    for p_name, p_type in _PARAM_RE.findall(lines[0]):
+        table[p_name] = p_type
+    for ln in lines[1:]:
+        m = _DEF_RE.match(ln)
+        if m:
+            table[m.group(1)] = m.group(2)
+    return table
+
+
+def _dot_flops(line: str, table: Dict[str, str]) -> float:
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0.0
+    out_dims = _dims(m.group(2))
+    if out_dims is None:
+        return 0.0
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    k = None
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    opm = re.search(r"dot\(([^)]*)\)", line)
+    if cd is not None and opm is not None:
+        names = re.findall(r"%([\w\-.]+)", opm.group(1))
+        if names and names[0] in table:
+            lhs_dims = _dims(table[names[0]])
+            if lhs_dims is not None and cd.group(1):
+                k = 1
+                for ci in cd.group(1).split(","):
+                    ci = int(ci)
+                    if ci < len(lhs_dims):
+                        k *= lhs_dims[ci]
+    return 2.0 * out_elems * (k if k else 1)
+
+
+def _while_trip(line: str, cond_name: Optional[str],
+                trip_by_cond: Dict[str, Optional[int]]) -> float:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+    if m:
+        return float(m.group(1))
+    if cond_name is not None:
+        t = trip_by_cond.get(cond_name)
+        if t:
+            return float(t)
+    return 1.0
+
+
+def _cond_trip_count(lines: List[str]) -> Optional[int]:
+    consts = {}
+    for ln in lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w\-.]+)\s*=\s*\S+\s+"
+                     r"constant\((-?\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in lines:
+        if "compare(" in ln and ("direction=LT" in ln
+                                 or "direction=GT" in ln):
+            for a in re.findall(r"%([\w\-.]+)", ln[ln.index("compare("):]):
+                if a in consts:
+                    return abs(consts[a])
+    return None
+
+
+def parse_hlo(text: str) -> Dict[str, CompStats]:
+    comps = _split_computations(text)
+    trip_by_cond = {name: _cond_trip_count(lines)
+                    for name, lines in comps.items()}
+    stats: Dict[str, CompStats] = {}
+    for name, lines in comps.items():
+        st = CompStats()
+        table = _symbol_table(lines)
+        for ln in lines[1:]:
+            if " dot(" in ln:
+                st.dot_flops += _dot_flops(ln, table)
+                continue
+            hit_coll = False
+            for kind in _COLLECTIVES:
+                if re.search(rf"\s{kind}(-start)?\(", ln):
+                    m = _DEF_RE.match(ln)
+                    if m:
+                        b = _shape_bytes(m.group(2))
+                        st.collective_bytes += b
+                        st.coll_by_kind[kind] += b
+                        hit_coll = True
+                    break
+            if hit_coll:
+                continue
+            if re.search(r"\swhile\(", ln):
+                body = re.search(r"body=%?([\w\-.]+)", ln)
+                cond = re.search(r"condition=%?([\w\-.]+)", ln)
+                trip = _while_trip(ln, cond.group(1) if cond else None,
+                                   trip_by_cond)
+                if body:
+                    st.calls.append((body.group(1), trip))
+                continue
+            for attr in ("to_apply", "calls"):
+                mc = re.search(rf"{attr}=%?([\w\-.]+)", ln)
+                if mc:
+                    st.calls.append((mc.group(1), 1.0))
+            mb = re.search(r"branch_computations=\{([^}]*)\}", ln)
+            if mb:
+                for callee in re.findall(r"%?([\w\-.]+)", mb.group(1)):
+                    st.calls.append((callee, 1.0))
+        stats[name] = st
+    return stats
+
+
+@dataclasses.dataclass
+class HloCosts:
+    dot_flops: float
+    collective_bytes: float
+    coll_by_kind: Dict[str, float]
+    n_while: int
+
+    def to_json(self) -> Dict:
+        return {"dot_flops": self.dot_flops,
+                "collective_bytes": self.collective_bytes,
+                "coll_by_kind": dict(self.coll_by_kind),
+                "n_while": self.n_while}
+
+
+def analyze(text: str, entry: Optional[str] = None) -> HloCosts:
+    """Total per-device dot FLOPs + collective bytes, trip-count aware."""
+    stats = parse_hlo(text)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w\-.]+)", text, re.MULTILINE)
+        entry = m.group(1) if m else next(iter(stats))
+
+    memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def walk(name: str, depth=0) -> Tuple[float, float, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        st = stats.get(name)
+        if st is None or depth > 64:
+            return 0.0, 0.0, {}
+        memo[name] = (0.0, 0.0, {})  # cycle guard
+        fl, cb = st.dot_flops, st.collective_bytes
+        by = dict(st.coll_by_kind)
+        for callee, mult in st.calls:
+            cfl, ccb, cby = walk(callee, depth + 1)
+            fl += mult * cfl
+            cb += mult * ccb
+            for k, v in cby.items():
+                by[k] = by.get(k, 0.0) + mult * v
+        memo[name] = (fl, cb, by)
+        return memo[name]
+
+    fl, cb, by = walk(entry)
+    return HloCosts(dot_flops=fl, collective_bytes=cb, coll_by_kind=by,
+                    n_while=len(re.findall(r"\swhile\(", text)))

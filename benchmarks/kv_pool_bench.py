@@ -1,0 +1,49 @@
+"""Benchmark: KV slab pool fragmentation — pow2 vs learned vs online refit.
+
+The paper's technique applied to the serving runtime (DESIGN.md §2),
+measured with the continuous-batching simulator.
+"""
+from __future__ import annotations
+
+import copy
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import SlabPolicy, size_histogram
+from repro.serving import (ContinuousBatcher, KVSlabPool,
+                           default_pow2_classes,
+                           lognormal_request_workload, quantize_lengths)
+
+
+def run(n_requests: int = 300) -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    workload = lognormal_request_workload(rng, n_requests)
+    final = quantize_lengths([r.prompt_len + r.output_len
+                              for r in workload])
+    sup, fr = size_histogram(final)
+    sched = SlabPolicy(page_size=1 << 22, min_chunk=128).fit(
+        sup, fr, 8, baseline=default_pow2_classes())
+    learned = np.unique(quantize_lengths(sched.chunk_sizes))
+
+    rows = []
+    for name, classes, refit in (
+            ("pow2_baseline", default_pow2_classes(), None),
+            ("learned_offline", learned, None),
+            ("learned_online_refit", default_pow2_classes(), 200)):
+        pool = KVSlabPool(2_000_000, classes)
+        batcher = ContinuousBatcher(pool, max_batch=48, refit_every=refit)
+        t0 = time.perf_counter()
+        res = batcher.run(copy.deepcopy(workload), steps=4000)
+        dt = (time.perf_counter() - t0) * 1e6 / max(res.steps, 1)
+        rows.append((f"kvpool_{name}", dt,
+                     f"waste_frac={res.mean_waste_fraction:.4f};"
+                     f"completed={res.completed};"
+                     f"copies={res.realloc_copies}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.0f},{derived}")

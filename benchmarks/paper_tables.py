@@ -1,0 +1,54 @@
+"""Benchmark: the paper's Tables 1-5 at full scale (1M items each).
+
+For every operating point: regenerate the workload, measure old-config
+waste, run (a) the exact DP optimizer, (b) the paper-faithful hill
+climb, (c) batched parallel hill climb, and report bytes + % recovered
+against the paper's reported numbers.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import (PAPER_WORKLOADS, SlabPolicy, default_waste_fraction,
+                        size_histogram, waste_exact)
+from repro.memcached import paper_traffic
+
+N_ITEMS = 1_000_000
+
+
+def run(n_items: int = N_ITEMS, methods=("dp", "hillclimb", "parallel")
+        ) -> List[Tuple[str, float, str]]:
+    rows = []
+    for wl in PAPER_WORKLOADS:
+        sizes = paper_traffic(wl, n_items=n_items, seed=0)
+        support, freqs = size_histogram(sizes)
+        old = np.asarray(wl.old_chunks)
+        w_old = waste_exact(old, support, freqs)
+        frac = default_waste_fraction(old, support, freqs)
+        rows.append((f"table{wl.table}_old_waste_bytes", 0.0,
+                     f"{w_old};paper={wl.old_waste};"
+                     f"waste_frac={frac:.3f}"))
+        for method in methods:
+            policy = SlabPolicy(seed=wl.table)
+            kwargs = {}
+            if method == "hillclimb":
+                kwargs = dict(patience=1000, max_steps=150_000)
+            t0 = time.perf_counter()
+            sched = policy.fit(support, freqs, k=len(old), baseline=old,
+                               method=method, **kwargs)
+            dt = (time.perf_counter() - t0) * 1e6
+            rows.append((
+                f"table{wl.table}_{method}", dt,
+                f"waste={sched.waste};recovered={sched.recovered_frac:.4f};"
+                f"paper_recovered={wl.recovered_frac:.4f};"
+                f"chunks={list(sched.chunk_sizes)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,223 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Reads the dry-run artifacts (reports/dryrun/*/<arch>__<shape>.json) and
+derives, per cell:
+
+  compute term    = dot_FLOPs_per_device / peak_FLOPs          [s]
+  memory term     = HBM_traffic_per_device / HBM_bw            [s]
+  collective term = collective_bytes_per_device / link_bw      [s]
+
+Sources & method (documented because each needs care):
+  * dot FLOPs and collective bytes come from the trip-count-aware HLO
+    walker (benchmarks/hlo_analysis.py) over the compiled, SPMD-
+    partitioned module — these are exact per-device counts including
+    scan bodies (XLA's own cost_analysis counts loop bodies once; we
+    record it alongside for reference but never use it raw).
+  * collective bytes use each op's result shape: exact for all-reduce /
+    collective-permute; for all-gather it counts the gathered result
+    (≈ ring traffic per device), for reduce-scatter the scattered
+    result x1 (lower bound). A single-number wire proxy, consistent
+    across cells.
+  * HBM traffic is ANALYTIC (XLA reports no loop-aware bytes): per
+    microbatch the weights are read fwd+bwd and the gradient written
+    (3x params), optimizer update reads+writes moments and params (5x),
+    decode/prefill read weights once and stream the KV cache once, plus
+    activation traffic ~ 4 bytes x tokens x d_model x layers x 6.
+    The formulas are in `hbm_traffic()` below.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+
+MODEL_FLOPS = 6·N·D for training (N = params, active for MoE), 2·N·D
+for prefill, 2·N_active·B for decode. The ratio MODEL_FLOPS / HLO_FLOPs
+exposes remat/replication waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+SHAPE_TOKENS = {
+    "train_4k": (256, 4096),
+    "prefill_32k": (32, 32768),
+    "decode_32k": (128, 1),
+    "long_500k": (1, 1),
+}
+
+
+def _cfg(arch: str):
+    from repro.models import get_config
+    return get_config(arch)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = _cfg(arch)
+    n_total = cfg.param_count()
+    n_active = cfg.active_param_count()
+    b, s = SHAPE_TOKENS[shape]
+    if shape == "train_4k":
+        return 6.0 * n_active * b * s
+    if shape == "prefill_32k":
+        return 2.0 * n_active * b * s
+    return 2.0 * n_active * b  # decode: one token per sequence
+
+
+def _params_per_device(cfg, n_dev: int) -> float:
+    """bf16 parameter bytes resident per device under the rule set:
+    everything shards over the model axis (16); MoE expert tensors also
+    shard over the data axis (EP) when divisible."""
+    model_ways = 16
+    total = cfg.param_count() * 2.0
+    if cfg.n_experts and cfg.n_experts % (n_dev // 256 * 16) == 0:
+        glu = 3
+        expert = (cfg.n_experts * glu * cfg.d_model * cfg.d_ff
+                  * cfg.n_layers * 2.0)
+        rest = total - expert
+        return expert / n_dev + rest / model_ways
+    return total / model_ways
+
+
+def hbm_traffic(arch: str, shape: str, rec: Dict, n_dev: int) -> float:
+    """Analytic per-device HBM bytes per step (see module docstring)."""
+    cfg = _cfg(arch)
+    params_dev = _params_per_device(cfg, n_dev)
+    b, s = SHAPE_TOKENS[shape]
+    d = cfg.d_model
+    layers = cfg.n_layers + cfg.encoder_layers
+    if shape == "train_4k":
+        m = rec.get("microbatches", 16)
+        # per microbatch: params read fwd + read bwd + grad accum r/w
+        weight_traffic = m * 4 * params_dev
+        # optimizer pass: read mu, nu, params; write mu, nu, params
+        moment_bytes = 2 * params_dev  # f32 moments (2x bf16), x2 tensors
+        opt_traffic = 2 * moment_bytes * 2 + 2 * params_dev
+        # activations: ~6 r/w of (tokens x d_model) per layer (bf16)
+        act = 6 * (b * s * d * 2 / n_dev) * layers
+        return weight_traffic + opt_traffic + act
+    if shape == "prefill_32k":
+        act = 4 * (b * s * d * 2 / n_dev) * layers
+        return params_dev + act
+    # decode: stream weights once + stream the KV/state cache once
+    cache_bytes = _decode_cache_bytes(
+        cfg, b, 32768 if shape == "decode_32k" else 524288) / n_dev
+    return params_dev + cache_bytes
+
+
+def _decode_cache_bytes(cfg, b: int, s: int) -> float:
+    if cfg.family == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        per = (cfg.d_model // cfg.n_heads) * d_in * 4  # C matrix f32
+        return cfg.n_layers * b * per
+    slots = s
+    pattern = cfg.block_pattern
+    if pattern and all(k == "attn_local" for k in pattern):
+        slots = min(s, cfg.sliding_window)
+    n_attn = (cfg.n_layers if cfg.family != "hybrid"
+              else cfg.n_layers // 3)
+    kv = 2 * n_attn * b * slots * cfg.n_kv_heads * cfg.head_dim * 2
+    if cfg.family == "hybrid":
+        d_in = cfg.ssm_expand * cfg.d_model
+        kv += (2 * cfg.n_layers // 3) * b * d_in * cfg.ssm_state * 4
+    return kv
+
+
+def roofline_row(rec: Dict) -> Dict:
+    arch, shape = rec["arch"], rec["shape"]
+    n_dev = rec["n_devices"]
+    walk = rec["hlo_walk_per_device"]
+    compute_s = walk["dot_flops"] / PEAK_FLOPS
+    coll_s = walk["collective_bytes"] / LINK_BW
+    mem_bytes = hbm_traffic(arch, shape, rec, n_dev)
+    memory_s = mem_bytes / HBM_BW
+    mf = model_flops(arch, shape)
+    useful_ratio = mf / max(walk["dot_flops"] * n_dev, 1.0)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # roofline fraction: useful-model-time / bound-time
+    model_time = mf / n_dev / PEAK_FLOPS
+    frac = model_time / bound if bound > 0 else 0.0
+    return {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": walk["dot_flops"] * n_dev,
+        "useful_ratio": useful_ratio, "roofline_frac": frac,
+        "mem_gib_dev": (rec["memory_per_device"].get(
+            "argument_size_in_bytes", 0)
+            + rec["memory_per_device"].get("temp_size_in_bytes", 0)
+            - rec["memory_per_device"].get("alias_size_in_bytes", 0))
+        / 2**30,
+        "coll_by_kind": walk["coll_by_kind"],
+    }
+
+
+_SUGGEST = {
+    "compute": ("useful_ratio low -> recompute/replication waste: relax "
+                "remat policy or fix head/TP divisibility"),
+    "memory": ("stream less state: shard cache further, rolling windows "
+               "for local layers, bf16 moments, fewer microbatches"),
+    "collective": ("resharding churn: align layer in/out shardings, "
+                   "replicate small-head activations instead of "
+                   "gathering, move reduce out of scan body"),
+}
+
+
+def suggestion(row: Dict) -> str:
+    if row["dominant"] == "compute" and row["useful_ratio"] > 0.5:
+        return "near-roofline compute bound: increase arithmetic intensity"
+    return _SUGGEST[row["dominant"]]
+
+
+def build_table(report_dir: str = "reports/dryrun/single") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        rows.append(roofline_row(rec))
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bound | MODEL_TF | useful | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['model_flops']/1e12:.1f} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} |\n")
+    return "".join(out)
+
+
+def main() -> None:
+    report_dir = sys.argv[1] if len(sys.argv) > 1 else \
+        "reports/dryrun/single"
+    rows = build_table(report_dir)
+    if not rows:
+        print(f"no dry-run artifacts under {report_dir}")
+        return
+    print(to_markdown(rows))
+    os.makedirs("reports", exist_ok=True)
+    with open("reports/roofline.md", "w") as f:
+        f.write(to_markdown(rows))
+        f.write("\nPer-cell bottleneck notes:\n")
+        for r in rows:
+            f.write(f"- {r['arch']}:{r['shape']} -> {r['dominant']}-bound; "
+                    f"{suggestion(r)}\n")
+    with open("reports/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"{len(rows)} cells -> reports/roofline.md")
+
+
+if __name__ == "__main__":
+    main()

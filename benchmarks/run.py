@@ -1,0 +1,56 @@
+"""Benchmark driver: one suite per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (and trailing roofline rows
+when dry-run artifacts exist). Scale knobs keep the full run a few
+minutes on one CPU core; paper_tables uses the paper's full 1e6 items.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bucketing_bench, convergence_bench,
+                            k_sweep, kernel_bench, kv_pool_bench,
+                            paper_tables, sigma_sweep)
+    suites = [
+        ("paper_tables", lambda: paper_tables.run()),
+        ("sigma_sweep", lambda: sigma_sweep.run()),
+        ("k_sweep", lambda: k_sweep.run()),
+        ("convergence", lambda: convergence_bench.run()),
+        ("kv_pool", lambda: kv_pool_bench.run()),
+        ("bucketing", lambda: bucketing_bench.run()),
+        ("kernels", lambda: kernel_bench.run()),
+    ]
+    failures = 0
+    for suite, fn in suites:
+        try:
+            for name, us, derived in fn():
+                print(f"{suite}.{name},{us:.0f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{suite}.ERROR,0,{traceback.format_exc(limit=2)!r}",
+                  flush=True)
+    try:
+        from benchmarks import roofline
+        rows = roofline.build_table()
+    except Exception:  # noqa: BLE001
+        rows = []
+    if rows:
+        for r in rows:
+            print(f"roofline.{r['arch']}__{r['shape']},0,"
+                  f"dominant={r['dominant']};"
+                  f"compute_s={r['compute_s']:.4f};"
+                  f"memory_s={r['memory_s']:.4f};"
+                  f"collective_s={r['collective_s']:.4f};"
+                  f"useful={r['useful_ratio']:.2f}", flush=True)
+    else:
+        print("roofline.SKIP,0,no dry-run artifacts (run "
+              "repro.launch.dryrun first)", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: learn slab classes for an observed traffic pattern.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Generates the paper's Table-1 workload, shows the default Memcached
+classes' waste, learns a schedule three ways (paper's Algorithm 1, the
+batched parallel climb, and the exact DP), and verifies the result in
+the slab-allocator simulator.
+"""
+import numpy as np
+
+from repro.core import (PAPER_WORKLOADS, SlabPolicy, size_histogram,
+                        waste_exact)
+from repro.memcached import compare_schedules, paper_traffic, run_workload
+
+
+def main():
+    wl = PAPER_WORKLOADS[0]  # mu=518B, sigma=10.5B
+    sizes = paper_traffic(wl, n_items=300_000)
+    support, freqs = size_histogram(sizes)
+    old = np.asarray(wl.old_chunks)
+    print(f"workload: lognormal mu={wl.mu}B sigma={wl.sigma}B, "
+          f"{len(sizes):,} items")
+    print(f"old (default) classes: {old.tolist()}")
+    print(f"old waste: {waste_exact(old, support, freqs):,} bytes\n")
+
+    policy = SlabPolicy(seed=0)
+    for method in ("hillclimb", "parallel", "dp"):
+        kwargs = dict(patience=1000, max_steps=120_000) \
+            if method == "hillclimb" else {}
+        sched = policy.fit(support, freqs, k=len(old), baseline=old,
+                           method=method, **kwargs)
+        print(f"{method:10s}: classes={sched.chunk_sizes.tolist()}")
+        print(f"{'':10s}  waste={sched.waste:,} bytes "
+              f"(recovered {sched.recovered_frac:.1%}, "
+              f"utilization {sched.utilization:.1%})")
+
+    # verify the DP schedule in the simulator (allocator ground truth)
+    sched = policy.fit(support, freqs, k=len(old), baseline=old,
+                       method="dp")
+    sim_old = run_workload(old, sizes)
+    sim_new = run_workload(sched.chunk_sizes, sizes)
+    print(f"\nsimulator check: old={sim_old.waste:,}B "
+          f"new={sim_new.waste:,}B "
+          f"(recovered {1 - sim_new.waste / sim_old.waste:.1%})")
+
+
+if __name__ == "__main__":
+    main()

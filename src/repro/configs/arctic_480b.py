@@ -1,0 +1,25 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual MLP.
+
+Snowflake's dense-MoE hybrid: every layer runs a dense FFN in parallel
+with the routed expert branch. [hf:Snowflake/snowflake-arctic-base; hf]
+"""
+from repro.configs.base import ATTN_GLOBAL, ModelConfig, uniform_pattern
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    vocab_size=32_000,
+    block_pattern=uniform_pattern(ATTN_GLOBAL, 35),
+    n_experts=128,
+    experts_per_token=2,
+    moe_dense_residual=True,
+    activation="silu",
+    tie_embeddings=False,
+    source="hf:Snowflake/snowflake-arctic-base",
+)

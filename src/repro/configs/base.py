@@ -1,0 +1,206 @@
+"""Config system: one dataclass drives model build, sharding, and launch.
+
+Every assigned architecture is a ``ModelConfig`` instance in its own file
+(``repro/configs/<arch>.py``), selectable by ``--arch <id>`` in the
+launchers. ``reduced()`` derives the family-preserving small config used
+by per-arch smoke tests (full configs are exercised only via the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# Layer-kind tags used in ModelConfig.block_pattern
+ATTN_GLOBAL = "attn_global"
+ATTN_LOCAL = "attn_local"     # sliding-window attention
+MAMBA2 = "mamba2"
+MLSTM = "mlstm"
+SLSTM = "slstm"
+SHARED_ATTN = "shared_attn"   # zamba2: one weight set, applied at each tag
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention structure ---
+    block_pattern: Tuple[str, ...] = ()   # len == n_layers (decoder stack)
+    sliding_window: int = 1024            # used by ATTN_LOCAL layers
+    rope_theta: float = 10_000.0
+    rope_theta_global: Optional[float] = None  # gemma3: 1e6 on global layers
+    qk_norm: bool = False                 # gemma3
+    post_block_norms: bool = False        # gemma3 post-attn/post-mlp norms
+    attn_logit_softcap: float = 0.0       # gemma2-style (0 = off)
+
+    # --- ffn ---
+    activation: str = "silu"              # silu (SwiGLU) | gelu (GeGLU)
+
+    # --- moe ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    moe_dense_residual: bool = False      # arctic: dense MLP in parallel
+    router_aux_loss: float = 0.01
+    moe_dispatch_dtype: str = "float32"   # bf16 halves dispatch wire bytes
+    moe_ep_constraints: bool = False      # pin the EP all-to-all boundary
+
+    # --- ssm (mamba2 / xlstm) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_kernel: int = 4
+    ssm_chunk: int = 128
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_is_causal: bool = False
+
+    # --- vlm (llama-3.2-vision) ---
+    cross_attn_layers: Tuple[int, ...] = ()  # decoder layer idxs w/ cross-attn
+    n_image_tokens: int = 0                  # stub patch-embedding count
+
+    # --- embedding / misc ---
+    embed_scale: bool = False             # gemma: x * sqrt(d_model)
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+
+    # --- serving knobs ---
+    cache_write: str = "dus"   # "onehot": SPMD-friendly for sharded seq
+
+    # --- training knobs ---
+    remat: bool = True
+    use_scan: bool = True
+
+    # --- provenance ---
+    source: str = ""
+
+    def __post_init__(self):
+        if self.block_pattern and len(self.block_pattern) != self.n_layers:
+            raise ValueError(
+                f"{self.name}: block_pattern has {len(self.block_pattern)} "
+                f"entries for n_layers={self.n_layers}")
+
+    # ------------------------------------------------------------------
+    @property
+    def attn_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def ssm_heads(self) -> int:
+        return (self.ssm_expand * self.d_model) // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        total = v * d * (1 if self.tie_embeddings else 2)
+        glu = 3 if self.activation in ("silu", "gelu") else 2
+        attn = d * self.attn_dim + 2 * d * self.kv_dim + self.attn_dim * d
+        dense_mlp = glu * d * ff
+        moe_mlp = (self.n_experts * glu * d * ff + d * self.n_experts
+                   + (dense_mlp if self.moe_dense_residual else 0))
+        d_in = self.ssm_expand * d
+        mamba = (d * (2 * d_in + 2 * self.ssm_state + self.ssm_heads)
+                 + d_in * d + self.conv_kernel
+                 * (d_in + 2 * self.ssm_state))
+        pattern = self.block_pattern or (ATTN_GLOBAL,) * self.n_layers
+        shared_attn_counted = False
+        for kind in pattern:
+            if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+                total += attn + (moe_mlp if self.n_experts else dense_mlp)
+            elif kind == SHARED_ATTN:
+                if not shared_attn_counted:
+                    total += attn + dense_mlp
+                    shared_attn_counted = True
+            elif kind == MAMBA2:
+                total += mamba
+            elif kind in (MLSTM, SLSTM):
+                total += 4 * d * d_in + d_in * d  # qkv/gates + out
+        total += self.encoder_layers * (attn + dense_mlp)
+        for _ in self.cross_attn_layers:
+            total += attn + 2 * d * self.kv_dim
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top-k experts only)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        glu = 3 if self.activation in ("silu", "gelu") else 2
+        inactive = ((self.n_experts - self.experts_per_token)
+                    * glu * d * ff * self.n_layers)
+        return self.param_count() - inactive
+
+    def reduced(self) -> "ModelConfig":
+        """Family-preserving tiny config for CPU smoke tests."""
+        factor = max(self.n_layers // 4, 1)
+        n_layers = max(self.n_layers // factor, 2)
+        # families built from fixed-size layer groups need n_layers to be a
+        # multiple of the group size (hybrid: [m,m,attn]; ssm: 7xmLSTM+sLSTM;
+        # vlm: 4 self + 1 cross)
+        group = {"hybrid": 3, "ssm": 8, "vlm": 5}.get(self.family, 1)
+        n_layers = group * max(1, round(n_layers / group))
+        pattern = self.block_pattern
+        if pattern:
+            if group > 1:
+                # preserve the group structure exactly
+                pattern = tuple(pattern[:group]) * (n_layers // group)
+            else:
+                # keep the family structure: subsample the pattern
+                step = len(pattern) / n_layers
+                pattern = tuple(pattern[min(int(i * step), len(pattern) - 1)]
+                                for i in range(n_layers))
+                # ensure at least one of each kind survives
+                for kind in set(self.block_pattern):
+                    if kind not in pattern:
+                        pattern = pattern[:-1] + (kind,)
+        return dataclasses.replace(
+            self,
+            n_layers=n_layers,
+            d_model=128,
+            n_heads=max(min(self.n_heads, 4), 1),
+            n_kv_heads=max(min(self.n_kv_heads, 2), 1),
+            head_dim=32,
+            d_ff=256 if self.d_ff else 0,
+            vocab_size=512,
+            block_pattern=pattern,
+            sliding_window=min(self.sliding_window, 32),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            experts_per_token=(min(self.experts_per_token, 2)
+                               if self.n_experts else 0),
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else self.ssm_head_dim,
+            ssm_chunk=16,
+            encoder_layers=2 if self.encoder_layers else 0,
+            cross_attn_layers=((1,) if self.cross_attn_layers else ()),
+            n_image_tokens=8 if self.n_image_tokens else 0,
+            dtype="float32",
+        )
+
+
+def uniform_pattern(kind: str, n: int) -> Tuple[str, ...]:
+    return (kind,) * n
+
+
+def local_global_pattern(n: int, locals_per_global: int,
+                         ) -> Tuple[str, ...]:
+    """gemma3-style: N local layers then 1 global, repeating."""
+    out = []
+    for i in range(n):
+        if (i + 1) % (locals_per_global + 1) == 0:
+            out.append(ATTN_GLOBAL)
+        else:
+            out.append(ATTN_LOCAL)
+    return tuple(out)

@@ -1,0 +1,21 @@
+"""deepseek-7b [dense] — llama-architecture MHA decoder.
+
+[arXiv:2401.02954; hf]
+"""
+from repro.configs.base import ATTN_GLOBAL, ModelConfig, uniform_pattern
+
+CONFIG = ModelConfig(
+    name="deepseek-7b",
+    family="dense",
+    n_layers=30,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=102_400,
+    block_pattern=uniform_pattern(ATTN_GLOBAL, 30),
+    activation="silu",
+    tie_embeddings=False,
+    source="arXiv:2401.02954",
+)

@@ -1,0 +1,27 @@
+"""gemma3-1b [dense] — 5:1 local:global attention, 128k context.
+
+[hf:google/gemma-3-1b-pt; unverified]
+"""
+from repro.configs.base import ModelConfig, local_global_pattern
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262_144,
+    block_pattern=local_global_pattern(26, 5),
+    sliding_window=512,
+    rope_theta=10_000.0,
+    rope_theta_global=1_000_000.0,
+    qk_norm=True,
+    post_block_norms=True,
+    activation="gelu",
+    embed_scale=True,
+    tie_embeddings=True,
+    source="hf:google/gemma-3-1b-pt",
+)

@@ -1,0 +1,22 @@
+"""gemma-7b [dense] — GeGLU, head_dim=256, full attention.
+
+[arXiv:2403.08295; hf]
+"""
+from repro.configs.base import ATTN_GLOBAL, ModelConfig, uniform_pattern
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256_000,
+    block_pattern=uniform_pattern(ATTN_GLOBAL, 28),
+    activation="gelu",
+    embed_scale=True,
+    tie_embeddings=True,
+    source="arXiv:2403.08295",
+)

@@ -1,0 +1,23 @@
+"""llama-3.2-vision-11b [vlm] — cross-attn image layers every 5th layer.
+
+Vision tower stubbed: input_specs() provides projected patch embeddings
+(B, n_image_tokens, d_model). 40 layers = 8 groups of [4 self-attn,
+1 gated cross-attn]. [hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128_256,
+    n_image_tokens=1601,
+    activation="silu",
+    tie_embeddings=False,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

@@ -1,0 +1,25 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention.
+
+All-SWA means the decode cache is a rolling window buffer, which is what
+makes the long_500k cell tractable. [arXiv:2401.04088; hf]
+"""
+from repro.configs.base import ATTN_LOCAL, ModelConfig, uniform_pattern
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32_000,
+    block_pattern=uniform_pattern(ATTN_LOCAL, 32),
+    sliding_window=4096,
+    n_experts=8,
+    experts_per_token=2,
+    activation="silu",
+    tie_embeddings=False,
+    source="arXiv:2401.04088",
+)

@@ -1,0 +1,8 @@
+"""The paper's own experiment configs: Tables 1-5 log-normal workloads.
+
+Not a neural architecture — the slab-learning operating points, exposed
+here so launchers can treat `--arch paper-lognormal-tN` uniformly.
+"""
+from repro.core.distribution import PAPER_WORKLOADS
+
+WORKLOADS = {f"paper-lognormal-t{w.table}": w for w in PAPER_WORKLOADS}

@@ -1,0 +1,24 @@
+"""whisper-medium [audio] — enc-dec backbone; conv frontend stubbed.
+
+input_specs() provides precomputed frame embeddings (B, frames, d_model)
+per the assignment; positional scheme unified to RoPE (DESIGN.md).
+[arXiv:2212.04356; unverified]
+"""
+from repro.configs.base import ATTN_GLOBAL, ModelConfig, uniform_pattern
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,
+    encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51_865,
+    block_pattern=uniform_pattern(ATTN_GLOBAL, 24),
+    activation="gelu",
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,26 @@
+"""xlstm-350m [ssm] — mLSTM + sLSTM blocks, no separate FFN (d_ff=0).
+
+24 layers as 3 groups of [7 x mLSTM, 1 x sLSTM]; recurrent state is
+O(1)/request, the paper technique's data-path-only case (DESIGN.md §5).
+[arXiv:2405.04517; unverified]
+"""
+from repro.configs.base import MLSTM, SLSTM, ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    block_pattern=((MLSTM,) * 7 + (SLSTM,)) * 3,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=0,
+    vocab_size=50_304,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_chunk=128,
+    activation="gelu",
+    tie_embeddings=True,
+    source="arXiv:2405.04517",
+)

@@ -1,0 +1,30 @@
+"""zamba2-7b [hybrid] — Mamba2 blocks + shared attention block.
+
+81 block applications = 27 groups of [mamba2, mamba2, shared-attn]; the
+attention+MLP block weights are shared across all 27 applications (the
+Zamba2 design), each application keeping its own KV cache. Shared
+attention runs sliding-window at long context (DESIGN.md §6).
+[arXiv:2411.15242; unverified]
+"""
+from repro.configs.base import MAMBA2, SHARED_ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    block_pattern=(MAMBA2, MAMBA2, SHARED_ATTN) * 27,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32_000,
+    sliding_window=4096,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=128,
+    activation="gelu",
+    tie_embeddings=True,
+    source="arXiv:2411.15242",
+)

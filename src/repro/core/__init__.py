@@ -1,0 +1,41 @@
+"""Core: the paper's contribution — learning slab-class schedules.
+
+Public surface:
+    distribution — traffic models + the paper's Tables 1-5 operating points
+    waste        — exact + JAX waste objectives
+    hillclimb    — paper's Algorithm 1 + batched/parallel/multi-restart
+    dp_optimal   — exact global optimum (tests the paper's §6.3 claim)
+    anneal       — simulated-annealing variant
+    slab_policy  — SlabPolicy / SlabSchedule, the composable API
+"""
+from repro.core.distribution import (PAGE_SIZE, PAPER_N_ITEMS,
+                                     PAPER_WORKLOADS, PaperWorkload,
+                                     dense_histogram,
+                                     lognormal_params_from_moments,
+                                     merge_histograms,
+                                     sample_lognormal_sizes,
+                                     sample_multimodal_sizes,
+                                     size_histogram)
+from repro.core.dp_optimal import DPResult, dp_optimal, dp_optimal_bruteforce
+from repro.core.hillclimb import (MIN_CHUNK, SearchResult, multi_restart,
+                                  paper_hillclimb, parallel_hillclimb)
+from repro.core.anneal import anneal
+from repro.core.slab_policy import (SlabPolicy, SlabSchedule,
+                                    covering_default_classes,
+                                    default_memcached_schedule)
+from repro.core.waste import (default_waste_fraction, per_class_waste_exact,
+                              utilization_exact, waste_batch_jax, waste_exact,
+                              waste_jax)
+
+__all__ = [
+    "PAGE_SIZE", "PAPER_N_ITEMS", "PAPER_WORKLOADS", "PaperWorkload",
+    "dense_histogram", "lognormal_params_from_moments", "merge_histograms",
+    "sample_lognormal_sizes", "sample_multimodal_sizes", "size_histogram",
+    "DPResult", "dp_optimal", "dp_optimal_bruteforce",
+    "MIN_CHUNK", "SearchResult", "multi_restart", "paper_hillclimb",
+    "parallel_hillclimb", "anneal",
+    "SlabPolicy", "SlabSchedule", "covering_default_classes",
+    "default_memcached_schedule",
+    "default_waste_fraction", "per_class_waste_exact", "utilization_exact",
+    "waste_batch_jax", "waste_exact", "waste_jax",
+]

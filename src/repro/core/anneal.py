@@ -1,0 +1,77 @@
+"""Simulated-annealing slab-class search (beyond-paper variant).
+
+Same move set as the paper's Algorithm 1 but with geometric step sizes and
+a Metropolis accept rule, so the walk can cross waste barriers between
+modes of a multimodal size distribution — exactly the case where the
+paper's strictly-greedy walk strands classes (tests/test_dp_optimal.py).
+Runs as one jitted ``lax.fori_loop``; tracks best-so-far.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distribution import PAGE_SIZE
+from repro.core.hillclimb import MIN_CHUNK, SearchResult
+from repro.core.waste import waste_exact, waste_jax
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_steps", "page_size", "min_chunk"))
+def _anneal_jax(key, init_chunks, support, freqs, *, n_steps: int,
+                t0: float, t_final: float, page_size: int, min_chunk: int):
+    k = init_chunks.shape[0]
+    alpha = (t_final / t0) ** (1.0 / max(n_steps - 1, 1))
+
+    def waste_of(c):
+        return waste_jax(c, support, freqs, page_size=page_size)
+
+    def body(i, state):
+        key, chunks, cur, best_chunks, best = state
+        key, k_cls, k_mag, k_dir, k_acc = jax.random.split(key, 5)
+        j = jax.random.randint(k_cls, (), 0, k)
+        mag = jnp.int32(2) ** jax.random.randint(k_mag, (), 0, 9)  # 1..256
+        delta = jnp.where(jax.random.bernoulli(k_dir), mag, -mag)
+        cand = jnp.clip(chunks.at[j].add(delta), min_chunk, page_size)
+        new = waste_of(cand)
+        temp = t0 * alpha ** i
+        accept = jnp.logical_or(
+            new <= cur,
+            jax.random.uniform(k_acc) < jnp.exp(-(new - cur) / temp))
+        chunks = jnp.where(accept, cand, chunks)
+        cur = jnp.where(accept, new, cur)
+        better = cur < best
+        best_chunks = jnp.where(better, chunks, best_chunks)
+        best = jnp.where(better, cur, best)
+        return key, chunks, cur, best_chunks, best
+
+    init = init_chunks.astype(jnp.int32)
+    w0 = waste_of(init)
+    state = (key, init, w0, init, w0)
+    _, _, _, best_chunks, _ = jax.lax.fori_loop(0, n_steps, body, state)
+    return best_chunks
+
+
+def anneal(key, init_chunks, support, freqs, *, n_steps: int = 20_000,
+           t0: float | None = None, t_final: float = 1.0,
+           page_size: int = PAGE_SIZE,
+           min_chunk: int = MIN_CHUNK) -> SearchResult:
+    support_j = jnp.asarray(support, dtype=jnp.int32)
+    freqs_j = jnp.asarray(freqs, dtype=jnp.float32)
+    init_waste = waste_exact(init_chunks, support, freqs,
+                             page_size=page_size)
+    if t0 is None:
+        t0 = max(float(init_waste) * 1e-3, 1.0)
+    chunks = _anneal_jax(key, jnp.asarray(init_chunks, dtype=jnp.int32),
+                         support_j, freqs_j, n_steps=n_steps, t0=t0,
+                         t_final=t_final, page_size=page_size,
+                         min_chunk=min_chunk)
+    chunks = np.sort(np.asarray(chunks, dtype=np.int64))
+    return SearchResult(
+        chunks=chunks,
+        waste=waste_exact(chunks, support, freqs, page_size=page_size),
+        init_waste=init_waste, steps=n_steps, method="anneal")

@@ -1,0 +1,108 @@
+"""The waste objective: internal fragmentation of a slab-class schedule.
+
+An item of size ``s`` is stored in the smallest chunk ``c_j >= s``; the
+memory hole is ``c_j - s``. Items larger than the largest chunk cannot be
+stored at all in Memcached; the optimizer must be discouraged from
+uncovering them, so they are charged as if they consumed a full page
+(``page_size - s`` extra bytes) — any covering configuration is strictly
+better, which keeps the top class above the observed maximum, matching
+Memcached's real constraint.
+
+Two implementations:
+
+* ``waste_exact`` — numpy int64, bit-exact; used for all *reported* numbers
+  and by the DP optimizer.
+* ``waste_jax`` / ``waste_batch_jax`` — float32 JAX, jit/vmap-able; used
+  inside search loops. float32 round-off on ~1e8-byte totals is <= a few
+  bytes and deterministic for a fixed summation order; the paper's accept
+  rule already tolerates neutral moves, so this cannot destabilise the
+  search (see DESIGN.md). Final schedules are always re-scored with
+  ``waste_exact``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distribution import PAGE_SIZE
+
+
+def waste_exact(chunks, support, freqs, *, page_size: int = PAGE_SIZE) -> int:
+    """Exact total waste in bytes (numpy int64)."""
+    chunks = np.sort(np.asarray(chunks, dtype=np.int64))
+    support = np.asarray(support, dtype=np.int64)
+    freqs = np.asarray(freqs, dtype=np.int64)
+    idx = np.searchsorted(chunks, support, side="left")
+    storable = idx < chunks.shape[0]
+    assigned = chunks[np.minimum(idx, chunks.shape[0] - 1)]
+    per_size = np.where(storable, assigned - support, page_size - support)
+    return int(np.sum(per_size * freqs))
+
+
+def utilization_exact(chunks, support, freqs, *,
+                      page_size: int = PAGE_SIZE) -> float:
+    """Fraction of allocated chunk bytes that hold item bytes."""
+    chunks = np.sort(np.asarray(chunks, dtype=np.int64))
+    support = np.asarray(support, dtype=np.int64)
+    freqs = np.asarray(freqs, dtype=np.int64)
+    idx = np.searchsorted(chunks, support, side="left")
+    storable = idx < chunks.shape[0]
+    assigned = np.where(storable, chunks[np.minimum(idx, len(chunks) - 1)],
+                        page_size)
+    alloc = int(np.sum(assigned * freqs))
+    used = int(np.sum(np.where(storable, support, 0) * freqs))
+    return used / max(alloc, 1)
+
+
+def per_class_waste_exact(chunks, support, freqs, *,
+                          page_size: int = PAGE_SIZE) -> np.ndarray:
+    """Waste attributed to each class (sorted order); index K = unstorable."""
+    chunks = np.sort(np.asarray(chunks, dtype=np.int64))
+    support = np.asarray(support, dtype=np.int64)
+    freqs = np.asarray(freqs, dtype=np.int64)
+    idx = np.searchsorted(chunks, support, side="left")
+    storable = idx < chunks.shape[0]
+    assigned = chunks[np.minimum(idx, len(chunks) - 1)]
+    per_size = np.where(storable, assigned - support, page_size - support)
+    out = np.zeros(len(chunks) + 1, dtype=np.int64)
+    np.add.at(out, np.where(storable, idx, len(chunks)), per_size * freqs)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def waste_jax(chunks, support, freqs, *, page_size: int = PAGE_SIZE):
+    """Differentiable-shape JAX waste; float32 total. chunks may be unsorted."""
+    chunks = jnp.sort(chunks.astype(jnp.int32))
+    support = support.astype(jnp.int32)
+    k = chunks.shape[0]
+    idx = jnp.searchsorted(chunks, support, side="left")
+    storable = idx < k
+    assigned = chunks[jnp.minimum(idx, k - 1)]
+    per_size = jnp.where(storable, assigned - support,
+                         jnp.int32(page_size) - support)
+    return jnp.sum(per_size.astype(jnp.float32) * freqs.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def waste_batch_jax(chunk_batch, support, freqs, *,
+                    page_size: int = PAGE_SIZE):
+    """(B, K) candidate schedules -> (B,) waste. Vectorized search kernel.
+
+    This is the search hot spot; ``repro.kernels.waste_eval`` provides a
+    Pallas TPU kernel with identical semantics (this function doubles as
+    its oracle via repro/kernels/ref.py).
+    """
+    fn = lambda c: waste_jax(c, support, freqs, page_size=page_size)
+    return jax.vmap(fn)(chunk_batch)
+
+
+def default_waste_fraction(chunks, support, freqs, *,
+                           page_size: int = PAGE_SIZE) -> float:
+    """Waste as a fraction of total item bytes (the paper's ~10% headline)."""
+    total_item_bytes = int(np.sum(np.asarray(support, dtype=np.int64)
+                                  * np.asarray(freqs, dtype=np.int64)))
+    return waste_exact(chunks, support, freqs, page_size=page_size) / max(
+        total_item_bytes, 1)

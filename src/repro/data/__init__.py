@@ -1,0 +1,9 @@
+"""Data pipeline: synthetic corpus, learned length buckets, prefetch."""
+from repro.data.bucketing import (BucketScheme, batch_by_bucket, fit_buckets,
+                                  padding_waste, pow2_buckets)
+from repro.data.pipeline import (DataConfig, Prefetcher, SyntheticCorpus,
+                                 fit_corpus_buckets, make_batches)
+
+__all__ = ["BucketScheme", "batch_by_bucket", "fit_buckets",
+           "padding_waste", "pow2_buckets", "DataConfig", "Prefetcher",
+           "SyntheticCorpus", "fit_corpus_buckets", "make_batches"]

@@ -1,0 +1,116 @@
+"""Synthetic data pipeline: variable-length LM batches with prefetch.
+
+Produces next-token-prediction batches from a synthetic corpus whose
+sample lengths follow a configurable log-normal (matching the paper's
+traffic shape — and realistic SFT mixtures). Batches are padded either
+to fixed max length (baseline) or to learned buckets (bucketing.py);
+the trainer sees {"tokens": (B, S+1)} with pad tokens masked as label -1
+replaced by 0 + loss weighting left to z-loss-free CE on real tokens.
+
+A double-buffered background thread keeps one batch ahead of the step
+(host-side prefetch; on a real pod this also overlaps H2D).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.core.distribution import lognormal_params_from_moments
+from repro.data.bucketing import BucketScheme, fit_buckets
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    batch_size: int = 8
+    max_len: int = 512
+    length_mean: float = 300.0
+    length_std: float = 140.0
+    seed: int = 0
+    learned_buckets: int = 0     # 0 = pad to max_len; K > 0 = fit K buckets
+    zipf_alpha: float = 1.2      # token-id distribution
+
+
+class SyntheticCorpus:
+    """Deterministic synthetic corpus with log-normal sample lengths."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._rng = np.random.default_rng(cfg.seed)
+        mu, sig = lognormal_params_from_moments(cfg.length_mean,
+                                                cfg.length_std)
+        self._mu, self._sig = mu, sig
+        # zipf-ish unigram distribution over the vocab
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = ranks ** -cfg.zipf_alpha
+        self._p = p / p.sum()
+
+    def sample_lengths(self, n: int) -> np.ndarray:
+        raw = self._rng.lognormal(self._mu, self._sig, size=n)
+        return np.clip(raw, 8, self.cfg.max_len).astype(np.int64)
+
+    def sample(self, length: int) -> np.ndarray:
+        return self._rng.choice(self.cfg.vocab_size, size=length,
+                                p=self._p).astype(np.int32)
+
+
+def make_batches(cfg: DataConfig,
+                 scheme: Optional[BucketScheme] = None
+                 ) -> Iterator[Dict[str, np.ndarray]]:
+    """Yields {"tokens": (B, S+1)} padded batches forever."""
+    corpus = SyntheticCorpus(cfg)
+    while True:
+        lengths = corpus.sample_lengths(cfg.batch_size)
+        if scheme is not None:
+            pad_to = int(scheme.padded_length(lengths).max())
+        else:
+            pad_to = cfg.max_len
+        batch = np.zeros((cfg.batch_size, pad_to + 1), dtype=np.int32)
+        for i, ln in enumerate(lengths):
+            batch[i, :ln] = corpus.sample(int(ln))
+        yield {"tokens": batch, "lengths": lengths}
+
+
+def fit_corpus_buckets(cfg: DataConfig, k: int, *,
+                       n_probe: int = 50_000) -> BucketScheme:
+    """Learn bucket boundaries from a probe of the corpus length
+    distribution (the paper's 'observe then re-configure' loop)."""
+    corpus = SyntheticCorpus(
+        dataclasses.replace(cfg, seed=cfg.seed + 104729))
+    lengths = corpus.sample_lengths(n_probe)
+    return fit_buckets(lengths, k, max_len=cfg.max_len)
+
+
+class Prefetcher:
+    """One-batch-ahead background prefetch with clean shutdown."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            for item in it:
+                if self._stop.is_set():
+                    return
+                self._q.put(item)
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,41 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else they fall back to
+``interpret=True`` (the kernel body executed step-by-step on CPU), which
+is how this repo validates them. Callers can force either mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distribution import PAGE_SIZE
+from repro.kernels.slab_attention import slab_decode_attention_pallas
+from repro.kernels.waste_eval import waste_eval_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def waste_eval(chunk_batch, support, freqs, *, page_size: int = PAGE_SIZE,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """(B, K) candidate schedules -> (B,) waste, via the Pallas kernel."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return waste_eval_pallas(jnp.asarray(chunk_batch),
+                             jnp.asarray(support), jnp.asarray(freqs),
+                             page_size=page_size, interpret=interpret)
+
+
+def slab_decode_attention(q, k_pool, v_pool, starts, lens, *,
+                          max_chunk_tokens: int, block_t: int = 128,
+                          sm_scale: float | None = None,
+                          interpret: bool | None = None) -> jnp.ndarray:
+    """Flash-decoding over a contiguous slab KV pool (see slab_attention)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return slab_decode_attention_pallas(
+        q, k_pool, v_pool, jnp.asarray(starts), jnp.asarray(lens),
+        max_chunk_tokens=max_chunk_tokens, block_t=block_t,
+        sm_scale=sm_scale, interpret=interpret)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contracts)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.distribution import PAGE_SIZE
+
+
+def waste_eval_ref(chunk_batch, support, freqs, *,
+                   page_size: int = PAGE_SIZE) -> jnp.ndarray:
+    """(B, K) schedules x (S,) histogram -> (B,) float32 waste.
+
+    Independent restatement of repro.core.waste semantics: each size goes
+    to its smallest covering chunk; uncovered sizes are charged a full
+    page. Rows of ``chunk_batch`` need not be sorted.
+    """
+    chunks = jnp.sort(chunk_batch.astype(jnp.float32), axis=1)  # (B, K)
+    s = support.astype(jnp.float32)[None, None, :]              # (1,1,S)
+    c = chunks[:, :, None]                                      # (B,K,1)
+    covered = c >= s
+    assigned = jnp.min(jnp.where(covered, c, jnp.inf), axis=1)  # (B,S)
+    w = jnp.where(jnp.isfinite(assigned), assigned - s[0],
+                  jnp.float32(page_size) - s[0])
+    return jnp.sum(w * freqs.astype(jnp.float32)[None, :], axis=1)
+
+
+def slab_decode_attention_ref(q, k_pool, v_pool, starts, lens, *,
+                              sm_scale: float | None = None) -> jnp.ndarray:
+    """Decode attention over a contiguous slab KV pool — oracle.
+
+    q:       (B, Hq, D)   one new token per sequence
+    k_pool:  (T, Hkv, D)  contiguous token pool (all sequences interleaved)
+    v_pool:  (T, Hkv, D)
+    starts:  (B,) int32   first pool token of each sequence's slab chunk
+    lens:    (B,) int32   real KV length of each sequence
+    returns: (B, Hq, D)
+
+    GQA: Hq must be a multiple of Hkv; query head h attends with kv head
+    h // (Hq // Hkv).
+    """
+    b, hq, d = q.shape
+    t, hkv, _ = k_pool.shape
+    g = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    pos = jnp.arange(t, dtype=jnp.int32)[None, :]               # (1, T)
+    valid = (pos >= starts[:, None]) & (pos < starts[:, None]
+                                        + lens[:, None])        # (B, T)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    kf = k_pool.astype(jnp.float32)
+    vf = v_pool.astype(jnp.float32)
+    # scores: (B, Hkv, G, T)
+    scores = jnp.einsum("bhgd,thd->bhgt", qf, kf) * sm_scale
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = _softmax(scores)
+    out = jnp.einsum("bhgt,thd->bhgd", p, vf)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    # guard fully-masked rows (empty sequences): max = -inf -> output 0
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(x - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.where(denom > 0, e / jnp.maximum(denom, 1e-30), 0.0)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: batched slab-schedule waste evaluation.
+
+The search hot spot of the paper's technique: score B candidate schedules
+(each K chunk sizes) against an S-bucket item-size histogram. The paper
+evaluates one candidate per step on a CPU; here the whole move frontier of
+`parallel_hillclimb` (B = K x |deltas| candidates) is one kernel launch.
+
+TPU mapping: this is a compare/select/accumulate workload for the VPU —
+no MXU. We tile (B, S) into (BLOCK_B, BLOCK_S) VMEM blocks; each grid step
+holds a (BLOCK_B, K) slice of candidates and a (1, BLOCK_S) histogram
+slice, computes the covering chunk per (candidate, size) via a static
+K-step running minimum (avoids a (BLOCK_B, K, BLOCK_S) intermediate), and
+accumulates partial waste into the (BLOCK_B, 1) output block across the
+inner S grid dimension (TPU grids execute sequentially, so `+=` into the
+revisited output block is the standard reduction idiom).
+
+VMEM budget at defaults (BLOCK_B=8, BLOCK_S=512, K<=64):
+  candidates 8*64*4 = 2 KiB, histogram 2*512*4 = 4 KiB,
+  per-step temporaries 3 * 8*512*4 = 48 KiB  -> comfortably < 1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.distribution import PAGE_SIZE
+
+BLOCK_B = 8
+BLOCK_S = 512
+
+
+def _waste_eval_kernel(chunks_ref, support_ref, freqs_ref, out_ref, *,
+                       page_size: int):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    c = chunks_ref[...].astype(jnp.float32)        # (BLOCK_B, K) sorted rows
+    s = support_ref[0, :].astype(jnp.float32)      # (BLOCK_S,)
+    f = freqs_ref[0, :]                            # (BLOCK_S,)
+
+    k = c.shape[1]
+    assigned = jnp.full((c.shape[0], s.shape[0]), jnp.inf, dtype=jnp.float32)
+    for kk in range(k):  # static unroll: running min of covering chunks
+        ck = c[:, kk:kk + 1]                       # (BLOCK_B, 1)
+        assigned = jnp.minimum(assigned,
+                               jnp.where(ck >= s[None, :], ck, jnp.inf))
+    waste = jnp.where(jnp.isfinite(assigned), assigned - s[None, :],
+                      jnp.float32(page_size) - s[None, :])
+    out_ref[...] += jnp.sum(waste * f[None, :], axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page_size", "interpret"))
+def waste_eval_pallas(chunk_batch, support, freqs, *,
+                      page_size: int = PAGE_SIZE,
+                      interpret: bool = False) -> jnp.ndarray:
+    """(B, K) int32 schedules x (S,) histogram -> (B,) float32 waste.
+
+    Pads B to BLOCK_B and S to BLOCK_S (padding sizes get freq 0 and size 0,
+    which any chunk covers at zero cost). Rows are sorted here so the kernel
+    can use the running-min trick.
+    """
+    b, k = chunk_batch.shape
+    s = support.shape[0]
+    chunk_batch = jnp.sort(chunk_batch.astype(jnp.int32), axis=1)
+    support = support.astype(jnp.int32)
+    freqs = freqs.astype(jnp.float32)
+
+    b_pad = (-b) % BLOCK_B
+    s_pad = (-s) % BLOCK_S
+    if b_pad:
+        chunk_batch = jnp.pad(chunk_batch, ((0, b_pad), (0, 0)),
+                              constant_values=1)
+    if s_pad:
+        support = jnp.pad(support, (0, s_pad), constant_values=0)
+        freqs = jnp.pad(freqs, (0, s_pad), constant_values=0.0)
+    bp, sp = b + b_pad, s + s_pad
+
+    grid = (bp // BLOCK_B, sp // BLOCK_S)
+    out = pl.pallas_call(
+        functools.partial(_waste_eval_kernel, page_size=page_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, BLOCK_S), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BLOCK_S), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        interpret=interpret,
+    )(chunk_batch, support[None, :], freqs[None, :])
+    return out[:b, 0]

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell, on the single-pod 16x16 and
+multi-pod 2x16x16 meshes:
+
+    jax.jit(step, in_shardings=..., donate...).lower(**ShapeDtypeStructs)
+        .compile()
+
+then record memory_analysis(), cost_analysis(), and the trip-count-aware
+HLO walk (dot FLOPs + collective bytes per device) into
+reports/dryrun/<mesh>/<arch>__<shape>.json. No arrays are ever allocated:
+params/caches come from jax.eval_shape, inputs from launch/specs.py.
+
+The XLA_FLAGS line above MUST run before any jax import — jax locks the
+device count on first init. This module is the only place that forces
+512 host devices; tests and benches see the real device count.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single \
+        --cells gemma3-1b:train_4k,arctic-480b:decode_32k
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def _get_cfg(arch, overrides):
+    import dataclasses
+
+    from repro.models import get_config
+    cfg = get_config(arch)
+    for k, v in (overrides.get("config") or {}).items():
+        cfg = dataclasses.replace(cfg, **{k: v})
+    return cfg
+
+
+def _build_train_cell(arch, mesh, multi_pod, overrides):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch import specs as S
+    from repro.models import build_model, get_config
+    from repro.sharding import param_spec, to_shardings, zero_spec
+    from repro.training import (AdamWConfig, TrainConfig, init_train_state,
+                                make_train_step)
+    from repro.training.train_step import TrainState
+    from repro.training.optimizer import OptState
+
+    cfg = _get_cfg(arch, overrides)
+    model = build_model(cfg)
+    info = S.SHAPES["train_4k"]
+    total_data = (2 * 16) if multi_pod else 16
+    micro = overrides.get("microbatches") or min(
+        S.TRAIN_MICROBATCHES, info["batch"] // total_data)
+    big = cfg.param_count() > 1e11
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(
+            moment_dtype="bfloat16" if big else "float32"),
+        microbatches=max(micro, 1),
+        accum_dtype=overrides.get("accum_dtype", "float32"))
+    step = make_train_step(model, tcfg)
+
+    params_sh = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    state_sh = jax.eval_shape(lambda p: init_train_state(p, tcfg),
+                              params_sh)
+    batch_specs = S.input_specs(arch, "train_4k")
+
+    zero_axis = ("pod", "data") if multi_pod else "data"
+    tp_attn = overrides.get("tp_attention", True)
+    p_spec = param_spec(params_sh, mesh, tp_attention=tp_attn)
+    state_spec = TrainState(
+        params=p_spec,
+        opt=OptState(step=P(), mu=zero_spec(params_sh, mesh,
+                                            axis=zero_axis),
+                     nu=zero_spec(params_sh, mesh, axis=zero_axis)),
+        residuals=None)
+    state_shardings = to_shardings(state_spec, mesh)
+    batch_axes = ("pod", "data") if multi_pod else "data"
+    batch_shardings = {
+        k: NamedSharding(mesh, P(batch_axes, *([None] * (v.ndim - 1))))
+        for k, v in batch_specs.items()}
+    fn = jax.jit(step, in_shardings=(state_shardings, batch_shardings),
+                 donate_argnums=(0,))
+    return fn, (state_sh, batch_specs), dict(microbatches=tcfg.microbatches)
+
+
+def _build_prefill_cell(arch, mesh, multi_pod, overrides):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch import specs as S
+    from repro.models import build_model, get_config
+    from repro.sharding import param_spec, to_shardings
+
+    cfg = _get_cfg(arch, overrides)
+    model = build_model(cfg)
+    seq = S.SHAPES["prefill_32k"]["seq"]
+    params_sh = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    inputs = S.input_specs(arch, "prefill_32k")
+    tokens = inputs.pop("tokens")
+    extras = inputs or None
+
+    def step(params, tokens, extras):
+        return model.prefill(params, tokens, extras, seq)
+
+    batch_axes = ("pod", "data") if multi_pod else "data"
+    p_shard = to_shardings(param_spec(
+        params_sh, mesh,
+        tp_attention=overrides.get("tp_attention", True)), mesh)
+    tok_shard = NamedSharding(mesh, P(batch_axes, None))
+    ex_shard = (jax.tree.map(
+        lambda v: NamedSharding(mesh, P(batch_axes,
+                                        *([None] * (v.ndim - 1)))),
+        extras) if extras else None)
+    fn = jax.jit(step, in_shardings=(p_shard, tok_shard, ex_shard))
+    return fn, (params_sh, tokens, extras), {}
+
+
+def _build_decode_cell(arch, shape, mesh, multi_pod, overrides):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch import specs as S
+    from repro.models import build_model, get_config
+    from repro.sharding import cache_spec, param_spec, to_shardings
+
+    cfg = _get_cfg(arch, overrides)
+    model = build_model(cfg)
+    params_sh = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    inputs = S.input_specs(arch, shape)
+    seq_parallel = shape == "long_500k"
+
+    def step(params, token, cache, cache_len):
+        return model.decode(params, token, cache, cache_len, None)
+
+    batch_axes = ("pod", "data") if multi_pod else "data"
+    b = inputs["token"].shape[0]
+    total_data = (2 * 16) if multi_pod else 16
+    tok_spec = P(batch_axes, None) if b % total_data == 0 else P(None, None)
+    p_shard = to_shardings(param_spec(
+        params_sh, mesh,
+        tp_attention=overrides.get("tp_attention", True)), mesh)
+    cache_shard = to_shardings(
+        cache_spec(inputs["cache"], mesh, seq_parallel=seq_parallel,
+                   seq_axis=overrides.get("cache_seq_axis"),
+                   head_dim_axis=overrides.get("cache_head_dim_axis")),
+        mesh)
+    fn = jax.jit(step,
+                 in_shardings=(p_shard, NamedSharding(mesh, tok_spec),
+                               cache_shard, NamedSharding(mesh, P())),
+                 donate_argnums=(2,))
+    args = (params_sh, inputs["token"], inputs["cache"],
+            inputs["cache_len"])
+    return fn, args, dict(seq_parallel=seq_parallel)
+
+
+def run_cell(arch, shape, mesh, multi_pod, overrides=None):
+    overrides = overrides or {}
+    if shape == "train_4k":
+        fn, args, meta = _build_train_cell(arch, mesh, multi_pod, overrides)
+    elif shape == "prefill_32k":
+        fn, args, meta = _build_prefill_cell(arch, mesh, multi_pod,
+                                             overrides)
+    else:
+        fn, args, meta = _build_decode_cell(arch, shape, mesh, multi_pod,
+                                            overrides)
+    if overrides:
+        meta = dict(meta, overrides=overrides)
+
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    mem_d = {k: int(getattr(mem, k)) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes")} if mem else {}
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float)) and k in
+              ("flops", "bytes accessed", "optimal_seconds")}
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                    "..", "..", ".."))
+    from benchmarks import hlo_analysis
+    hlo_txt = compiled.as_text()
+    walk = hlo_analysis.analyze(hlo_txt)
+
+    return {
+        "arch": arch, "shape": shape,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory_per_device": mem_d,
+        "xla_cost_analysis_loop_body_once": cost_d,
+        "hlo_walk_per_device": walk.to_json(),
+        "hlo_bytes": len(hlo_txt),
+        **meta,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default="all",
+                    help="'all' or comma list arch:shape")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--overrides", default="{}",
+                    help="JSON: microbatches, tp_attention, "
+                         "cache_seq_axis, config={...} field overrides")
+    ap.add_argument("--tag", default="",
+                    help="suffix for perf-iteration artifacts")
+    args = ap.parse_args()
+    overrides = json.loads(args.overrides)
+
+    import jax  # device count now locked at 512
+    assert len(jax.devices()) == 512, len(jax.devices())
+
+    from repro.launch import specs as S
+    from repro.launch.mesh import make_production_mesh
+
+    if args.cells == "all":
+        cells = S.cell_list()
+    else:
+        cells = tuple(tuple(c.split(":")) for c in args.cells.split(","))
+
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+
+    n_fail = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "multi" if multi_pod else "single"
+        outdir = os.path.join(args.out, mesh_name)
+        os.makedirs(outdir, exist_ok=True)
+        for arch, shape in cells:
+            tag = f"{mesh_name:6s} {arch}:{shape}"
+            suffix = f"__{args.tag}" if args.tag else ""
+            outfile = os.path.join(outdir,
+                                   f"{arch}__{shape}{suffix}.json")
+            try:
+                with mesh:
+                    rec = run_cell(arch, shape, mesh, multi_pod, overrides)
+                with open(outfile, "w") as f:
+                    json.dump(rec, f, indent=1)
+                m = rec["memory_per_device"]
+                tot = (m.get("argument_size_in_bytes", 0)
+                       + m.get("temp_size_in_bytes", 0)
+                       - m.get("alias_size_in_bytes", 0))
+                print(f"OK   {tag:50s} compile={rec['compile_s']:7.1f}s "
+                      f"mem/dev={tot/2**30:6.2f}GiB "
+                      f"dotTF={rec['hlo_walk_per_device']['dot_flops']/1e12:8.2f} "
+                      f"collGB={rec['hlo_walk_per_device']['collective_bytes']/2**30:7.3f}",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                n_fail += 1
+                with open(outfile + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"FAIL {tag:50s} {type(e).__name__}: {e}",
+                      flush=True)
+    print(f"\ndone; failures: {n_fail}")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Dry-run cell definitions: (arch x input-shape) -> ShapeDtypeStruct trees.
+
+``input_specs(arch, shape)`` returns weak-type-correct, shardable
+stand-ins for every model input — no device allocation anywhere (params
+and caches come from jax.eval_shape over the real init functions).
+
+Shape kinds (assignment):
+  train_4k     seq 4096,   global batch 256  -> train_step
+  prefill_32k  seq 32768,  global batch 32   -> prefill_step
+  decode_32k   KV 32768,   global batch 128  -> serve_step (1 new token)
+  long_500k    KV 524288,  global batch 1    -> serve_step, sub-quadratic
+               archs only (skips documented in DESIGN.md §6)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model, get_config
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# long_500k runs only where attention/state is sub-quadratic in context
+# (rolling SWA buffers, local:global patterns, or recurrent state).
+LONG_CONTEXT_ARCHS = frozenset({
+    "gemma3-1b", "gemma3-4b", "zamba2-7b", "mixtral-8x7b", "xlstm-350m",
+})
+LONG_SKIP_REASON = {
+    "gemma-7b": "pure full attention (28 global layers)",
+    "deepseek-7b": "pure full attention (30 global layers)",
+    "whisper-medium": "enc-dec; decoder context is 448 tokens by design",
+    "arctic-480b": "pure full attention; 4k trained context",
+    "llama-3.2-vision-11b": "pure full attention text stack",
+}
+
+# per-arch microbatch count for train_4k (bounds activation memory);
+# chosen so per-device microbatch == 1 sequence on the 16x16 mesh.
+TRAIN_MICROBATCHES = 16
+
+
+def cell_list(include_skipped: bool = False) -> Tuple[Tuple[str, str], ...]:
+    from repro.models import list_archs
+    cells = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+                if include_skipped:
+                    cells.append((arch, shape + ":SKIP"))
+                continue
+            cells.append((arch, shape))
+    return tuple(cells)
+
+
+def _extras_specs(cfg, batch: int, seq: int) -> Dict[str, Any]:
+    ex: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        # stub frame embeddings: one frame per target token (backbone-only)
+        ex["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                            jnp.bfloat16)
+    if cfg.family == "vlm":
+        ex["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    return ex
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the cell's step-function inputs."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+
+    if kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+        specs.update(_extras_specs(cfg, b, s))
+        return specs
+
+    if kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        specs.update(_extras_specs(cfg, b, s))
+        return specs
+
+    # decode: one new token against a seq-length KV/state cache
+    specs = {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+             "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.family == "encdec":
+        enc_len = 1500  # whisper 30s audio -> 1500 encoder frames
+        cache = jax.eval_shape(
+            lambda: model.init_cache(b, s, enc_len=enc_len))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    specs["cache"] = cache
+    return specs
+
+
+def param_specs(arch: str) -> Any:
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

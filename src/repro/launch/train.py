@@ -1,0 +1,115 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b \
+        --steps 1000 --global-batch 256 --seq 4096 \
+        --ckpt-dir /path/ckpts [--reduced]
+
+On a real TPU slice this builds the production mesh, applies the
+sharding rules (including the §Perf profiles), and runs the fault-
+tolerant loop: resume-from-latest, async checkpoints, straggler
+watchdog, elastic batch rescale. On CPU (tests/demos) pass ``--reduced``
+to run the family-preserving small config on a 1-device mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--global-batch", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--microbatches", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpts")
+    ap.add_argument("--ckpt-every", type=int, default=200)
+    ap.add_argument("--reduced", action="store_true",
+                    help="family-preserving small config (CPU demo)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tp-attention", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 + error-feedback gradient compression")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.data import DataConfig, Prefetcher, make_batches
+    from repro.models import get_model
+    from repro.sharding import param_spec, to_shardings, zero_spec
+    from repro.training import (AdamWConfig, CheckpointManager, StepTimer,
+                                TrainConfig, init_train_state,
+                                make_train_step, rescale_batch)
+    from repro.training.optimizer import OptState
+    from repro.training.train_step import TrainState
+
+    cfg, model = get_model(args.arch, reduced=args.reduced)
+    n_dev = len(jax.devices())
+    if args.reduced or n_dev < 256:
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             devices=jax.devices()[:1])
+        global_batch, seq, micro = 4, min(args.seq, 128), 2
+    else:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        global_batch, seq = args.global_batch, args.seq
+        micro = args.microbatches
+        global_batch = rescale_batch(global_batch, mesh) * (
+            mesh.shape.get("data", 1) * mesh.shape.get("pod", 1))
+
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr, warmup_steps=min(100, args.steps),
+                              total_steps=args.steps),
+        microbatches=micro, compress_grads=args.compress_grads)
+    step_fn = make_train_step(model, tcfg)
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        state = init_train_state(params, tcfg)
+        spec = TrainState(
+            params=param_spec(params, mesh,
+                              tp_attention=bool(args.tp_attention)),
+            opt=OptState(step=P(), mu=zero_spec(params, mesh),
+                         nu=zero_spec(params, mesh)),
+            residuals=(param_spec(params, mesh)
+                       if args.compress_grads else None))
+        state = jax.tree.map(jax.device_put, state,
+                             to_shardings(spec, mesh))
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+        mgr = CheckpointManager(args.ckpt_dir, keep=3)
+        start = 0
+        if mgr.latest_step() is not None:
+            state = mgr.restore(state, shardings=to_shardings(spec, mesh))
+            start = int(jax.device_get(state.opt.step))
+            print(f"resumed at step {start}")
+
+        dcfg = DataConfig(vocab_size=cfg.vocab_size,
+                          batch_size=global_batch, max_len=seq)
+        batches = Prefetcher(make_batches(dcfg))
+        timer = StepTimer()
+        for i, batch in zip(range(start, args.steps), batches):
+            timer.start()
+            state, metrics = step_fn(
+                state, {"tokens": jnp.asarray(batch["tokens"])})
+            if timer.stop(i):
+                print(f"straggler at step {i} "
+                      f"(mean {timer.mean_step_time*1e3:.0f}ms)")
+            if (i + 1) % 10 == 0 or i == start:
+                print(f"step {i+1} loss={float(metrics['loss']):.4f} "
+                      f"lr={float(metrics['lr']):.2e}")
+            if (i + 1) % args.ckpt_every == 0:
+                mgr.save(i + 1, state, blocking=False)
+        mgr.wait()
+        mgr.save(args.steps, state)
+        batches.close()
+        print("done")
+
+
+if __name__ == "__main__":
+    main()

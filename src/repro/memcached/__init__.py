@@ -1,0 +1,12 @@
+"""The paper's testbed: a Memcached-faithful slab-allocator simulator."""
+from repro.memcached.metrics import WasteComparison, compare_schedules
+from repro.memcached.slab_allocator import (SlabAllocator, SlabStats,
+                                            run_workload)
+from repro.memcached.traffic import (all_paper_workloads, paper_histogram,
+                                     paper_traffic)
+
+__all__ = [
+    "WasteComparison", "compare_schedules", "SlabAllocator", "SlabStats",
+    "run_workload", "all_paper_workloads", "paper_histogram",
+    "paper_traffic",
+]

@@ -1,0 +1,170 @@
+"""A Memcached-faithful slab allocator simulator.
+
+Models the storage hierarchy the paper measures:
+  * memory is handed out one 1 MB *page* at a time from a global pool,
+  * each page is assigned to one *slab class* and carved into fixed-size
+    *chunks* (page_size // chunk_size per page; the remainder is page-tail
+    waste, tracked separately),
+  * an item goes to the smallest class whose chunk fits it; if the class
+    has no free chunk and no pages remain, the class's LRU item is evicted
+    (memcached's default per-class LRU), and
+  * items larger than the largest chunk are rejected (SERVER_ERROR).
+
+The paper's measurement — "Memory wasted" — is the internal fragmentation
+of resident items: sum(chunk_size - item_size). That is ``stats().waste``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.distribution import PAGE_SIZE
+
+
+@dataclasses.dataclass
+class SlabStats:
+    n_resident: int
+    n_rejected: int
+    n_evicted: int
+    pages_allocated: int
+    item_bytes: int          # payload bytes of resident items
+    allocated_bytes: int     # chunk bytes of resident items
+    waste: int               # allocated_bytes - item_bytes (the paper's metric)
+    page_tail_waste: int     # per-page remainder not usable as chunks
+    per_class_resident: Dict[int, int]
+    per_class_waste: Dict[int, int]
+
+    @property
+    def waste_fraction(self) -> float:
+        return self.waste / max(self.item_bytes, 1)
+
+
+class _SlabClass:
+    __slots__ = ("chunk_size", "free_chunks", "lru", "pages")
+
+    def __init__(self, chunk_size: int):
+        self.chunk_size = chunk_size
+        self.free_chunks = 0
+        self.pages = 0
+        self.lru: OrderedDict[str, int] = OrderedDict()  # key -> item size
+
+
+class SlabAllocator:
+    """Slab allocator with per-class LRU eviction, memcached semantics."""
+
+    def __init__(self, chunk_sizes: Sequence[int], *,
+                 mem_limit: Optional[int] = None,
+                 page_size: int = PAGE_SIZE,
+                 item_overhead: int = 0):
+        chunk_sizes = sorted(int(c) for c in chunk_sizes)
+        if not chunk_sizes:
+            raise ValueError("need at least one slab class")
+        if chunk_sizes[0] <= 0 or chunk_sizes[-1] > page_size:
+            raise ValueError(f"chunk sizes must be in (0, {page_size}]")
+        self.page_size = page_size
+        self.item_overhead = item_overhead
+        self.chunk_sizes = np.asarray(chunk_sizes, dtype=np.int64)
+        self.classes: List[_SlabClass] = [_SlabClass(c) for c in chunk_sizes]
+        self.mem_limit = mem_limit
+        self.pages_allocated = 0
+        self.n_rejected = 0
+        self.n_evicted = 0
+        self._total_set = 0
+
+    # -- class selection ---------------------------------------------------
+    def class_for(self, total_size: int) -> Optional[int]:
+        idx = int(np.searchsorted(self.chunk_sizes, total_size, side="left"))
+        if idx >= len(self.classes):
+            return None
+        return idx
+
+    # -- memory management -------------------------------------------------
+    def _grab_page(self, cls: _SlabClass) -> bool:
+        if (self.mem_limit is not None
+                and (self.pages_allocated + 1) * self.page_size
+                > self.mem_limit):
+            return False
+        self.pages_allocated += 1
+        cls.pages += 1
+        cls.free_chunks += self.page_size // cls.chunk_size
+        return True
+
+    def set(self, key: str, value_size: int) -> bool:
+        """Store an item; returns False when rejected (too large)."""
+        total = value_size + self.item_overhead
+        self._total_set += 1
+        idx = self.class_for(total)
+        if idx is None:
+            self.n_rejected += 1
+            return False
+        cls = self.classes[idx]
+        if key in cls.lru:                      # overwrite in place
+            cls.lru.move_to_end(key)
+            cls.lru[key] = total
+            return True
+        if cls.free_chunks == 0 and not self._grab_page(cls):
+            if not cls.lru:                     # nothing to evict
+                self.n_rejected += 1
+                return False
+            cls.lru.popitem(last=False)         # evict class LRU head
+            self.n_evicted += 1
+            cls.free_chunks += 1
+        cls.free_chunks -= 1
+        cls.lru[key] = total
+        return True
+
+    def get(self, key: str) -> bool:
+        for cls in self.classes:
+            if key in cls.lru:
+                cls.lru.move_to_end(key)
+                return True
+        return False
+
+    def delete(self, key: str) -> bool:
+        for cls in self.classes:
+            if key in cls.lru:
+                del cls.lru[key]
+                cls.free_chunks += 1
+                return True
+        return False
+
+    # -- measurement ---------------------------------------------------------
+    def stats(self) -> SlabStats:
+        item_bytes = 0
+        allocated = 0
+        tail = 0
+        per_resident: Dict[int, int] = {}
+        per_waste: Dict[int, int] = {}
+        n_resident = 0
+        for cls in self.classes:
+            sizes = cls.lru.values()
+            n = len(cls.lru)
+            n_resident += n
+            b = sum(sizes)
+            item_bytes += b
+            allocated += n * cls.chunk_size
+            tail += cls.pages * (self.page_size % cls.chunk_size)
+            per_resident[cls.chunk_size] = n
+            per_waste[cls.chunk_size] = n * cls.chunk_size - b
+        return SlabStats(
+            n_resident=n_resident, n_rejected=self.n_rejected,
+            n_evicted=self.n_evicted, pages_allocated=self.pages_allocated,
+            item_bytes=item_bytes, allocated_bytes=allocated,
+            waste=allocated - item_bytes, page_tail_waste=tail,
+            per_class_resident=per_resident, per_class_waste=per_waste)
+
+
+def run_workload(chunk_sizes: Sequence[int], sizes: np.ndarray, *,
+                 mem_limit: Optional[int] = None,
+                 item_overhead: int = 0,
+                 page_size: int = PAGE_SIZE) -> SlabStats:
+    """Insert ``sizes[i]`` as key ``i`` (unique keys, insert-only — the
+    paper's experiment shape) and return final stats."""
+    alloc = SlabAllocator(chunk_sizes, mem_limit=mem_limit,
+                          page_size=page_size, item_overhead=item_overhead)
+    for i, s in enumerate(np.asarray(sizes).tolist()):
+        alloc.set(str(i), int(s))
+    return alloc.stats()

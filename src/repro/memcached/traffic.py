@@ -1,0 +1,32 @@
+"""Workload generation for the paper's experiments (Tables 1-5)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.distribution import (PAGE_SIZE, PAPER_N_ITEMS,
+                                     PAPER_WORKLOADS, PaperWorkload,
+                                     sample_lognormal_sizes, size_histogram)
+
+
+def paper_traffic(workload: PaperWorkload, *, n_items: int = PAPER_N_ITEMS,
+                  seed: int = 0, log_space_sigma: bool = False
+                  ) -> np.ndarray:
+    """Item sizes for one of the paper's operating points."""
+    rng = np.random.default_rng(seed + workload.table)
+    return sample_lognormal_sizes(
+        rng, n_items, workload.mu, workload.sigma,
+        max_size=PAGE_SIZE, log_space_sigma=log_space_sigma)
+
+
+def paper_histogram(workload: PaperWorkload, *,
+                    n_items: int = PAPER_N_ITEMS, seed: int = 0,
+                    log_space_sigma: bool = False
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    return size_histogram(paper_traffic(workload, n_items=n_items, seed=seed,
+                                        log_space_sigma=log_space_sigma))
+
+
+def all_paper_workloads() -> Tuple[PaperWorkload, ...]:
+    return PAPER_WORKLOADS

@@ -1,0 +1,5 @@
+"""Model zoo: shared layers + per-family assemblies + registry."""
+from repro.models.model_zoo import get_config, get_model, list_archs
+from repro.models.transformer import build_model
+
+__all__ = ["get_config", "get_model", "list_archs", "build_model"]

@@ -1,0 +1,348 @@
+"""Shared model layers: norms, RoPE, attention (full/sliding/cross), MLP.
+
+Pure functions over parameter pytrees — no module framework. All big
+matmuls keep explicit dtypes (params in cfg.dtype, accumulation f32), and
+attention is *chunked* (flash-style online softmax via lax.scan over query
+blocks) so 32k-token prefill never materialises an S x S score matrix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+# ----------------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def init_rms_norm(d: int) -> jnp.ndarray:
+    return jnp.zeros((d,), dtype=jnp.float32)  # stored as (scale - 1)
+
+
+# ----------------------------------------------------------------------------
+# rotary embeddings
+# ----------------------------------------------------------------------------
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta) -> jnp.ndarray:
+    """x: (B, S, H, D_head); positions: (B, S) int32. theta may be a traced
+    scalar (gemma3 uses different bases on local vs global layers)."""
+    d_head = x.shape[-1]
+    half = d_head // 2
+    freq_exp = jnp.arange(half, dtype=jnp.float32) / half
+    inv_freq = jnp.asarray(theta, dtype=jnp.float32) ** -freq_exp  # (half,)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq   # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# chunked (flash-style) attention, pure jnp
+# ----------------------------------------------------------------------------
+
+_NEG = -1e30
+
+
+def _attend_block(q, k, v, mask, sm_scale, softcap):
+    """q: (B,Hkv,G,Sq,D), k/v: (B,Hkv,Skv,D), mask: (B,1,1,Sq,Skv)."""
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * sm_scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    return jnp.where(mask, scores, _NEG)
+
+
+def chunked_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
+                      window, kv_lens=None, sm_scale: float,
+                      softcap: float = 0.0, q_chunk: int = 512,
+                      kv_chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention without an S x S intermediate.
+
+    q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D). GQA via Hq = G * Hkv.
+    ``window`` limits attention to the last `window` positions (sliding
+    window); it may be a traced scalar (per-layer dynamic). ``kv_lens``
+    masks ragged KV (decode against a partially-filled cache).
+    Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    if sq == 1:
+        # decode fast path: no kv-chunk scan. One (B,H,G,1,Skv) score
+        # tensor is small, and — crucially — it keeps a seq-sharded KV
+        # cache local under SPMD (a scan would dynamic-slice the sharded
+        # dim and force all-gathers; EXPERIMENTS.md §Perf cell 3).
+        qf = q.astype(jnp.float32).reshape(b, 1, hkv, g, d)
+        qf = qf.transpose(0, 2, 3, 1, 4)                  # (B,Hkv,G,1,D)
+        kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)  # (B,Hkv,Skv,D)
+        vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+        mask = jnp.ones((b, 1, skv), dtype=bool)
+        if causal:
+            mask &= kv_positions[:, None, :] <= q_positions[:, :, None]
+        if window is not None:
+            mask &= (q_positions[:, :, None]
+                     - kv_positions[:, None, :]) < window
+        if kv_lens is not None:
+            mask &= kv_positions[:, None, :] < kv_lens[:, None, None]
+        mask &= q_positions[:, :, None] >= 0
+        mask &= kv_positions[:, None, :] >= 0
+        s = _attend_block(qf, kf, vf, mask[:, None, None], sm_scale,
+                          softcap)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf) / jnp.where(
+            l > 0, l, 1.0)
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, hq, d).astype(
+            q.dtype)
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    n_q, n_k = -(-sq // qc), -(-skv // kc)
+    pad_q, pad_k = n_q * qc - sq, n_k * kc - skv
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qpos = q_positions
+    kpos = kv_positions
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pad_q)), constant_values=-1)
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad_k)), constant_values=-1)
+
+    # (B, Hkv, G, Sq, D) / (B, Hkv, Skv, D) layouts
+    qf = qf.reshape(b, n_q * qc, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    kf = kf.transpose(0, 2, 1, 3)
+    vf = vf.transpose(0, 2, 1, 3)
+
+    kf_c = kf.reshape(b, hkv, n_k, kc, d)
+    vf_c = vf.reshape(b, hkv, n_k, kc, d)
+    kpos_c = kpos.reshape(b, n_k, kc)
+
+    def q_block(carry, qi):
+        qb = jax.lax.dynamic_slice_in_dim(qf, qi * qc, qc, axis=3)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, qi * qc, qc, axis=1)
+
+        def kv_block(acc, ki):
+            m_run, l_run, o_run = acc
+            kb = kf_c[:, :, ki]
+            vb = vf_c[:, :, ki]
+            kp = kpos_c[:, ki]
+            mask = jnp.ones((b, qc, kc), dtype=bool)
+            if causal:
+                mask &= kp[:, None, :] <= qp[:, :, None]
+            if window is not None:
+                mask &= (qp[:, :, None] - kp[:, None, :]) < window
+            if kv_lens is not None:
+                mask &= kp[:, None, :] < kv_lens[:, None, None]
+            mask &= qp[:, :, None] >= 0
+            mask &= kp[:, None, :] >= 0   # unwritten cache slots / padding
+            mask = mask[:, None, None, :, :]
+            s = _attend_block(qb, kb, vb, mask, sm_scale, softcap)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            o_new = (o_run * alpha[..., None]
+                     + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb))
+            return (m_new, l_new, o_new), None
+
+        acc0 = (jnp.full((b, hkv, g, qc), _NEG, jnp.float32),
+                jnp.zeros((b, hkv, g, qc), jnp.float32),
+                jnp.zeros((b, hkv, g, qc, d), jnp.float32))
+        (m, l, o), _ = jax.lax.scan(kv_block, acc0,
+                                    jnp.arange(n_k, dtype=jnp.int32))
+        l = jnp.where(l > 0, l, 1.0)
+        return carry, (o / l[..., None])
+
+    _, blocks = jax.lax.scan(q_block, None,
+                             jnp.arange(n_q, dtype=jnp.int32))
+    # blocks: (n_q, B, Hkv, G, qc, D) -> (B, Sq, Hq, D)
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(
+        b, n_q * qc, hq, d)[:, :sq]
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------
+# attention block (self / cross), with KV-cache support
+# ----------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, *, cross: bool = False) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.attn_dim, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, dtype),
+        "wo": dense_init(ks[3], cfg.attn_dim, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = init_rms_norm(cfg.head_dim)
+        p["k_norm"] = init_rms_norm(cfg.head_dim)
+    return p
+
+
+def attention_block(p: Params, x: jnp.ndarray, cfg, *,
+                    positions: jnp.ndarray,
+                    window=None,
+                    rope_theta=None,
+                    causal: bool = True,
+                    cache: Optional[Dict[str, jnp.ndarray]] = None,
+                    cache_len: Optional[jnp.ndarray] = None,
+                    context: Optional[jnp.ndarray] = None,
+                    context_positions: Optional[jnp.ndarray] = None):
+    """Self- or cross-attention.
+
+    Modes:
+      * train/prefill: cache=None (self) or context=encoder states (cross)
+      * decode: cache={'k','v'} (B, S_max, Hkv, D) + cache_len (B,) —
+        writes the new token at cache_len, attends over the filled prefix.
+    Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, hq, hd)
+    kv_src = context if context is not None else x
+    k = jnp.einsum("bsd,de->bse", kv_src, p["wk"]).reshape(
+        b, kv_src.shape[1], hkv, hd)
+    v = jnp.einsum("bsd,de->bse", kv_src, p["wv"]).reshape(
+        b, kv_src.shape[1], hkv, hd)
+
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    if context is None:  # rope only on self-attention
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+
+    sm_scale = hd ** -0.5
+    new_cache = None
+    if cache is not None and context is None:
+        # decode: write k/v at cache_len, attend over prefix
+        idx = cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        onehot = jax.nn.one_hot(idx, cache["k"].shape[1],
+                                dtype=cache["k"].dtype)  # (B,s,Smax)
+        ck = cache["k"] + jnp.einsum("bsm,bshd->bmhd", onehot, k)
+        cv = cache["v"] + jnp.einsum("bsm,bshd->bmhd", onehot, v)
+        new_cache = {"k": ck, "v": cv}
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(ck.shape[1], dtype=jnp.int32)[None, :],
+            (b, ck.shape[1]))
+        out = chunked_attention(
+            q, ck, cv, q_positions=positions, kv_positions=kv_positions,
+            causal=False,  # masking via kv_lens + window below
+            window=window, kv_lens=cache_len + s, sm_scale=sm_scale,
+            softcap=cfg.attn_logit_softcap)
+    elif cache is not None and context is not None:
+        # decode cross-attention: cache holds precomputed context K/V
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(cache["k"].shape[1], dtype=jnp.int32)[None, :],
+            (b, cache["k"].shape[1]))
+        out = chunked_attention(
+            q, cache["k"], cache["v"], q_positions=positions,
+            kv_positions=kv_positions, causal=False, window=None,
+            kv_lens=cache_len, sm_scale=sm_scale,
+            softcap=cfg.attn_logit_softcap)
+        new_cache = cache
+    else:
+        kv_pos = (context_positions if context_positions is not None
+                  else positions)
+        out = chunked_attention(
+            q, k, v, q_positions=positions, kv_positions=kv_pos,
+            causal=causal and context is None, window=window,
+            sm_scale=sm_scale, softcap=cfg.attn_logit_softcap)
+        if context is not None:
+            new_cache = {"k": k, "v": v}  # prefill: stash cross K/V
+
+    out = jnp.einsum("bse,ed->bsd", out.reshape(b, s, hq * hd), p["wo"])
+    return out, new_cache
+
+
+# ----------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ----------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff: Optional[int] = None) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(ks[0], cfg.d_model, d_ff, dtype),
+        "wi": dense_init(ks[1], cfg.d_model, d_ff, dtype),
+        "wo": dense_init(ks[2], d_ff, cfg.d_model, dtype),
+    }
+
+
+def mlp_block(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    gate = act(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+    up = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    return jnp.einsum("bsf,fd->bsd", gate * up, p["wo"])
+
+
+# ----------------------------------------------------------------------------
+# embedding / unembedding
+# ----------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    p = {"embed": (jax.random.normal(
+        key, (cfg.vocab_size, cfg.d_model), dtype=jnp.float32)
+        * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size),
+            dtype=jnp.float32) * 0.02).astype(dtype)
+    return p
+
+
+def embed(p: Params, tokens: jnp.ndarray, cfg) -> jnp.ndarray:
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype=x.dtype)
+    return x
+
+
+def unembed(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, p["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, p["unembed"])

@@ -1,0 +1,212 @@
+"""Mamba2 block via the SSD chunked-parallel algorithm (zamba2's mixer).
+
+TPU adaptation: the SSD formulation (Mamba-2 paper §6) decomposes the
+selective-scan into chunk-diagonal attention-like matmuls plus a short
+scan over chunk states — everything heavy lands on the MXU instead of a
+length-S sequential recurrence. Decode keeps the O(1) recurrent form.
+
+All decay math in f32 log-space; every exp() argument is <= 0 by
+construction (A < 0, dt >= 0), so the kernel is numerically safe without
+clamping.
+
+Group count G = 1 (zamba2): B/C projections are shared across heads.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_rms_norm, rms_norm
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d_in, h, p_dim, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * n + h   # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, conv_ch),
+                                     dtype=jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((h,), dtype=jnp.float32),
+        "gate_norm": init_rms_norm(d_in),
+        "out_proj": dense_init(ks[3], d_in, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_in, h, p_dim, n = _dims(cfg)
+    z, xs, b_, c_, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, xs, b_, c_, dt
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, CH); w: (K, CH) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # static unroll, K = 4
+        out = out + xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def ssd_chunked(xh, dt, a_neg, b_, c_, chunk: int, *, init_state=None):
+    """Chunked-parallel SSD.
+
+    xh: (B,S,H,P) f32   input (already conv'd/activated), per head
+    dt: (B,S,H)  f32    softplus'd step sizes
+    a_neg: (H,)  f32    negative decay rates (-exp(a_log))
+    b_,c_: (B,S,N) f32  shared-across-heads input/output maps (G=1)
+    Returns y: (B,S,H,P), final_state: (B,H,N,P).
+    """
+    bsz, s, h, p_dim = xh.shape
+    n = b_.shape[-1]
+    q = min(chunk, s) if s % chunk else chunk
+    pad = (-s) % q
+    if pad:  # dt=0 on padding -> decay 1, zero input: states unaffected
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0)))
+    s_real, s = s, s + pad
+    nc = s // q
+
+    x_c = (xh * dt[..., None]).reshape(bsz, nc, q, h, p_dim)
+    da = (dt * a_neg[None, None, :]).reshape(bsz, nc, q, h)   # <= 0
+    cum = jnp.cumsum(da, axis=2)                              # (B,nc,Q,H)
+    total = cum[:, :, -1]                                     # (B,nc,H)
+    b_c = b_.reshape(bsz, nc, q, n)
+    c_c = c_.reshape(bsz, nc, q, n)
+
+    # --- intra-chunk (attention-like, causal with decay) ---
+    cb = jnp.einsum("bctn,bcsn->bcts", c_c, b_c)              # (B,nc,Q,Q)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), dtype=bool))
+    # mask BEFORE exp: masked (s > t) entries have diff > 0 and would
+    # overflow, poisoning gradients through the where (inf * 0 = nan)
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp",
+                         cb, decay, x_c)
+
+    # --- chunk states + recurrence ---
+    state_c = jnp.einsum("bcsn,bcsh,bcshp->bchnp",
+                         b_c, jnp.exp(total[:, :, None, :] - cum), x_c)
+
+    def step(st, inp):
+        tot_c, sc = inp                                       # (B,H), (B,H,N,P)
+        new = jnp.exp(tot_c)[:, :, None, None] * st + sc
+        return new, st                                        # emit prev state
+
+    init = (jnp.zeros((bsz, h, n, p_dim), jnp.float32)
+            if init_state is None else init_state)
+    final_state, prev_states = jax.lax.scan(
+        step, init, (total.transpose(1, 0, 2),
+                     state_c.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bctn,bchnp,bcth->bcthp",
+                         c_c, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p_dim)[:, :s_real]
+    return y, final_state
+
+
+def mamba2_block(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Train/prefill path. x: (B, S, D) -> (B, S, D)."""
+    bsz, s, _ = x.shape
+    d_in, h, p_dim, n = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xs, b_, c_, dt = _split_proj(proj, cfg)
+
+    conv_in = jnp.concatenate([xs, b_, c_], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs, b_, c_ = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"][None, None, :])
+    a_neg = -jnp.exp(p["a_log"])
+    xh = xs.astype(jnp.float32).reshape(bsz, s, h, p_dim)
+    y, _ = ssd_chunked(xh, dt_f, a_neg,
+                       b_.astype(jnp.float32), c_.astype(jnp.float32),
+                       cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def init_mamba2_state(cfg, batch: int, dtype=jnp.float32) -> Params:
+    d_in, h, p_dim, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, h, n, p_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, x: jnp.ndarray, state: Params, cfg
+                  ) -> Tuple[jnp.ndarray, Params]:
+    """Single-token recurrent step. x: (B, 1, D)."""
+    bsz = x.shape[0]
+    d_in, h, p_dim, n = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]   # (B, E)
+    z, xs, b_, c_, dt = _split_proj(proj, cfg)
+
+    conv_in = jnp.concatenate([xs, b_, c_], axis=-1)          # (B, CH)
+    window = jnp.concatenate([state["conv"],
+                              conv_in[:, None, :]], axis=1)   # (B, K, CH)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    xs_c, b_c, c_c = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    a_neg = -jnp.exp(p["a_log"])                               # (H,)
+    decay = jnp.exp(dt_f * a_neg[None, :])                     # (B,H)
+    xh = xs_c.reshape(bsz, h, p_dim)
+    new_ssm = (decay[:, :, None, None] * state["ssm"]
+               + jnp.einsum("bn,bh,bhp->bhnp", b_c, dt_f, xh))
+    y = jnp.einsum("bn,bhnp->bhp", c_c, new_ssm)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, None, :]), p["gate_norm"],
+                 cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_state = {"conv": window[:, 1:].astype(state["conv"].dtype),
+                 "ssm": new_ssm}
+    return out, new_state
+
+
+def ssd_reference(xh, dt, a_neg, b_, c_):
+    """Naive O(S) sequential SSD — oracle for tests."""
+    bsz, s, h, p_dim = xh.shape
+    n = b_.shape[-1]
+
+    def step(st, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t * a_neg[None, :])                 # (B,H)
+        st = (decay[:, :, None, None] * st
+              + jnp.einsum("bn,bh,bhp->bhnp", b_t, dt_t, x_t))
+        y = jnp.einsum("bn,bhnp->bhp", c_t, st)
+        return st, y
+
+    init = jnp.zeros((bsz, h, n, p_dim), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, init,
+        (xh.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+         b_.transpose(1, 0, 2), c_.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3)

@@ -1,0 +1,45 @@
+"""Architecture registry: --arch <id> -> (ModelConfig, model)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.configs import (arctic_480b, deepseek_7b, gemma3_1b, gemma3_4b,
+                           gemma_7b, llama32_vision_11b, mixtral_8x7b,
+                           whisper_medium, xlstm_350m, zamba2_7b)
+from repro.configs.base import ModelConfig
+from repro.models.transformer import build_model
+
+_REGISTRY: Dict[str, ModelConfig] = {
+    cfg.name: cfg for cfg in (
+        gemma3_1b.CONFIG,
+        gemma3_4b.CONFIG,
+        gemma_7b.CONFIG,
+        deepseek_7b.CONFIG,
+        zamba2_7b.CONFIG,
+        whisper_medium.CONFIG,
+        mixtral_8x7b.CONFIG,
+        arctic_480b.CONFIG,
+        xlstm_350m.CONFIG,
+        llama32_vision_11b.CONFIG,
+    )
+}
+
+
+def list_archs() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {name!r}; known: {', '.join(_REGISTRY)}"
+        ) from None
+
+
+def get_model(name: str, *, reduced: bool = False):
+    cfg = get_config(name)
+    if reduced:
+        cfg = cfg.reduced()
+    return cfg, build_model(cfg)

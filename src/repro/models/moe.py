@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN: top-k routing with GShard-style dense dispatch.
+
+Dispatch/combine are einsums against a capacity-limited one-hot tensor, so
+under pjit the expert dimension can be sharded over the data axis (expert
+parallelism — XLA SPMD materialises the token shuffle as all-to-all) while
+each expert's FFN is tensor-parallel over the model axis. Tokens routed
+beyond an expert's capacity are dropped (standard GShard semantics); the
+router carries a load-balancing aux loss.
+
+arctic-480b additionally runs a *dense residual* MLP in parallel with the
+expert branch (Snowflake's dense-MoE hybrid), enabled by
+``cfg.moe_dense_residual``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    def w(k, shape):
+        return (jax.random.normal(k, shape, dtype=jnp.float32)
+                * scale).astype(dtype)
+
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e), dtype=jnp.float32)
+                   * 0.02).astype(jnp.float32),  # router math stays f32
+        "we_gate": w(ks[1], (e, d, f)),
+        "we_in": w(ks[2], (e, d, f)),
+        "we_out": w(ks[3], (e, f, d)),
+    }
+    if cfg.moe_dense_residual:
+        p["dense"] = layers.init_mlp(ks[4], cfg)
+    return p
+
+
+GROUP_TOKENS = 512  # dispatch-group size; bounds the one-hot working set
+
+
+def _capacity(cfg, group_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * cfg.experts_per_token
+              * group_tokens / cfg.n_experts)
+    return max(cap, 4)
+
+
+def moe_block(p: Params, x: jnp.ndarray, cfg
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Tokens are dispatched in groups of GROUP_TOKENS, so the one-hot
+    dispatch/combine tensor is (G, T, E, C) with T*E*C bounded — at
+    E=128, T=512, C=~10, that's ~1.3k slots per token instead of the
+    naive per-sequence capacity that would blow past HBM. Expert-parallel
+    sharding: group dim follows the batch ('data') axis; XLA SPMD
+    materialises the token shuffle as all-to-all when the expert dim of
+    the dispatched activations is resharded onto 'data'.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch/GShard form).
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = jnp.sum(me * ce) * e * cfg.router_aux_loss
+
+    # Regroup (B, S) -> (G, T) token groups.
+    t = min(GROUP_TOKENS, s)
+    assert s % t == 0, f"seq {s} not a multiple of moe group {t}"
+    g = b * (s // t)
+    c = _capacity(cfg, t)
+    xg = x.reshape(g, t, d)
+    sel = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32).reshape(g, t, k, e)
+    gates = gate_vals.reshape(g, t, k)
+
+    # Position of each (token, choice) in its expert's capacity buffer.
+    pos = jnp.cumsum(sel.reshape(g, t * k, e), axis=1) - 1.0
+    pos = pos.reshape(g, t, k, e)
+    within_cap = pos < c
+    sel = sel * within_cap
+    pos = jnp.where(within_cap, pos, 0.0)
+
+    ddt = jnp.dtype(cfg.moe_dispatch_dtype)
+    cap_onehot = jax.nn.one_hot(pos.astype(jnp.int32), c,
+                                dtype=ddt)                     # (G,T,k,E,C)
+    dispatch = jnp.einsum("gtke,gtkec->gtec", sel.astype(ddt), cap_onehot)
+    combine = jnp.einsum("gtk,gtke,gtkec->gtec", gates.astype(ddt),
+                         sel.astype(ddt), cap_onehot)
+
+    if cfg.moe_ep_constraints:
+        # Pin the expert-parallel boundary: token-side tensors stay
+        # group-sharded ('data'), expert-side tensors expert-sharded
+        # ('data'), so SPMD lowers the boundary to one all-to-all instead
+        # of replicating activations (EXPERIMENTS.md §Perf cell 2).
+        from jax.sharding import PartitionSpec as _P
+        wsc = jax.lax.with_sharding_constraint
+        dispatch = wsc(dispatch, _P("data", None, None, None))
+        combine = wsc(combine, _P("data", None, None, None))
+    xin = jnp.einsum("gtec,gtd->egcd", dispatch.astype(x.dtype), xg)
+    if cfg.moe_ep_constraints:
+        xin = wsc(xin, _P("data", None, None, "model"))
+    gate_h = act(jnp.einsum("egcd,edf->egcf", xin, p["we_gate"]))
+    up = jnp.einsum("egcd,edf->egcf", xin, p["we_in"])
+    expert_out = jnp.einsum("egcf,efd->egcd", gate_h * up, p["we_out"])
+    if cfg.moe_ep_constraints:
+        expert_out = wsc(expert_out, _P("data", None, None, "model"))
+    out = jnp.einsum("gtec,egcd->gtd", combine.astype(x.dtype), expert_out)
+    out = out.reshape(b, s, d)
+    if cfg.moe_ep_constraints:
+        out = wsc(out.reshape(g, t, d), _P("data", None, None)).reshape(
+            b, s, d)
+
+    if cfg.moe_dense_residual:
+        out = out + layers.mlp_block(p["dense"], x, cfg)
+    return out, aux

@@ -1,0 +1,1168 @@
+"""Model assembly: every assigned architecture family as a scanned stack.
+
+Families (selected by ModelConfig.family):
+  dense / moe — uniform decoder stack; per-layer attention kind (global vs
+      sliding-window) is *data*, not structure: a stacked ``is_global``
+      vector rides through one lax.scan, so gemma3's 5:1 local:global and
+      mixtral's all-SWA compile to a single scanned layer body (small HLO,
+      fast multi-arch compiles).
+  hybrid — zamba2: lax.scan over groups of [mamba2, mamba2, shared-attn];
+      the attention block's weights are shared across all applications
+      (scan closure), while its KV cache is per-application (scan xs/ys).
+  ssm — xlstm: scan over groups of [7 x mLSTM, 1 x sLSTM].
+  encdec — whisper backbone: bidirectional encoder scan over stub frame
+      embeddings + causal decoder scan with fused cross-attention.
+  vlm — llama-3.2-vision backbone: scan over groups of [4 self layers,
+      1 gated cross-attn layer] against stub image embeddings.
+
+API (uniform across families):
+  init(key) -> params
+  train_logits(params, tokens, extras) -> (logits, aux_loss)
+  prefill(params, tokens, extras, max_len) -> (logits, cache)
+  decode(params, token, cache, cache_len, extras) -> (logits, cache)
+
+``extras`` carries modality-stub inputs (frame/image embeddings).
+Decode uses a scalar ``cache_len`` (batch-aligned serving) and supports
+rolling sliding-window caches when every layer is local (mixtral): the
+cache then has window-size slots plus an absolute-position plane, and
+masking by stored position makes wraparound transparent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfgs
+from repro.models import layers, mamba2, moe, xlstm
+from repro.models.layers import (attention_block, chunked_attention, embed,
+                                 init_attention, init_embedding,
+                                 init_mlp, init_rms_norm, mlp_block,
+                                 rms_norm, unembed)
+
+Params = Dict[str, Any]
+_FULL_WINDOW = 1 << 30
+
+
+# ============================================================================
+# attention-layer block (dense or moe ffn), uniform-stack body
+# ============================================================================
+
+
+def _init_attn_layer(key, cfg) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"ln1": init_rms_norm(cfg.d_model),
+         "ln2": init_rms_norm(cfg.d_model),
+         "attn": init_attention(ks[0], cfg)}
+    if cfg.n_experts:
+        p["moe"] = moe.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    if cfg.post_block_norms:
+        p["ln1_post"] = init_rms_norm(cfg.d_model)
+        p["ln2_post"] = init_rms_norm(cfg.d_model)
+    return p
+
+
+def _apply_attn_layer(p, x, cfg, *, window, theta, positions,
+                      cache=None, cache_len=None, return_kv=False):
+    """One decoder layer. Returns (x, aux, new_cache_or_kv)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_out, kv = attention_block(
+        p["attn"], h, cfg, positions=positions, window=window,
+        rope_theta=theta, causal=True, cache=cache, cache_len=cache_len)
+    if cfg.post_block_norms:
+        attn_out = rms_norm(attn_out, p["ln1_post"], cfg.norm_eps)
+    x = x + attn_out
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        ffn_out, aux = moe.moe_block(p["moe"], h, cfg)
+    else:
+        ffn_out = mlp_block(p["mlp"], h, cfg)
+    if cfg.post_block_norms:
+        ffn_out = rms_norm(ffn_out, p["ln2_post"], cfg.norm_eps)
+    return x + ffn_out, aux, kv
+
+
+def _layer_window_theta(cfg, is_global):
+    window = jnp.where(is_global, _FULL_WINDOW, cfg.sliding_window)
+    theta_g = cfg.rope_theta_global or cfg.rope_theta
+    theta = jnp.where(is_global, theta_g, cfg.rope_theta)
+    return window, theta
+
+
+def _fill_cache_slots(kproj, vproj, positions, slots: int, keep: int):
+    """Place the last ``keep`` tokens into a ``slots``-sized (rolling)
+    cache so that token at position p lands in slot p % slots — the same
+    rule decode uses, so wraparound eviction order stays consistent."""
+    b, s = positions.shape
+    ck = jnp.zeros((b, slots, *kproj.shape[2:]), kproj.dtype)
+    cv = jnp.zeros_like(ck)
+    cpos = jnp.full((b, slots), -1, jnp.int32)
+    if keep == slots and s >= slots:
+        shift = s % slots
+        ck = jnp.roll(kproj[:, s - slots:], shift, axis=1)
+        cv = jnp.roll(vproj[:, s - slots:], shift, axis=1)
+        cpos = jnp.roll(positions[:, s - slots:], shift, axis=1)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            ck, kproj[:, s - keep:], (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, vproj[:, s - keep:], (0, 0, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, positions[:, s - keep:], (0, 0))
+    return ck, cv, cpos
+
+
+def _cache_write(arr, new, write_at, positions, mode: str):
+    """Write `new` (B,1,...) into slot `write_at` of `arr` (B,S,...).
+
+    "dus" is cheapest on replicated-seq caches; "onehot" expresses the
+    write as einsum-add, which SPMD keeps local when the cache's seq dim
+    is sharded (the dynamic_update_slice form all-gathers it).
+    """
+    if mode == "onehot":
+        slots = arr.shape[1]
+        onehot = jax.nn.one_hot(write_at, slots, dtype=arr.dtype)  # (S,)
+        shaped = onehot.reshape((1, slots) + (1,) * (arr.ndim - 2))
+        keep = 1.0 - shaped
+        return arr * keep.astype(arr.dtype) + shaped * new.astype(arr.dtype)
+    return jax.lax.dynamic_update_slice(
+        arr, new.astype(arr.dtype),
+        (0, write_at) + (0,) * (arr.ndim - 2))
+
+
+def _is_global_vec(cfg) -> jnp.ndarray:
+    pattern = cfg.block_pattern or (cfgs.ATTN_GLOBAL,) * cfg.n_layers
+    return jnp.asarray([k == cfgs.ATTN_GLOBAL for k in pattern],
+                       dtype=jnp.bool_)
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _stack_init(key, n: int, init_fn) -> Params:
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ============================================================================
+# family: dense / moe — uniform decoder
+# ============================================================================
+
+
+class UniformDecoder:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- cache geometry ------------------------------------------------------
+    def cache_len_slots(self, max_len: int) -> int:
+        cfg = self.cfg
+        pattern = cfg.block_pattern or (cfgs.ATTN_GLOBAL,) * cfg.n_layers
+        if all(k == cfgs.ATTN_LOCAL for k in pattern):
+            return min(max_len, cfg.sliding_window)  # rolling buffer
+        return max_len
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_emb, k_layers, k_fin = jax.random.split(key, 3)
+        return {
+            "embedding": init_embedding(k_emb, cfg),
+            "layers": _stack_init(k_layers, cfg.n_layers,
+                                  lambda k: _init_attn_layer(k, cfg)),
+            "final_norm": init_rms_norm(cfg.d_model),
+        }
+
+    def _run(self, params, x, positions, cache=None, cache_len=None):
+        cfg = self.cfg
+        is_global = _is_global_vec(cfg)
+
+        def body(carry, xs):
+            h, aux = carry
+            if cache is None:
+                p, ig = xs
+                c_in = None
+            else:
+                p, ig, c_in = xs
+            window, theta = _layer_window_theta(cfg, ig)
+            h, aux_l, c_out = _apply_attn_layer(
+                p, h, cfg, window=window, theta=theta, positions=positions,
+                cache=c_in, cache_len=cache_len,
+                return_kv=cache is not None)
+            return (h, aux + aux_l), c_out
+
+        xs = ((params["layers"], is_global) if cache is None
+              else (params["layers"], is_global, cache))
+        (x, aux), cache_out = jax.lax.scan(
+            _maybe_remat(body, cfg), (x, jnp.zeros((), jnp.float32)), xs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux, cache_out
+
+    def train_logits(self, params, tokens, extras=None):
+        cfg = self.cfg
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = embed(params["embedding"], tokens, cfg)
+        x, aux, _ = self._run(params, x, positions)
+        return unembed(params["embedding"], x, cfg), aux
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        slots = self.cache_len_slots(max_len)
+        dtype = jnp.dtype(cfg.dtype)
+        kv = lambda: jnp.zeros(
+            (cfg.n_layers, batch, slots, cfg.n_kv_heads, cfg.head_dim),
+            dtype)
+        return {"k": kv(), "v": kv(),
+                "pos": jnp.full((cfg.n_layers, batch, slots), -1,
+                                jnp.int32)}
+
+    def prefill(self, params, tokens, extras=None, max_len: int = 0):
+        cfg = self.cfg
+        b, s = tokens.shape
+        max_len = max_len or s
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = embed(params["embedding"], tokens, cfg)
+        is_global = _is_global_vec(cfg)
+        slots = self.cache_len_slots(max_len)
+        keep = min(s, slots)
+
+        def body(carry, xs):
+            h, aux = carry
+            p, ig = xs
+            window, theta = _layer_window_theta(cfg, ig)
+            hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+            attn_out, _ = attention_block(
+                p["attn"], hn, cfg, positions=positions, window=window,
+                rope_theta=theta, causal=True)
+            # recompute k/v for the cache (cheap vs attention itself)
+            kproj = jnp.einsum("bsd,de->bse", hn, p["attn"]["wk"]).reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim)
+            vproj = jnp.einsum("bsd,de->bse", hn, p["attn"]["wv"]).reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim)
+            if "k_norm" in p["attn"]:
+                kproj = rms_norm(kproj, p["attn"]["k_norm"], cfg.norm_eps)
+            kproj = layers.apply_rope(kproj, positions, theta)
+            ck, cv, cpos = _fill_cache_slots(kproj, vproj, positions,
+                                             slots, keep)
+            if cfg.post_block_norms:
+                attn_out = rms_norm(attn_out, p["ln1_post"], cfg.norm_eps)
+            h = h + attn_out
+            hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+            aux_l = jnp.zeros((), jnp.float32)
+            if cfg.n_experts:
+                ffn_out, aux_l = moe.moe_block(p["moe"], hn, cfg)
+            else:
+                ffn_out = mlp_block(p["mlp"], hn, cfg)
+            if cfg.post_block_norms:
+                ffn_out = rms_norm(ffn_out, p["ln2_post"], cfg.norm_eps)
+            return (h + ffn_out, aux + aux_l), {"k": ck, "v": cv,
+                                                "pos": cpos}
+
+        (x, aux), cache = jax.lax.scan(
+            _maybe_remat(body, cfg), (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], is_global))
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        return unembed(params["embedding"], x, cfg), cache
+
+    def decode(self, params, token, cache, cache_len, extras=None):
+        """token: (B, 1); cache_len: scalar int32 (tokens so far)."""
+        cfg = self.cfg
+        b = token.shape[0]
+        positions = jnp.full((b, 1), cache_len, jnp.int32)
+        x = embed(params["embedding"], token, cfg)
+        is_global = _is_global_vec(cfg)
+        slots = cache["k"].shape[2]
+        write_at = jnp.mod(cache_len, slots)   # rolling when slots < seq
+
+        def body(carry, xs):
+            h = carry
+            p, ig, c_in = xs
+            window, theta = _layer_window_theta(cfg, ig)
+            hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+            hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            q = jnp.einsum("bsd,de->bse", hn, p["attn"]["wq"]).reshape(
+                b, 1, hq, hd)
+            k = jnp.einsum("bsd,de->bse", hn, p["attn"]["wk"]).reshape(
+                b, 1, hkv, hd)
+            v = jnp.einsum("bsd,de->bse", hn, p["attn"]["wv"]).reshape(
+                b, 1, hkv, hd)
+            if "q_norm" in p["attn"]:
+                q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+                k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+            q = layers.apply_rope(q, positions, theta)
+            k = layers.apply_rope(k, positions, theta)
+            ck = _cache_write(c_in["k"], k, write_at, positions,
+                              cfg.cache_write)
+            cv = _cache_write(c_in["v"], v, write_at, positions,
+                              cfg.cache_write)
+            cpos = _cache_write(c_in["pos"], positions, write_at,
+                                positions, cfg.cache_write)
+            out = chunked_attention(
+                q, ck, cv, q_positions=positions, kv_positions=cpos,
+                causal=True, window=jnp.where(ig, _FULL_WINDOW,
+                                              cfg.sliding_window),
+                sm_scale=hd ** -0.5, softcap=cfg.attn_logit_softcap)
+            out = jnp.einsum("bse,ed->bsd", out.reshape(b, 1, hq * hd),
+                             p["attn"]["wo"])
+            if cfg.post_block_norms:
+                out = rms_norm(out, p["ln1_post"], cfg.norm_eps)
+            h = h + out
+            hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+            if cfg.n_experts:
+                ffn_out, _ = moe.moe_block(p["moe"], hn, cfg)
+            else:
+                ffn_out = mlp_block(p["mlp"], hn, cfg)
+            if cfg.post_block_norms:
+                ffn_out = rms_norm(ffn_out, p["ln2_post"], cfg.norm_eps)
+            return h + ffn_out, {"k": ck, "v": cv, "pos": cpos}
+
+        x, new_cache = jax.lax.scan(
+            body, x, (params["layers"], is_global, cache))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return unembed(params["embedding"], x, cfg), new_cache
+
+
+# ============================================================================
+# family: hybrid — zamba2 (mamba2 groups + shared attention block)
+# ============================================================================
+
+ZAMBA_GROUP = 3  # [mamba2, mamba2, shared_attn]
+
+
+class ZambaHybrid:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        assert cfg.n_layers % ZAMBA_GROUP == 0
+        self.n_groups = cfg.n_layers // ZAMBA_GROUP
+        self.n_mamba = 2 * self.n_groups
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        shared = {"ln1": init_rms_norm(cfg.d_model),
+                  "ln2": init_rms_norm(cfg.d_model),
+                  "attn": init_attention(ks[1], cfg),
+                  "mlp": init_mlp(ks[2], cfg)}
+        mamba_stack = _stack_init(ks[0], self.n_mamba,
+                                  lambda k: mamba2.init_mamba2(k, cfg))
+        mamba_stack = jax.tree.map(
+            lambda l: l.reshape(self.n_groups, 2, *l.shape[1:]),
+            mamba_stack)
+        mamba_norms = jnp.zeros((self.n_groups, 2, cfg.d_model),
+                                jnp.float32)
+        return {"embedding": init_embedding(ks[3], cfg),
+                "mamba": mamba_stack, "mamba_ln": mamba_norms,
+                "shared_attn": shared,
+                "final_norm": init_rms_norm(cfg.d_model)}
+
+    def _group(self, params, h, mamba_p, mamba_ln, positions, *,
+               cache=None, cache_len=None, mamba_state=None,
+               decode=False):
+        cfg = self.cfg
+        new_states = []
+        for i in range(2):
+            p_i = jax.tree.map(lambda l: l[i], mamba_p)
+            hn = rms_norm(h, mamba_ln[i], cfg.norm_eps)
+            if decode:
+                out, st = mamba2.mamba2_decode(
+                    p_i, hn, jax.tree.map(lambda l: l[i], mamba_state),
+                    cfg)
+                new_states.append(st)
+            else:
+                out = mamba2.mamba2_block(p_i, hn, cfg)
+            h = h + out
+        sp = params["shared_attn"]
+        hn = rms_norm(h, sp["ln1"], cfg.norm_eps)
+        attn_out, kv = attention_block(
+            sp["attn"], hn, cfg, positions=positions,
+            window=cfg.sliding_window, causal=True,
+            cache=cache, cache_len=cache_len)
+        h = h + attn_out
+        hn = rms_norm(h, sp["ln2"], cfg.norm_eps)
+        h = h + mlp_block(sp["mlp"], hn, cfg)
+        if decode:
+            new_states = jax.tree.map(lambda *l: jnp.stack(l), *new_states)
+        return h, kv, new_states
+
+    def train_logits(self, params, tokens, extras=None):
+        cfg = self.cfg
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = embed(params["embedding"], tokens, cfg)
+
+        def body(h, xs):
+            mamba_p, mamba_ln = xs
+            h, _, _ = self._group(params, h, mamba_p, mamba_ln, positions)
+            return h, None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x,
+                            (params["mamba"], params["mamba_ln"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return unembed(params["embedding"], x, cfg), jnp.zeros(
+            (), jnp.float32)
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        slots = min(max_len, cfg.sliding_window)
+        kv = lambda: jnp.zeros(
+            (self.n_groups, batch, slots, cfg.n_kv_heads, cfg.head_dim),
+            dtype)
+        m_state = mamba2.init_mamba2_state(cfg, batch)
+        m_stack = jax.tree.map(
+            lambda l: jnp.broadcast_to(
+                l[None, None], (self.n_groups, 2, *l.shape)).copy(),
+            m_state)
+        return {"attn": {"k": kv(), "v": kv(),
+                         "pos": jnp.full((self.n_groups, batch, slots), -1,
+                                         jnp.int32)},
+                "mamba": m_stack}
+
+    def prefill(self, params, tokens, extras=None, max_len: int = 0):
+        # Prefill = train-shape pass that also fills caches; done stepwise
+        # over chunks is possible, but for the dry-run we emit the last
+        # window of K/V (sliding-window shared attention) + mamba states.
+        cfg = self.cfg
+        b, s = tokens.shape
+        max_len = max_len or s
+        slots = min(max_len, cfg.sliding_window)
+        keep = min(s, slots)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = embed(params["embedding"], tokens, cfg)
+
+        def body(h, xs):
+            mamba_p, mamba_ln = xs
+            cfg_ = cfg
+            new_states = []
+            for i in range(2):
+                p_i = jax.tree.map(lambda l: l[i], mamba_p)
+                hn = rms_norm(h, mamba_ln[i], cfg_.norm_eps)
+                d_in, nh, pd, n = mamba2._dims(cfg_)
+                proj = jnp.einsum("bsd,de->bse", hn, p_i["in_proj"])
+                z, xs_, b_, c_, dt = mamba2._split_proj(proj, cfg_)
+                conv_in = jnp.concatenate([xs_, b_, c_], axis=-1)
+                conv_out = jax.nn.silu(mamba2._causal_conv(
+                    conv_in, p_i["conv_w"], p_i["conv_b"]))
+                xs2, b2, c2 = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+                dt_f = jax.nn.softplus(dt.astype(jnp.float32)
+                                       + p_i["dt_bias"][None, None, :])
+                a_neg = -jnp.exp(p_i["a_log"])
+                xh = xs2.astype(jnp.float32).reshape(b, s, nh, pd)
+                y, fin = mamba2.ssd_chunked(
+                    xh, dt_f, a_neg, b2.astype(jnp.float32),
+                    c2.astype(jnp.float32), cfg_.ssm_chunk)
+                y = y + p_i["d_skip"][None, None, :, None] * xh
+                y = y.reshape(b, s, d_in).astype(h.dtype)
+                y = rms_norm(y * jax.nn.silu(z), p_i["gate_norm"],
+                             cfg_.norm_eps)
+                h = h + jnp.einsum("bse,ed->bsd", y, p_i["out_proj"])
+                new_states.append(
+                    {"conv": conv_in[:, s - (cfg_.conv_kernel - 1):]
+                     .astype(conv_in.dtype),
+                     "ssm": fin})
+            sp = params["shared_attn"]
+            hn = rms_norm(h, sp["ln1"], cfg_.norm_eps)
+            attn_out, _ = attention_block(
+                sp["attn"], hn, cfg_, positions=positions,
+                window=cfg_.sliding_window, causal=True)
+            kproj = jnp.einsum("bsd,de->bse", hn, sp["attn"]["wk"]).reshape(
+                b, s, cfg_.n_kv_heads, cfg_.head_dim)
+            vproj = jnp.einsum("bsd,de->bse", hn, sp["attn"]["wv"]).reshape(
+                b, s, cfg_.n_kv_heads, cfg_.head_dim)
+            kproj = layers.apply_rope(kproj, positions, cfg_.rope_theta)
+            h = h + attn_out
+            hn = rms_norm(h, sp["ln2"], cfg_.norm_eps)
+            h = h + mlp_block(sp["mlp"], hn, cfg_)
+            ck, cv, cpos = _fill_cache_slots(kproj, vproj, positions,
+                                             slots, keep)
+            cache_g = {"k": ck, "v": cv, "pos": cpos}
+            states = jax.tree.map(lambda *l: jnp.stack(l), *new_states)
+            return h, (cache_g, states)
+
+        x, (attn_cache, m_states) = jax.lax.scan(
+            _maybe_remat(body, cfg), x,
+            (params["mamba"], params["mamba_ln"]))
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        cache = {"attn": attn_cache, "mamba": m_states}
+        return unembed(params["embedding"], x, cfg), cache
+
+    def decode(self, params, token, cache, cache_len, extras=None):
+        cfg = self.cfg
+        b = token.shape[0]
+        positions = jnp.full((b, 1), cache_len, jnp.int32)
+        x = embed(params["embedding"], token, cfg)
+        slots = cache["attn"]["k"].shape[2]
+        write_at = jnp.mod(cache_len, slots)
+
+        def body(h, xs):
+            mamba_p, mamba_ln, c_attn, m_state = xs
+            new_states = []
+            for i in range(2):
+                p_i = jax.tree.map(lambda l: l[i], mamba_p)
+                hn = rms_norm(h, mamba_ln[i], cfg.norm_eps)
+                out, st = mamba2.mamba2_decode(
+                    p_i, hn, jax.tree.map(lambda l: l[i], m_state), cfg)
+                new_states.append(st)
+                h = h + out
+            sp = params["shared_attn"]
+            hn = rms_norm(h, sp["ln1"], cfg.norm_eps)
+            hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            q = jnp.einsum("bsd,de->bse", hn, sp["attn"]["wq"]).reshape(
+                b, 1, hq, hd)
+            k = jnp.einsum("bsd,de->bse", hn, sp["attn"]["wk"]).reshape(
+                b, 1, hkv, hd)
+            v = jnp.einsum("bsd,de->bse", hn, sp["attn"]["wv"]).reshape(
+                b, 1, hkv, hd)
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+            ck = jax.lax.dynamic_update_slice(
+                c_attn["k"], k.astype(c_attn["k"].dtype),
+                (0, write_at, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                c_attn["v"], v.astype(c_attn["v"].dtype),
+                (0, write_at, 0, 0))
+            cpos = jax.lax.dynamic_update_slice(c_attn["pos"], positions,
+                                                (0, write_at))
+            out = chunked_attention(
+                q, ck, cv, q_positions=positions, kv_positions=cpos,
+                causal=True, window=cfg.sliding_window, sm_scale=hd ** -0.5)
+            out = jnp.einsum("bse,ed->bsd", out.reshape(b, 1, hq * hd),
+                             sp["attn"]["wo"])
+            h = h + out
+            hn = rms_norm(h, sp["ln2"], cfg.norm_eps)
+            h = h + mlp_block(sp["mlp"], hn, cfg)
+            states = jax.tree.map(lambda *l: jnp.stack(l), *new_states)
+            return h, ({"k": ck, "v": cv, "pos": cpos}, states)
+
+        x, (attn_cache, m_states) = jax.lax.scan(
+            body, x, (params["mamba"], params["mamba_ln"],
+                      cache["attn"], cache["mamba"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return (unembed(params["embedding"], x, cfg),
+                {"attn": attn_cache, "mamba": m_states})
+
+
+# ============================================================================
+# family: ssm — xlstm (7 mLSTM : 1 sLSTM groups)
+# ============================================================================
+
+XLSTM_GROUP = 8
+XLSTM_MLSTM_PER_GROUP = 7
+
+
+class XLSTMStack:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        assert cfg.n_layers % XLSTM_GROUP == 0
+        self.n_groups = cfg.n_layers // XLSTM_GROUP
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        m = XLSTM_MLSTM_PER_GROUP
+        mlstm_stack = _stack_init(ks[0], self.n_groups * m,
+                                  lambda k: xlstm.init_mlstm(k, cfg))
+        mlstm_stack = jax.tree.map(
+            lambda l: l.reshape(self.n_groups, m, *l.shape[1:]),
+            mlstm_stack)
+        slstm_stack = _stack_init(ks[1], self.n_groups,
+                                  lambda k: xlstm.init_slstm(k, cfg))
+        return {"embedding": init_embedding(ks[2], cfg),
+                "mlstm": mlstm_stack,
+                "mlstm_ln": jnp.zeros((self.n_groups, m, cfg.d_model),
+                                      jnp.float32),
+                "slstm": slstm_stack,
+                "slstm_ln": jnp.zeros((self.n_groups, cfg.d_model),
+                                      jnp.float32),
+                "final_norm": init_rms_norm(cfg.d_model)}
+
+    def _forward(self, params, x):
+        cfg = self.cfg
+
+        def body(h, xs):
+            m_p, m_ln, s_p, s_ln = xs
+            for i in range(XLSTM_MLSTM_PER_GROUP):
+                p_i = jax.tree.map(lambda l: l[i], m_p)
+                h = h + xlstm.mlstm_block(
+                    p_i, rms_norm(h, m_ln[i], cfg.norm_eps), cfg)
+            h = h + xlstm.slstm_block(
+                s_p, rms_norm(h, s_ln, cfg.norm_eps), cfg)
+            return h, None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x,
+                            (params["mlstm"], params["mlstm_ln"],
+                             params["slstm"], params["slstm_ln"]))
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def train_logits(self, params, tokens, extras=None):
+        cfg = self.cfg
+        x = embed(params["embedding"], tokens, cfg)
+        x = self._forward(params, x)
+        return unembed(params["embedding"], x, cfg), jnp.zeros(
+            (), jnp.float32)
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        m = XLSTM_MLSTM_PER_GROUP
+        c0, n0 = xlstm.init_mlstm_state(cfg, batch)
+        rep = lambda l: jnp.broadcast_to(
+            l[None, None], (self.n_groups, m, *l.shape)).copy()
+        s_state = xlstm.init_slstm_state(cfg, batch)
+        rep_s = lambda l: jnp.broadcast_to(
+            l[None], (self.n_groups, *l.shape)).copy()
+        return {"mlstm_c": rep(c0), "mlstm_n": rep(n0),
+                "slstm": jax.tree.map(rep_s, s_state)}
+
+    def prefill(self, params, tokens, extras=None, max_len: int = 0):
+        # Recurrent state accumulates over the prompt; for the dry-run we
+        # run the parallel form then a single decode step would continue
+        # from states — here we fold the prompt through chunked mLSTM and
+        # return final states per layer.
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = embed(params["embedding"], tokens, cfg)
+
+        def body(h, xs):
+            m_p, m_ln, s_p, s_ln = xs
+            m_states_c, m_states_n = [], []
+            for i in range(XLSTM_MLSTM_PER_GROUP):
+                p_i = jax.tree.map(lambda l: l[i], m_p)
+                hn = rms_norm(h, m_ln[i], cfg.norm_eps)
+                d_in, nh, dk, dv = xlstm._dims(cfg)
+                q = jnp.einsum("bsd,de->bse", hn, p_i["wq"]).reshape(
+                    b, s, nh, dk)
+                k = jnp.einsum("bsd,de->bse", hn, p_i["wk"]).reshape(
+                    b, s, nh, dk)
+                v = jnp.einsum("bsd,de->bse", hn, p_i["wv"]).reshape(
+                    b, s, nh, dv)
+                gates = jnp.einsum("bsd,de->bse", hn,
+                                   p_i["wgate"]).astype(jnp.float32)
+                log_f = jax.nn.log_sigmoid(gates[..., :nh])
+                i_g = jax.nn.sigmoid(gates[..., nh:])
+                hid, (c_fin, n_fin) = xlstm._mlstm_chunked(
+                    q.astype(jnp.float32) * (dk ** -0.5),
+                    k.astype(jnp.float32), v.astype(jnp.float32),
+                    log_f, i_g, cfg.ssm_chunk)
+                hid = hid.reshape(b, s, d_in).astype(h.dtype)
+                og = jax.nn.sigmoid(
+                    jnp.einsum("bsd,de->bse", hn, p_i["wog"]))
+                hid = rms_norm(hid, p_i["out_norm"], cfg.norm_eps) * og
+                h = h + jnp.einsum("bse,ed->bsd", hid, p_i["wo"])
+                m_states_c.append(c_fin)
+                m_states_n.append(n_fin)
+            # sLSTM: run the sequential scan, keep final state
+            hn = rms_norm(h, s_ln, cfg.norm_eps)
+            xg = jnp.einsum("bsd,de->bse", hn,
+                            s_p["wx"]).astype(jnp.float32)
+
+            def sstep(st, x_t):
+                new = xlstm._slstm_step(s_p, cfg, x_t, st)
+                return new, new["h"]
+
+            s_fin, hs = jax.lax.scan(sstep, xlstm.init_slstm_state(cfg, b),
+                                     xg.transpose(1, 0, 2))
+            hid = hs.transpose(1, 0, 2).astype(h.dtype)
+            hid = rms_norm(hid, s_p["out_norm"], cfg.norm_eps)
+            h = h + jnp.einsum("bse,ed->bsd", hid, s_p["wo"])
+            return h, (jnp.stack(m_states_c), jnp.stack(m_states_n), s_fin)
+
+        x, (mc, mn, s_states) = jax.lax.scan(
+            _maybe_remat(body, cfg), x,
+            (params["mlstm"], params["mlstm_ln"], params["slstm"],
+             params["slstm_ln"]))
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        cache = {"mlstm_c": mc, "mlstm_n": mn, "slstm": s_states}
+        return unembed(params["embedding"], x, cfg), cache
+
+    def decode(self, params, token, cache, cache_len, extras=None):
+        cfg = self.cfg
+        x = embed(params["embedding"], token, cfg)
+
+        def body(h, xs):
+            m_p, m_ln, s_p, s_ln, mc, mn, s_st = xs
+            new_c, new_n = [], []
+            for i in range(XLSTM_MLSTM_PER_GROUP):
+                p_i = jax.tree.map(lambda l: l[i], m_p)
+                hn = rms_norm(h, m_ln[i], cfg.norm_eps)
+                out, (c2, n2) = xlstm.mlstm_decode(
+                    p_i, hn, (mc[i], mn[i]), cfg)
+                h = h + out
+                new_c.append(c2)
+                new_n.append(n2)
+            hn = rms_norm(h, s_ln, cfg.norm_eps)
+            out, s_new = xlstm.slstm_decode(s_p, hn, s_st, cfg)
+            h = h + out
+            return h, (jnp.stack(new_c), jnp.stack(new_n), s_new)
+
+        x, (mc, mn, s_states) = jax.lax.scan(
+            body, x, (params["mlstm"], params["mlstm_ln"],
+                      params["slstm"], params["slstm_ln"],
+                      cache["mlstm_c"], cache["mlstm_n"], cache["slstm"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        cache = {"mlstm_c": mc, "mlstm_n": mn, "slstm": s_states}
+        return unembed(params["embedding"], x, cfg), cache
+
+
+# ============================================================================
+# family: encdec — whisper backbone
+# ============================================================================
+
+
+class WhisperEncDec:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": init_rms_norm(cfg.d_model),
+                    "ln2": init_rms_norm(cfg.d_model),
+                    "attn": init_attention(k1, cfg),
+                    "mlp": init_mlp(k2, cfg)}
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"ln1": init_rms_norm(cfg.d_model),
+                    "ln_x": init_rms_norm(cfg.d_model),
+                    "ln2": init_rms_norm(cfg.d_model),
+                    "attn": init_attention(k1, cfg),
+                    "xattn": init_attention(k2, cfg, cross=True),
+                    "mlp": init_mlp(k3, cfg)}
+
+        return {"embedding": init_embedding(ks[0], cfg),
+                "encoder": _stack_init(ks[1], cfg.encoder_layers, enc_layer),
+                "enc_norm": init_rms_norm(cfg.d_model),
+                "decoder": _stack_init(ks[2], cfg.n_layers, dec_layer),
+                "final_norm": init_rms_norm(cfg.d_model)}
+
+    def encode(self, params, frames):
+        """frames: (B, F, d_model) stub frame embeddings."""
+        cfg = self.cfg
+        b, f, _ = frames.shape
+        positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+
+        def body(h, p):
+            hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+            out, _ = attention_block(p["attn"], hn, cfg,
+                                     positions=positions, window=None,
+                                     causal=False)
+            h = h + out
+            hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+            return h + mlp_block(p["mlp"], hn, cfg), None
+
+        h, _ = jax.lax.scan(_maybe_remat(body, cfg),
+                            frames.astype(jnp.dtype(cfg.dtype)),
+                            params["encoder"])
+        return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+    def _decoder_run(self, params, x, positions, enc_out=None,
+                     enc_positions=None, self_cache=None, cross_cache=None,
+                     cache_len=None, enc_len=None):
+        cfg = self.cfg
+        b = x.shape[0]
+
+        def body(carry, xs):
+            h = carry
+            if self_cache is None:
+                p = xs
+                sc = None
+                cc = None
+            else:
+                p, sc, cc = xs
+            hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+            out, sc_new = attention_block(
+                p["attn"], hn, cfg, positions=positions, window=None,
+                causal=True, cache=sc, cache_len=cache_len)
+            h = h + out
+            hn = rms_norm(h, p["ln_x"], cfg.norm_eps)
+            if cc is not None:
+                out, _ = attention_block(
+                    p["xattn"], hn, cfg, positions=positions, window=None,
+                    causal=False, cache=cc, cache_len=enc_len,
+                    context=jnp.zeros((b, 1, cfg.d_model), h.dtype))
+                cc_new = cc
+            else:
+                out, cc_new = attention_block(
+                    p["xattn"], hn, cfg, positions=positions, window=None,
+                    causal=False, context=enc_out,
+                    context_positions=enc_positions)
+            h = h + out
+            hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+            h = h + mlp_block(p["mlp"], hn, cfg)
+            return h, (sc_new, cc_new)
+
+        xs = (params["decoder"] if self_cache is None
+              else (params["decoder"], self_cache, cross_cache))
+        x, (sc_out, cc_out) = jax.lax.scan(_maybe_remat(body, cfg), x, xs)
+        return rms_norm(x, params["final_norm"], cfg.norm_eps), sc_out, \
+            cc_out
+
+    def train_logits(self, params, tokens, extras):
+        cfg = self.cfg
+        frames = extras["frames"]
+        enc_out = self.encode(params, frames)
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        enc_positions = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1], dtype=jnp.int32),
+            (b, enc_out.shape[1]))
+        x = embed(params["embedding"], tokens, cfg)
+        x, _, _ = self._decoder_run(params, x, positions, enc_out,
+                                    enc_positions)
+        return unembed(params["embedding"], x, cfg), jnp.zeros(
+            (), jnp.float32)
+
+    def init_cache(self, batch: int, max_len: int,
+                   enc_len: int = 0) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        kv = lambda s: jnp.zeros(
+            (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype)
+        return {"self": {"k": kv(max_len), "v": kv(max_len),
+                         "pos": jnp.full((cfg.n_layers, batch, max_len),
+                                         -1, jnp.int32)},
+                "cross": {"k": kv(enc_len), "v": kv(enc_len)}}
+
+    def prefill(self, params, tokens, extras, max_len: int = 0):
+        """Encode audio, run decoder prompt, emit self+cross caches."""
+        cfg = self.cfg
+        frames = extras["frames"]
+        enc_out = self.encode(params, frames)
+        b, s = tokens.shape
+        f = enc_out.shape[1]
+        max_len = max_len or s
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        enc_positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32),
+                                         (b, f))
+        x = embed(params["embedding"], tokens, cfg)
+
+        def body(h, p):
+            hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+            out, _ = attention_block(p["attn"], hn, cfg,
+                                     positions=positions, window=None,
+                                     causal=True)
+            kproj = jnp.einsum("bsd,de->bse", hn, p["attn"]["wk"]).reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim)
+            vproj = jnp.einsum("bsd,de->bse", hn, p["attn"]["wv"]).reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim)
+            kproj = layers.apply_rope(kproj, positions, cfg.rope_theta)
+            sk = jnp.zeros((b, max_len, cfg.n_kv_heads, cfg.head_dim),
+                           kproj.dtype)
+            sv = jnp.zeros_like(sk)
+            spos = jnp.full((b, max_len), -1, jnp.int32)
+            sk = jax.lax.dynamic_update_slice(sk, kproj, (0, 0, 0, 0))
+            sv = jax.lax.dynamic_update_slice(sv, vproj, (0, 0, 0, 0))
+            spos = jax.lax.dynamic_update_slice(spos, positions, (0, 0))
+            h = h + out
+            hn = rms_norm(h, p["ln_x"], cfg.norm_eps)
+            out, cross_kv = attention_block(
+                p["xattn"], hn, cfg, positions=positions, window=None,
+                causal=False, context=enc_out,
+                context_positions=enc_positions)
+            h = h + out
+            hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+            h = h + mlp_block(p["mlp"], hn, cfg)
+            return h, ({"k": sk, "v": sv, "pos": spos}, cross_kv)
+
+        x, (self_cache, cross_cache) = jax.lax.scan(
+            _maybe_remat(body, cfg), x, params["decoder"])
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        return (unembed(params["embedding"], x, cfg),
+                {"self": self_cache, "cross": cross_cache})
+
+    def decode(self, params, token, cache, cache_len, extras=None):
+        cfg = self.cfg
+        b = token.shape[0]
+        positions = jnp.full((b, 1), cache_len, jnp.int32)
+        x = embed(params["embedding"], token, cfg)
+        slots = cache["self"]["k"].shape[2]
+        write_at = jnp.mod(cache_len, slots)
+        enc_len = jnp.full((b,), cache["cross"]["k"].shape[2], jnp.int32)
+
+        def body(h, xs):
+            p, sc, cc = xs
+            hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+            hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            q = jnp.einsum("bsd,de->bse", hn, p["attn"]["wq"]).reshape(
+                b, 1, hq, hd)
+            k = jnp.einsum("bsd,de->bse", hn, p["attn"]["wk"]).reshape(
+                b, 1, hkv, hd)
+            v = jnp.einsum("bsd,de->bse", hn, p["attn"]["wv"]).reshape(
+                b, 1, hkv, hd)
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+            sk = jax.lax.dynamic_update_slice(
+                sc["k"], k.astype(sc["k"].dtype), (0, write_at, 0, 0))
+            sv = jax.lax.dynamic_update_slice(
+                sc["v"], v.astype(sc["v"].dtype), (0, write_at, 0, 0))
+            spos = jax.lax.dynamic_update_slice(sc["pos"], positions,
+                                                (0, write_at))
+            out = chunked_attention(
+                q, sk, sv, q_positions=positions, kv_positions=spos,
+                causal=True, window=None, sm_scale=hd ** -0.5)
+            h = h + jnp.einsum("bse,ed->bsd", out.reshape(b, 1, hq * hd),
+                               p["attn"]["wo"])
+            hn = rms_norm(h, p["ln_x"], cfg.norm_eps)
+            qx = jnp.einsum("bsd,de->bse", hn, p["xattn"]["wq"]).reshape(
+                b, 1, hq, hd)
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(cc["k"].shape[1], dtype=jnp.int32)[None, :],
+                (b, cc["k"].shape[1]))
+            out = chunked_attention(
+                qx, cc["k"], cc["v"], q_positions=positions,
+                kv_positions=kv_pos, causal=False, window=None,
+                kv_lens=enc_len, sm_scale=hd ** -0.5)
+            h = h + jnp.einsum("bse,ed->bsd", out.reshape(b, 1, hq * hd),
+                               p["xattn"]["wo"])
+            hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+            h = h + mlp_block(p["mlp"], hn, cfg)
+            return h, ({"k": sk, "v": sv, "pos": spos}, cc)
+
+        x, (self_cache, cross_cache) = jax.lax.scan(
+            body, x, (params["decoder"], cache["self"], cache["cross"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return (unembed(params["embedding"], x, cfg),
+                {"self": self_cache, "cross": cross_cache})
+
+
+# ============================================================================
+# family: vlm — llama-3.2-vision backbone (gated cross-attn groups)
+# ============================================================================
+
+VLM_GROUP = 5  # 4 self-attn layers + 1 gated cross-attn layer
+
+
+class VLMCrossDecoder:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        assert cfg.n_layers % VLM_GROUP == 0
+        self.n_groups = cfg.n_layers // VLM_GROUP
+        self.n_self = self.n_groups * (VLM_GROUP - 1)
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        self_stack = _stack_init(ks[0], self.n_self,
+                                 lambda k: _init_attn_layer(k, cfg))
+        self_stack = jax.tree.map(
+            lambda l: l.reshape(self.n_groups, VLM_GROUP - 1,
+                                *l.shape[1:]), self_stack)
+
+        def cross_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": init_rms_norm(cfg.d_model),
+                    "ln2": init_rms_norm(cfg.d_model),
+                    "xattn": init_attention(k1, cfg, cross=True),
+                    "mlp": init_mlp(k2, cfg),
+                    "gate_attn": jnp.zeros((), jnp.float32),
+                    "gate_mlp": jnp.zeros((), jnp.float32)}
+
+        return {"embedding": init_embedding(ks[1], cfg),
+                "self_layers": self_stack,
+                "cross_layers": _stack_init(ks[2], self.n_groups,
+                                            cross_layer),
+                "final_norm": init_rms_norm(cfg.d_model)}
+
+    def _cross_block(self, p, h, positions, img=None, img_positions=None,
+                     cache=None, img_len=None):
+        cfg = self.cfg
+        hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+        if cache is not None:
+            b = h.shape[0]
+            out, kv = attention_block(
+                p["xattn"], hn, cfg, positions=positions, window=None,
+                causal=False, cache=cache, cache_len=img_len,
+                context=jnp.zeros((b, 1, cfg.d_model), h.dtype))
+        else:
+            out, kv = attention_block(
+                p["xattn"], hn, cfg, positions=positions, window=None,
+                causal=False, context=img, context_positions=img_positions)
+        h = h + jnp.tanh(p["gate_attn"]).astype(h.dtype) * out
+        hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+        h = h + (jnp.tanh(p["gate_mlp"]).astype(h.dtype)
+                 * mlp_block(p["mlp"], hn, cfg))
+        return h, kv
+
+    def train_logits(self, params, tokens, extras):
+        cfg = self.cfg
+        img = extras["image_embeds"]          # (B, n_img, d_model)
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        img_positions = jnp.broadcast_to(
+            jnp.arange(img.shape[1], dtype=jnp.int32), (b, img.shape[1]))
+        x = embed(params["embedding"], tokens, cfg)
+        img = img.astype(x.dtype)
+
+        def body(carry, xs):
+            h, aux = carry
+            self_p, cross_p = xs
+
+            def inner(hh, pp):
+                hh, aux_l, _ = _apply_attn_layer(
+                    pp, hh, cfg, window=_FULL_WINDOW, theta=cfg.rope_theta,
+                    positions=positions)
+                return hh, aux_l
+
+            h, auxs = jax.lax.scan(inner, h, self_p)
+            h, _ = self._cross_block(cross_p, h, positions, img=img,
+                                     img_positions=img_positions)
+            return (h, aux + jnp.sum(auxs)), None
+
+        (x, aux), _ = jax.lax.scan(
+            _maybe_remat(body, cfg), (x, jnp.zeros((), jnp.float32)),
+            (params["self_layers"], params["cross_layers"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return unembed(params["embedding"], x, cfg), aux
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        kv = lambda n, s: jnp.zeros(
+            (n, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype)
+        return {
+            "self": {"k": kv(self.n_groups * (VLM_GROUP - 1), max_len)
+                     .reshape(self.n_groups, VLM_GROUP - 1, batch, max_len,
+                              cfg.n_kv_heads, cfg.head_dim),
+                     "v": kv(self.n_groups * (VLM_GROUP - 1), max_len)
+                     .reshape(self.n_groups, VLM_GROUP - 1, batch, max_len,
+                              cfg.n_kv_heads, cfg.head_dim),
+                     "pos": jnp.full((self.n_groups, VLM_GROUP - 1, batch,
+                                      max_len), -1, jnp.int32)},
+            "cross": {"k": kv(self.n_groups, cfg.n_image_tokens),
+                      "v": kv(self.n_groups, cfg.n_image_tokens)},
+        }
+
+    def prefill(self, params, tokens, extras, max_len: int = 0):
+        cfg = self.cfg
+        img = extras["image_embeds"]
+        b, s = tokens.shape
+        max_len = max_len or s
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        img_positions = jnp.broadcast_to(
+            jnp.arange(img.shape[1], dtype=jnp.int32), (b, img.shape[1]))
+        x = embed(params["embedding"], tokens, cfg)
+        img = img.astype(x.dtype)
+
+        def body(h, xs):
+            self_p, cross_p = xs
+
+            def inner(hh, pp):
+                hn = rms_norm(hh, pp["ln1"], cfg.norm_eps)
+                out, _ = attention_block(
+                    pp["attn"], hn, cfg, positions=positions,
+                    window=None, causal=True)
+                kproj = jnp.einsum("bsd,de->bse", hn,
+                                   pp["attn"]["wk"]).reshape(
+                    b, s, cfg.n_kv_heads, cfg.head_dim)
+                vproj = jnp.einsum("bsd,de->bse", hn,
+                                   pp["attn"]["wv"]).reshape(
+                    b, s, cfg.n_kv_heads, cfg.head_dim)
+                kproj = layers.apply_rope(kproj, positions, cfg.rope_theta)
+                sk = jnp.zeros((b, max_len, cfg.n_kv_heads, cfg.head_dim),
+                               kproj.dtype)
+                sv = jnp.zeros_like(sk)
+                spos = jnp.full((b, max_len), -1, jnp.int32)
+                sk = jax.lax.dynamic_update_slice(sk, kproj, (0, 0, 0, 0))
+                sv = jax.lax.dynamic_update_slice(sv, vproj, (0, 0, 0, 0))
+                spos = jax.lax.dynamic_update_slice(spos, positions, (0, 0))
+                hh = hh + out
+                hn = rms_norm(hh, pp["ln2"], cfg.norm_eps)
+                hh = hh + mlp_block(pp["mlp"], hn, cfg)
+                return hh, {"k": sk, "v": sv, "pos": spos}
+
+            h, self_cache = jax.lax.scan(inner, h, self_p)
+            h, cross_kv = self._cross_block(cross_p, h, positions, img=img,
+                                            img_positions=img_positions)
+            return h, (self_cache, cross_kv)
+
+        x, (self_cache, cross_cache) = jax.lax.scan(
+            _maybe_remat(body, cfg), x,
+            (params["self_layers"], params["cross_layers"]))
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        return (unembed(params["embedding"], x, cfg),
+                {"self": self_cache, "cross": cross_cache})
+
+    def decode(self, params, token, cache, cache_len, extras=None):
+        cfg = self.cfg
+        b = token.shape[0]
+        positions = jnp.full((b, 1), cache_len, jnp.int32)
+        x = embed(params["embedding"], token, cfg)
+        slots = cache["self"]["k"].shape[3]
+        write_at = jnp.mod(cache_len, slots)
+        img_len = jnp.full((b,), cache["cross"]["k"].shape[2], jnp.int32)
+
+        def body(h, xs):
+            self_p, cross_p, sc, cc = xs
+
+            def inner(hh, inner_xs):
+                pp, c_in = inner_xs
+                hn = rms_norm(hh, pp["ln1"], cfg.norm_eps)
+                hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+                q = jnp.einsum("bsd,de->bse", hn, pp["attn"]["wq"]).reshape(
+                    b, 1, hq, hd)
+                k = jnp.einsum("bsd,de->bse", hn, pp["attn"]["wk"]).reshape(
+                    b, 1, hkv, hd)
+                v = jnp.einsum("bsd,de->bse", hn, pp["attn"]["wv"]).reshape(
+                    b, 1, hkv, hd)
+                q = layers.apply_rope(q, positions, cfg.rope_theta)
+                k = layers.apply_rope(k, positions, cfg.rope_theta)
+                sk = jax.lax.dynamic_update_slice(
+                    c_in["k"], k.astype(c_in["k"].dtype),
+                    (0, write_at, 0, 0))
+                sv = jax.lax.dynamic_update_slice(
+                    c_in["v"], v.astype(c_in["v"].dtype),
+                    (0, write_at, 0, 0))
+                spos = jax.lax.dynamic_update_slice(c_in["pos"], positions,
+                                                    (0, write_at))
+                out = chunked_attention(
+                    q, sk, sv, q_positions=positions, kv_positions=spos,
+                    causal=True, window=None, sm_scale=hd ** -0.5)
+                hh = hh + jnp.einsum(
+                    "bse,ed->bsd", out.reshape(b, 1, hq * hd),
+                    pp["attn"]["wo"])
+                hn = rms_norm(hh, pp["ln2"], cfg.norm_eps)
+                hh = hh + mlp_block(pp["mlp"], hn, cfg)
+                return hh, {"k": sk, "v": sv, "pos": spos}
+
+            h, self_cache = jax.lax.scan(inner, h, (self_p, sc))
+            h, _ = self._cross_block(cross_p, h, positions, cache=cc,
+                                     img_len=img_len)
+            return h, (self_cache, cc)
+
+        x, (self_cache, cross_cache) = jax.lax.scan(
+            body, x, (params["self_layers"], params["cross_layers"],
+                      cache["self"], cache["cross"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return (unembed(params["embedding"], x, cfg),
+                {"self": self_cache, "cross": cross_cache})
+
+
+# ============================================================================
+# dispatch
+# ============================================================================
+
+_FAMILIES = {
+    "dense": UniformDecoder,
+    "moe": UniformDecoder,
+    "hybrid": ZambaHybrid,
+    "ssm": XLSTMStack,
+    "encdec": WhisperEncDec,
+    "vlm": VLMCrossDecoder,
+}
+
+
+def build_model(cfg):
+    try:
+        return _FAMILIES[cfg.family](cfg)
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} "
+                         f"(known: {sorted(_FAMILIES)})") from None

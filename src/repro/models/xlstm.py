@@ -1,0 +1,247 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scan).
+
+Follows the structure of arXiv:2405.04517 with one documented numerical
+simplification (DESIGN.md §Arch-applicability): the mLSTM input gate uses
+sigmoid instead of exp, which removes the cross-timestep max-stabilizer
+and lets the recurrence run in the same chunked matmul form as SSD —
+the TPU-native mapping. Memory/FLOP shape matches xlstm-350m.
+
+mLSTM recurrence (per head, matrix memory C: (dk, dv), normalizer n):
+    C_t = f_t C_{t-1} + i_t k_t v_t^T
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t C_t) / max(|q_t . n_t|, 1)
+Chunkwise: identical algebra to a gated-linear-attention chunk scan.
+
+sLSTM: scalar memory per head-channel with recurrent gate feedback —
+inherently sequential; implemented as lax.scan over time (the paper keeps
+sLSTM in only a fraction of layers, so the sequential tail is small).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_rms_norm, rms_norm
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model     # value dim
+    h = cfg.n_heads
+    dv = d_in // h
+    dk = cfg.d_model // h
+    return d_in, h, dk, dv
+
+
+# ----------------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d_in, h, dk, dv = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, h * dk, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, h * dk, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, d_in, dtype),
+        "wgate": dense_init(ks[3], cfg.d_model, 2 * h, dtype),  # i,f logits
+        "wog": dense_init(ks[4], cfg.d_model, d_in, dtype),
+        "out_norm": init_rms_norm(d_in),
+        "wo": dense_init(ks[5], d_in, cfg.d_model, dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, log_f, i_gate, chunk: int, init_state=None):
+    """q,k: (B,S,H,dk) f32; v: (B,S,H,dv); log_f: (B,S,H) <= 0; i: (B,S,H).
+
+    Returns h: (B,S,H,dv), final (C: (B,H,dk,dv), n: (B,H,dk)).
+    """
+    bsz, s, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s) if s % chunk else chunk
+    pad = (-s) % chunk
+    if pad:  # log_f=0 (decay 1) and i=0 on padding: state unaffected
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)))
+    s_real, s = s, s + pad
+    nc = s // chunk
+    cq = lambda t: t.reshape(bsz, nc, chunk, *t.shape[2:])
+    qc, kc, vc = cq(q), cq(k), cq(v)
+    lf, ig = cq(log_f), cq(i_gate)
+
+    cum = jnp.cumsum(lf, axis=2)                       # (B,nc,Q,H)
+    total = cum[:, :, -1]                              # (B,nc,H)
+
+    # intra-chunk: score[t,s] = (q_t.k_s) * exp(cum_t - cum_s) * i_s, s<=t
+    qk = jnp.einsum("bcthd,bcshd->bchts", qc, kc)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    # mask BEFORE exp (see mamba2.ssd_chunked): avoids inf * 0 nan-grads
+    dec = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    w = (qk * dec.transpose(0, 1, 4, 2, 3)
+         * ig.transpose(0, 1, 3, 2)[:, :, :, None, :])
+    h_intra = jnp.einsum("bchts,bcshd->bcthd", w, vc)
+    # q_t . n_t intra part: w already contains q.k, so just sum over s
+    qn_intra = jnp.sum(w, axis=-1).transpose(0, 1, 3, 2)   # (B,nc,Q,H)
+
+    # chunk-end state contributions
+    state_c = jnp.einsum("bcsh,bcshk,bcshv->bchkv",
+                         ig * jnp.exp(total[:, :, None, :] - cum), kc, vc)
+    norm_c = jnp.einsum("bcsh,bcshk->bchk",
+                        ig * jnp.exp(total[:, :, None, :] - cum), kc)
+
+    def step(carry, inp):
+        c_st, n_st = carry
+        tot, sc, nc_ = inp
+        dec_t = jnp.exp(tot)[:, :, None, None]
+        new_c = dec_t * c_st + sc
+        new_n = jnp.exp(tot)[:, :, None] * n_st + nc_
+        return (new_c, new_n), (c_st, n_st)
+
+    init = (jnp.zeros((bsz, h, dk, dv), jnp.float32),
+            jnp.zeros((bsz, h, dk), jnp.float32)) if init_state is None \
+        else init_state
+    (c_fin, n_fin), (c_prev, n_prev) = jax.lax.scan(
+        step, init, (total.transpose(1, 0, 2),
+                     state_c.transpose(1, 0, 2, 3, 4),
+                     norm_c.transpose(1, 0, 2, 3)))
+    c_prev = c_prev.transpose(1, 0, 2, 3, 4)           # (B,nc,H,dk,dv)
+    n_prev = n_prev.transpose(1, 0, 2, 3)              # (B,nc,H,dk)
+
+    dec_q = jnp.exp(cum)                               # (B,nc,Q,H)
+    h_inter = jnp.einsum("bcthd,bchdv,bcth->bcthv", qc, c_prev, dec_q)
+    n_inter = jnp.einsum("bcthd,bchd,bcth->bcth", qc, n_prev, dec_q)
+
+    h_raw = (h_intra + h_inter).reshape(bsz, s, h, dv)[:, :s_real]
+    qn = (qn_intra + n_inter).reshape(bsz, s, h)[:, :s_real]
+    denom = jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+    return h_raw / denom, (c_fin, n_fin)
+
+
+def mlstm_block(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    bsz, s, _ = x.shape
+    d_in, h, dk, dv = _dims(cfg)
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(bsz, s, h, dk)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(bsz, s, h, dk)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(bsz, s, h, dv)
+    gates = jnp.einsum("bsd,de->bse", x, p["wgate"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gates[..., :h])
+    i_g = jax.nn.sigmoid(gates[..., h:])
+    hidden, _ = _mlstm_chunked(
+        q.astype(jnp.float32) * (dk ** -0.5), k.astype(jnp.float32),
+        v.astype(jnp.float32), log_f, i_g, cfg.ssm_chunk)
+    hidden = hidden.reshape(bsz, s, d_in).astype(x.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wog"]))
+    hidden = rms_norm(hidden, p["out_norm"], cfg.norm_eps) * og
+    return jnp.einsum("bse,ed->bsd", hidden, p["wo"])
+
+
+def init_mlstm_state(cfg, batch: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    d_in, h, dk, dv = _dims(cfg)
+    return (jnp.zeros((batch, h, dk, dv), jnp.float32),
+            jnp.zeros((batch, h, dk), jnp.float32))
+
+
+def mlstm_decode(p: Params, x: jnp.ndarray, state, cfg):
+    """x: (B, 1, D); state = (C, n)."""
+    bsz = x.shape[0]
+    d_in, h, dk, dv = _dims(cfg)
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])[:, 0].reshape(bsz, h, dk)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])[:, 0].reshape(bsz, h, dk)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])[:, 0].reshape(bsz, h, dv)
+    gates = jnp.einsum("bsd,de->bse", x,
+                       p["wgate"])[:, 0].astype(jnp.float32)
+    f_g = jax.nn.sigmoid(gates[..., :h])
+    i_g = jax.nn.sigmoid(gates[..., h:])
+    c_st, n_st = state
+    qf = q.astype(jnp.float32) * (dk ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    c_new = (f_g[:, :, None, None] * c_st
+             + i_g[:, :, None, None] * kf[..., None] * vf[:, :, None, :])
+    n_new = f_g[:, :, None] * n_st + i_g[:, :, None] * kf
+    h_raw = jnp.einsum("bhk,bhkv->bhv", qf, c_new)
+    qn = jnp.sum(qf * n_new, axis=-1)
+    hidden = h_raw / jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+    hidden = hidden.reshape(bsz, 1, d_in).astype(x.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wog"]))
+    hidden = rms_norm(hidden, p["out_norm"], cfg.norm_eps) * og
+    return jnp.einsum("bse,ed->bsd", hidden, p["wo"]), (c_new, n_new)
+
+
+# ----------------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        # 4 gates (i, f, z, o) from input; per-head recurrent R (block-diag)
+        "wx": dense_init(ks[0], d, 4 * d, dtype),
+        "r": (jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32)
+              * (dh ** -0.5)).astype(dtype),
+        "out_norm": init_rms_norm(d),
+        "wo": dense_init(ks[2], d, cfg.d_model, dtype),
+    }
+
+
+def init_slstm_state(cfg, batch: int):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "m": z(), "h": z()}
+
+
+def _slstm_step(p, cfg, x_t, st):
+    """x_t: (B, 4D) pre-projected gates; st: state dict of (B, D)."""
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    bsz = x_t.shape[0]
+    h_prev = st["h"].reshape(bsz, h, dh)
+    rec = jnp.einsum("bhd,hde->bhe", h_prev,
+                     p["r"].astype(jnp.float32)).reshape(bsz, 4 * d)
+    pre = x_t + rec
+    i_t, f_t, z_t, o_t = jnp.split(pre, 4, axis=-1)
+    # exp input/forget gates with max-stabilizer (xLSTM eq. 15-17)
+    m_new = jnp.maximum(f_t + st["m"], i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + st["m"] - m_new)
+    c_new = f_p * st["c"] + i_p * jnp.tanh(z_t)
+    n_new = f_p * st["n"] + i_p
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_block(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    bsz, s, d = x.shape
+    xg = jnp.einsum("bsd,de->bse", x, p["wx"]).astype(jnp.float32)
+
+    def step(st, x_t):
+        new = _slstm_step(p, cfg, x_t, st)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, init_slstm_state(cfg, bsz),
+                         xg.transpose(1, 0, 2))
+    hidden = hs.transpose(1, 0, 2).astype(x.dtype)
+    hidden = rms_norm(hidden, p["out_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", hidden, p["wo"])
+
+
+def slstm_decode(p: Params, x: jnp.ndarray, state, cfg):
+    xg = jnp.einsum("bsd,de->bse", x, p["wx"])[:, 0].astype(jnp.float32)
+    new = _slstm_step(p, cfg, xg, state)
+    hidden = new["h"][:, None, :].astype(x.dtype)
+    hidden = rms_norm(hidden, p["out_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", hidden, p["wo"]), new

@@ -1,0 +1,197 @@
+"""KV-cache slab pool with LEARNED chunk classes — the paper's technique
+as a serving-runtime feature.
+
+The mapping (DESIGN.md §2): a serving runtime allocates KV-cache space
+per request; request context lengths are the "item sizes", the KV pool
+is the memory, and rounding a request up to its allocation is internal
+fragmentation of HBM. vLLM-style paging buys ~zero fragmentation with
+per-page indirection; on TPU, contiguous DMA is strongly preferred, so
+this pool allocates each request ONE contiguous chunk whose size comes
+from a slab-class schedule *learned from the observed request-length
+distribution* (SlabPolicy / the paper's algorithm). The learned schedule
+bounds the fragmentation that contiguity would otherwise cost; the
+contiguous layout is what `kernels/slab_attention.py` streams through
+VMEM with zero indirection.
+
+Implementation notes:
+  * allocation granularity is ALIGN tokens (kernel tile = 128), so the
+    learner fits on the align-quantized length histogram;
+  * per-class free lists + bump pointer, O(1) alloc/free — the memcached
+    discipline, in tokens instead of bytes;
+  * ``refit()`` re-learns classes online from the sliding histogram of
+    observed lengths (the paper's "analyse the pattern of sizes
+    previously entered"); pools refit at a configurable cadence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import SlabPolicy, size_histogram, waste_exact
+
+ALIGN = 128  # tokens; matches the Pallas kernel's BLOCK_T
+
+
+def quantize_lengths(lengths: np.ndarray, align: int = ALIGN) -> np.ndarray:
+    """Round lengths up to the allocation grid (the learner's item size)."""
+    lengths = np.asarray(lengths, dtype=np.int64)
+    return ((lengths + align - 1) // align) * align
+
+
+@dataclasses.dataclass
+class PoolStats:
+    active_requests: int
+    pool_tokens: int
+    allocated_tokens: int      # sum of chunk sizes of live allocations
+    used_tokens: int           # sum of true KV lengths
+    free_tokens: int
+    n_failed: int
+
+    @property
+    def waste_tokens(self) -> int:
+        return self.allocated_tokens - self.used_tokens
+
+    @property
+    def utilization(self) -> float:
+        return self.used_tokens / max(self.allocated_tokens, 1)
+
+    @property
+    def waste_fraction(self) -> float:
+        return self.waste_tokens / max(self.allocated_tokens, 1)
+
+
+@dataclasses.dataclass
+class Allocation:
+    request_id: int
+    start: int          # pool token offset (ALIGN-multiple)
+    chunk: int          # slab class size (tokens)
+    length: int         # true KV length
+
+
+class KVSlabPool:
+    """Contiguous KV pool with slab-class allocation."""
+
+    def __init__(self, pool_tokens: int, chunk_classes, *,
+                 align: int = ALIGN):
+        self.pool_tokens = int(pool_tokens)
+        self.align = align
+        self.set_classes(chunk_classes)
+        self._bump = 0
+        self._free: Dict[int, List[int]] = defaultdict(list)
+        self._live: Dict[int, Allocation] = {}
+        self.n_failed = 0
+        self.observed_lengths: List[int] = []
+
+    # -- class management ----------------------------------------------------
+    def set_classes(self, chunk_classes) -> None:
+        cc = sorted(int(c) for c in chunk_classes)
+        if any(c % self.align for c in cc):
+            raise ValueError(f"classes must be multiples of {self.align}")
+        self.chunk_classes = cc
+
+    def class_for(self, length: int) -> Optional[int]:
+        for c in self.chunk_classes:            # K is small
+            if c >= length:
+                return c
+        return None
+
+    # -- alloc/free ------------------------------------------------------------
+    def alloc(self, request_id: int, length: int) -> Optional[Allocation]:
+        self.observed_lengths.append(length)
+        chunk = self.class_for(length)
+        if chunk is None:
+            self.n_failed += 1
+            return None
+        if self._free[chunk]:
+            start = self._free[chunk].pop()
+        elif self._bump + chunk <= self.pool_tokens:
+            start = self._bump
+            self._bump += chunk
+        else:
+            self.n_failed += 1
+            return None
+        a = Allocation(request_id, start, chunk, length)
+        self._live[request_id] = a
+        return a
+
+    def extend(self, request_id: int, new_length: int
+               ) -> Optional[Allocation]:
+        """Grow a request's KV (decode). Within-chunk growth is free; a
+        class overflow reallocates into the next class (copy cost is the
+        caller's — it shows up in the scheduler's accounting)."""
+        a = self._live[request_id]
+        if new_length <= a.chunk:
+            a.length = new_length
+            return a
+        self.free(request_id)
+        return self.alloc(request_id, new_length)
+
+    def free(self, request_id: int) -> None:
+        a = self._live.pop(request_id)
+        self._free[a.chunk].append(a.start)
+
+    def allocation(self, request_id: int) -> Allocation:
+        return self._live[request_id]
+
+    # -- learning -------------------------------------------------------------
+    def refit(self, k: Optional[int] = None, *, method: str = "dp",
+              policy: Optional[SlabPolicy] = None) -> np.ndarray:
+        """Re-learn chunk classes from observed lengths (paper's loop).
+
+        Only safe when the pool is empty or during a maintenance window
+        (live allocations keep their old chunks; new allocations use the
+        new schedule — memcached's own constraint when slab_sizes change
+        requires a restart, we allow hot refit for new chunks only).
+        """
+        if not self.observed_lengths:
+            return np.asarray(self.chunk_classes)
+        k = k or len(self.chunk_classes)
+        q = quantize_lengths(np.asarray(self.observed_lengths), self.align)
+        support, freqs = size_histogram(q)
+        policy = policy or SlabPolicy(page_size=1 << 22, min_chunk=self.align)
+        sched = policy.fit(support, freqs, k, method=method,
+                           baseline=np.asarray(self.chunk_classes))
+        new = quantize_lengths(sched.chunk_sizes, self.align)
+        self.set_classes(np.unique(new))
+        return np.unique(new)
+
+    # -- measurement ------------------------------------------------------------
+    def stats(self) -> PoolStats:
+        allocated = sum(a.chunk for a in self._live.values())
+        used = sum(a.length for a in self._live.values())
+        free_listed = sum(c * len(v) for c, v in self._free.items())
+        return PoolStats(
+            active_requests=len(self._live),
+            pool_tokens=self.pool_tokens,
+            allocated_tokens=allocated,
+            used_tokens=used,
+            free_tokens=self.pool_tokens - self._bump + free_listed,
+            n_failed=self.n_failed)
+
+    def kernel_args(self, request_ids) -> Tuple[np.ndarray, np.ndarray]:
+        """(starts, lens) int32 arrays for slab_decode_attention."""
+        starts = np.asarray([self._live[r].start for r in request_ids],
+                            dtype=np.int32)
+        lens = np.asarray([self._live[r].length for r in request_ids],
+                          dtype=np.int32)
+        return starts, lens
+
+    @property
+    def max_chunk_tokens(self) -> int:
+        return max(self.chunk_classes)
+
+
+def default_pow2_classes(min_chunk: int = ALIGN,
+                         max_chunk: int = 1 << 17) -> np.ndarray:
+    """The un-learned baseline: power-of-two chunk classes (the common
+    'just double it' allocator — analogous to memcached's 1.25-geometric
+    default, at allocator-friendly granularity)."""
+    out = []
+    c = min_chunk
+    while c <= max_chunk:
+        out.append(c)
+        c *= 2
+    return np.asarray(out, dtype=np.int64)

@@ -1,0 +1,70 @@
+"""Serving steps: prefill + batched decode with sampling.
+
+``make_serve_fns`` wraps any zoo model into jittable prefill/decode; the
+decode step is what the dry-run lowers for the decode_32k / long_500k
+cells. Sampling supports greedy and temperature; generation loops live
+in examples/ and launch/serve.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_logits(key, logits: jnp.ndarray, *,
+                  temperature: float = 0.0) -> jnp.ndarray:
+    """logits: (B, 1, V) -> (B, 1) token ids."""
+    logits = logits[:, -1].astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1)[:, None].astype(jnp.int32)
+
+
+def make_serve_fns(model, *, temperature: float = 0.0):
+    """Returns (prefill_fn, decode_fn), both jittable.
+
+    prefill_fn(params, tokens, extras, max_len) -> (next_token, cache)
+    decode_fn(params, token, cache, cache_len, extras, key)
+        -> (next_token, logits, cache)
+    """
+
+    def prefill_fn(params, tokens, extras, max_len: int):
+        logits, cache = (model.prefill(params, tokens, extras, max_len)
+                         if max_len else
+                         model.prefill(params, tokens, extras))
+        tok = sample_logits(jax.random.PRNGKey(0), logits[:, -1:],
+                            temperature=0.0)
+        return tok, cache
+
+    def decode_fn(params, token, cache, cache_len, extras, key):
+        logits, cache = model.decode(params, token, cache, cache_len,
+                                     extras)
+        tok = sample_logits(key, logits, temperature=temperature)
+        return tok, logits, cache
+
+    return prefill_fn, decode_fn
+
+
+def generate(model, params, prompt: jnp.ndarray, *, steps: int,
+             extras: Optional[Dict[str, Any]] = None, max_len: int = 0,
+             temperature: float = 0.0, seed: int = 0,
+             jit: bool = True) -> jnp.ndarray:
+    """Greedy/temperature generation loop (host-side loop, jitted steps)."""
+    prefill_fn, decode_fn = make_serve_fns(model, temperature=temperature)
+    if jit:
+        decode_fn = jax.jit(decode_fn)
+    b, s = prompt.shape
+    max_len = max_len or (s + steps)
+    tok, cache = prefill_fn(params, prompt, extras, max_len)
+    out = [tok]
+    key = jax.random.PRNGKey(seed)
+    for i in range(steps - 1):
+        key, sub = jax.random.split(key)
+        tok, _, cache = decode_fn(params, tok, cache,
+                                  jnp.int32(s + i), extras, sub)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

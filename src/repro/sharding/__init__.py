@@ -1,0 +1,6 @@
+"""Sharding rules for params, activations, and caches."""
+from repro.sharding.rules import (batch_spec, cache_spec, param_sharding,
+                                  param_spec, to_shardings, zero_spec)
+
+__all__ = ["batch_spec", "cache_spec", "param_sharding", "param_spec",
+           "to_shardings", "zero_spec"]

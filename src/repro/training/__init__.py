@@ -1,0 +1,15 @@
+"""Training substrate: optimizer, train step, checkpoints, elasticity."""
+from repro.training.checkpoint import CheckpointManager
+from repro.training.elastic import (StepTimer, remesh, replace_state_on_mesh,
+                                    rescale_batch)
+from repro.training.optimizer import (AdamWConfig, OptState, adamw_update,
+                                      init_opt_state, lr_schedule)
+from repro.training.train_step import (TrainConfig, TrainState,
+                                       init_train_state, lm_loss,
+                                       make_train_step)
+
+__all__ = ["CheckpointManager", "StepTimer", "remesh",
+           "replace_state_on_mesh", "rescale_batch", "AdamWConfig",
+           "OptState", "adamw_update", "init_opt_state", "lr_schedule",
+           "TrainConfig", "TrainState", "init_train_state", "lm_loss",
+           "make_train_step"]

@@ -1,0 +1,111 @@
+"""Elastic scaling + straggler mitigation.
+
+Node-failure story (1000+-node posture):
+  1. Heartbeat/step-time watchdog flags a dead or straggling host.
+  2. The job restarts on the surviving topology (possibly fewer or more
+     data-parallel replicas — the model axis is fixed by the config).
+  3. ``remesh()`` rebuilds the mesh for the new device count and
+     re-places the last checkpoint onto it (CheckpointManager.restore
+     already loads host-side, so any source topology restores onto any
+     target topology).
+  4. ``rescale_batch()`` re-derives per-replica batch so the *global*
+     batch (and thus the learning-rate schedule) is preserved when the
+     data axis shrinks/grows.
+
+``StepTimer`` implements straggler detection: an EMA + deviation gate
+flags steps slower than mean + k*dev; persistent stragglers trigger the
+caller's policy (checkpoint-now, drop-host, or alert).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.sharding import param_spec, to_shardings
+
+
+def remesh(devices: Optional[list] = None, *, model_parallel: int,
+           pod_shape: Optional[Tuple[int, int]] = None) -> Mesh:
+    """Build the largest legal mesh for the surviving device set.
+
+    data axis = n_devices // model_parallel (model axis is fixed by the
+    checkpointed parameter layout; data/pod axes absorb topology change).
+    """
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    if n % model_parallel:
+        usable = (n // model_parallel) * model_parallel
+        devices = devices[:usable]
+        n = usable
+    data = n // model_parallel
+    if pod_shape is not None:
+        pods, per_pod = pod_shape
+        if pods * per_pod != data:
+            raise ValueError(f"pod_shape {pod_shape} != data {data}")
+        arr = np.asarray(devices).reshape(pods, per_pod, model_parallel)
+        return Mesh(arr, ("pod", "data", "model"))
+    arr = np.asarray(devices).reshape(data, model_parallel)
+    return Mesh(arr, ("data", "model"))
+
+
+def replace_state_on_mesh(state: Any, mesh: Mesh) -> Any:
+    """Re-place a host-restored train state onto a (new) mesh."""
+    spec = param_spec(state, mesh)
+    return jax.tree.map(jax.device_put, state,
+                        to_shardings(spec, mesh))
+
+
+def rescale_batch(global_batch: int, mesh: Mesh) -> int:
+    """Per-data-replica batch preserving the global batch size."""
+    data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    if global_batch % data:
+        raise ValueError(
+            f"global batch {global_batch} not divisible by data "
+            f"parallelism {data}; adjust microbatching")
+    return global_batch // data
+
+
+@dataclasses.dataclass
+class StepTimer:
+    """EMA-based straggler detector for the training loop."""
+
+    alpha: float = 0.05
+    threshold: float = 4.0   # flag if step > mean + threshold * dev
+    warmup: int = 10
+
+    _mean: float = 0.0
+    _dev: float = 0.0
+    _count: int = 0
+    _t0: float = 0.0
+    stragglers: List[Tuple[int, float]] = dataclasses.field(
+        default_factory=list)
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> bool:
+        """Record a step; returns True if it was a straggler."""
+        dt = time.perf_counter() - self._t0
+        self._count += 1
+        if self._count <= self.warmup:
+            self._mean = (self._mean * (self._count - 1) + dt) / self._count
+            self._dev = max(self._dev, abs(dt - self._mean))
+            return False
+        is_straggler = dt > self._mean + self.threshold * max(
+            self._dev, 1e-4)
+        if is_straggler:
+            self.stragglers.append((step, dt))
+        else:  # only update stats on healthy steps
+            self._mean = (1 - self.alpha) * self._mean + self.alpha * dt
+            self._dev = ((1 - self.alpha) * self._dev
+                         + self.alpha * abs(dt - self._mean))
+        return is_straggler
+
+    @property
+    def mean_step_time(self) -> float:
+        return self._mean

@@ -1,0 +1,99 @@
+"""Checkpointing (atomicity, retention, async) + elastic utilities."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import (CheckpointManager, StepTimer, rescale_batch)
+
+
+@pytest.fixture
+def tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16),
+                  "step": jnp.int32(7)}}
+
+
+def test_save_restore_roundtrip(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, tree)
+    out = mgr.restore(tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_async_save(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_latest_step_and_retention(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 5, 9):
+        mgr.save(s, tree)
+    assert mgr.latest_step() == 9
+    dirs = sorted(os.listdir(tmp_path))
+    assert dirs == ["step_00000005", "step_00000009"]
+
+
+def test_crashed_writer_ignored(tmp_path, tree):
+    """A half-written .tmp directory must never be picked up by restore."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, tree)
+    # simulate a crash mid-write of step 3
+    crash = os.path.join(str(tmp_path), "step_00000003.tmp")
+    os.makedirs(crash)
+    with open(os.path.join(crash, "a.npy"), "wb") as f:
+        f.write(b"garbage")
+    assert mgr.latest_step() == 2
+    out = mgr.restore(tree)
+    assert out is not None
+
+
+def test_restore_shape_mismatch_raises(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    bad = dict(tree, a=jnp.zeros((5, 5)))
+    with pytest.raises(ValueError, match="shape"):
+        mgr.restore(bad)
+
+
+def test_manifest_contents(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    d = mgr.save(4, tree, extra={"loss": 1.5})
+    with open(os.path.join(d, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["step"] == 4
+    assert man["extra"]["loss"] == 1.5
+    assert "a" in man["leaves"]
+
+
+def test_rescale_batch():
+    class FakeMesh:
+        shape = {"data": 8, "model": 2}
+    assert rescale_batch(256, FakeMesh()) == 32
+    with pytest.raises(ValueError):
+        rescale_batch(255, FakeMesh())
+
+
+def test_step_timer_flags_stragglers(monkeypatch):
+    timer = StepTimer(warmup=3, threshold=3.0)
+    times = iter([0.0, 1.0,   # step 1: 1s
+                  2.0, 3.0,   # step 2
+                  4.0, 5.0,   # step 3 (warmup done)
+                  6.0, 7.0,   # step 4: normal
+                  8.0, 30.0])  # step 5: straggler (22s)
+    monkeypatch.setattr("time.perf_counter", lambda: next(times))
+    flags = []
+    for s in range(5):
+        timer.start()
+        flags.append(timer.stop(s))
+    assert flags == [False, False, False, False, True]
+    assert timer.stragglers and timer.stragglers[0][0] == 4

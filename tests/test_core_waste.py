@@ -1,0 +1,115 @@
+"""Unit + property tests for the waste objective."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PAGE_SIZE, default_waste_fraction,
+                        per_class_waste_exact, size_histogram,
+                        utilization_exact, waste_batch_jax, waste_exact,
+                        waste_jax)
+
+
+def test_waste_exact_simple():
+    # items: 10 (x3), 20 (x1); chunks [16, 32]
+    # 10 -> 16 (waste 6 each), 20 -> 32 (waste 12)
+    support, freqs = np.array([10, 20]), np.array([3, 1])
+    assert waste_exact([16, 32], support, freqs) == 3 * 6 + 12
+
+
+def test_waste_exact_boundary_fit():
+    # an item exactly equal to a chunk size wastes nothing
+    support, freqs = np.array([16]), np.array([5])
+    assert waste_exact([16, 32], support, freqs) == 0
+
+
+def test_unstorable_penalized_as_full_page():
+    support, freqs = np.array([100]), np.array([2])
+    w = waste_exact([50], support, freqs)
+    assert w == 2 * (PAGE_SIZE - 100)
+
+
+def test_waste_order_invariant():
+    support, freqs = np.array([10, 50, 90]), np.array([1, 2, 3])
+    assert (waste_exact([96, 32, 64], support, freqs)
+            == waste_exact([32, 64, 96], support, freqs))
+
+
+def test_utilization_and_fraction():
+    support, freqs = np.array([10]), np.array([10])
+    # 10 items of 10 bytes in 20-byte chunks -> 50% utilization
+    assert utilization_exact([20], support, freqs) == pytest.approx(0.5)
+    assert default_waste_fraction([20], support, freqs) == pytest.approx(1.0)
+
+
+def test_per_class_waste_sums_to_total():
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(1, 1000, size=5000)
+    support, freqs = size_histogram(sizes)
+    chunks = [128, 256, 512, 800]
+    per = per_class_waste_exact(chunks, support, freqs)
+    assert per.sum() == waste_exact(chunks, support, freqs)
+
+
+@hypothesis.given(
+    sizes=st.lists(st.integers(1, 4096), min_size=1, max_size=200),
+    chunks=st.lists(st.integers(1, 8192), min_size=1, max_size=8,
+                    unique=True),
+)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_jax_matches_exact(sizes, chunks):
+    """float32 JAX objective agrees with the int64 oracle (values here are
+    far below the float32 integer-exact range 2^24)."""
+    support, freqs = size_histogram(np.asarray(sizes))
+    w_np = waste_exact(chunks, support, freqs, page_size=8192)
+    w_j = waste_jax(jnp.asarray(chunks, dtype=jnp.int32),
+                    jnp.asarray(support, dtype=jnp.int32),
+                    jnp.asarray(freqs, dtype=jnp.float32), page_size=8192)
+    assert float(w_j) == w_np
+
+
+@hypothesis.given(
+    sizes=st.lists(st.integers(1, 2048), min_size=1, max_size=100),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_batch_matches_single(sizes, seed):
+    rng = np.random.default_rng(seed)
+    support, freqs = size_histogram(np.asarray(sizes))
+    batch = rng.integers(1, 4096, size=(5, 4)).astype(np.int32)
+    got = waste_batch_jax(jnp.asarray(batch),
+                          jnp.asarray(support, dtype=jnp.int32),
+                          jnp.asarray(freqs, dtype=jnp.float32),
+                          page_size=4096)
+    for b in range(5):
+        want = waste_exact(batch[b], support, freqs, page_size=4096)
+        assert float(got[b]) == want
+
+
+@hypothesis.given(
+    sizes=st.lists(st.integers(1, 4096), min_size=1, max_size=100),
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_adding_a_class_never_hurts(sizes):
+    """Property: refining a schedule with an extra class cannot increase
+    waste (monotonicity of the objective in the chunk set)."""
+    support, freqs = size_histogram(np.asarray(sizes))
+    base = [1024, 4096]
+    refined = [512, 1024, 4096]
+    assert (waste_exact(refined, support, freqs)
+            <= waste_exact(base, support, freqs))
+
+
+@hypothesis.given(
+    sizes=st.lists(st.integers(1, 1000), min_size=1, max_size=100),
+    shift=st.integers(1, 64),
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_waste_nonnegative_and_bounded(sizes, shift):
+    support, freqs = size_histogram(np.asarray(sizes))
+    chunks = [int(support.max()) + shift]
+    w = waste_exact(chunks, support, freqs)
+    # every item wastes at least `shift` and at most (range + shift) bytes
+    assert shift * freqs.sum() <= w
+    assert w <= (int(support.max()) - int(support.min()) + shift) * freqs.sum()

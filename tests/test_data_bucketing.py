@@ -1,0 +1,85 @@
+"""Data pipeline + learned length-bucket tests."""
+import numpy as np
+import pytest
+
+from repro.core import sample_lognormal_sizes
+from repro.data import (BucketScheme, DataConfig, Prefetcher,
+                        SyntheticCorpus, batch_by_bucket, fit_buckets,
+                        fit_corpus_buckets, make_batches, padding_waste,
+                        pow2_buckets)
+
+
+def test_fit_buckets_beats_pow2():
+    rng = np.random.default_rng(0)
+    lengths = sample_lognormal_sizes(rng, 50_000, 900.0, 450.0,
+                                     max_size=4096)
+    scheme = fit_buckets(lengths, 8)
+    assert scheme.recovered_frac > 0.3
+    assert scheme.boundaries.max() >= lengths.max()
+
+
+def test_bucket_assignment_covers_all():
+    rng = np.random.default_rng(1)
+    lengths = rng.integers(1, 1000, 5_000)
+    scheme = fit_buckets(lengths, 4)
+    padded = scheme.padded_length(lengths)
+    assert np.all(padded >= lengths)
+
+
+def test_more_buckets_less_padding():
+    rng = np.random.default_rng(2)
+    lengths = sample_lognormal_sizes(rng, 30_000, 500.0, 200.0,
+                                     max_size=2048)
+    w4 = fit_buckets(lengths, 4).padded_tokens
+    w16 = fit_buckets(lengths, 16).padded_tokens
+    assert w16 <= w4
+
+
+def test_padding_waste_consistency():
+    lengths = np.asarray([10, 20, 30])
+    waste, frac = padding_waste([32], lengths)
+    assert waste == (32 - 10) + (32 - 20) + (32 - 30)
+    assert frac == pytest.approx(waste / (waste + 60))
+
+
+def test_batch_by_bucket_partitions_all_samples():
+    rng = np.random.default_rng(3)
+    lengths = rng.integers(1, 512, 1000)
+    scheme = fit_buckets(lengths, 4)
+    batches = batch_by_bucket(lengths, scheme, 64)
+    seen = np.concatenate([idx for _, idx in batches])
+    assert sorted(seen.tolist()) == list(range(1000))
+    for bucket_len, idx in batches:
+        assert np.all(lengths[idx] <= bucket_len)
+
+
+def test_corpus_deterministic():
+    cfg = DataConfig(vocab_size=1000, batch_size=4, max_len=64, seed=7)
+    a = SyntheticCorpus(cfg).sample_lengths(100)
+    b = SyntheticCorpus(cfg).sample_lengths(100)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_make_batches_shapes_and_padding():
+    cfg = DataConfig(vocab_size=100, batch_size=4, max_len=64,
+                     length_mean=30, length_std=10)
+    batch = next(make_batches(cfg))
+    assert batch["tokens"].shape == (4, 65)
+    for i, ln in enumerate(batch["lengths"]):
+        assert np.all(batch["tokens"][i, ln:] == 0)  # padded tail
+
+
+def test_fit_corpus_buckets_independent_probe():
+    cfg = DataConfig(vocab_size=100, batch_size=4, max_len=128,
+                     length_mean=60, length_std=25, seed=3)
+    scheme = fit_corpus_buckets(cfg, 4, n_probe=5_000)
+    assert len(scheme.boundaries) <= 4
+    assert scheme.boundaries.max() <= cfg.max_len
+
+
+def test_prefetcher_yields_and_closes():
+    cfg = DataConfig(vocab_size=50, batch_size=2, max_len=32)
+    pf = Prefetcher(make_batches(cfg))
+    batches = [next(pf) for _ in range(3)]
+    assert all(b["tokens"].shape == (2, 33) for b in batches)
+    pf.close()

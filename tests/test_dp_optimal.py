@@ -1,0 +1,123 @@
+"""DP global optimum: correctness + the paper's §6.3 convergence claim."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (dp_optimal, dp_optimal_bruteforce, paper_hillclimb,
+                        parallel_hillclimb, sample_multimodal_sizes,
+                        size_histogram, waste_exact)
+
+
+@hypothesis.given(
+    sizes=st.lists(st.integers(1, 512), min_size=1, max_size=60),
+    k=st.integers(1, 6),
+)
+@hypothesis.settings(max_examples=150, deadline=None)
+def test_cht_matches_bruteforce(sizes, k):
+    support, freqs = size_histogram(np.asarray(sizes))
+    fast = dp_optimal(support, freqs, k)
+    slow = dp_optimal_bruteforce(support, freqs, k)
+    assert fast.waste == slow.waste
+
+
+@hypothesis.given(
+    sizes=st.lists(st.integers(1, 512), min_size=2, max_size=60),
+    k=st.integers(1, 5),
+)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_more_classes_never_worse(sizes, k):
+    support, freqs = size_histogram(np.asarray(sizes))
+    assert (dp_optimal(support, freqs, k + 1).waste
+            <= dp_optimal(support, freqs, k).waste)
+
+
+def test_k_geq_support_is_perfect():
+    """Paper §6.1 best case: enough classes for every distinct size ->
+    zero waste (100% storage efficiency)."""
+    support = np.array([100, 200, 300])
+    freqs = np.array([5, 5, 5])
+    res = dp_optimal(support, freqs, 3)
+    assert res.waste == 0
+    assert set(res.chunks.tolist()) == {100, 200, 300}
+
+
+def test_single_class_optimum_is_max():
+    """With one class and no rejects allowed, chunk must cover max size;
+    the unique optimum is exactly the max observed size."""
+    support = np.array([10, 20, 90])
+    freqs = np.array([1, 1, 1])
+    res = dp_optimal(support, freqs, 1)
+    assert res.chunks.tolist() == [90]
+    assert res.waste == (90 - 10) + (90 - 20)
+
+
+def test_top_class_always_covers_max():
+    rng = np.random.default_rng(1)
+    sizes = rng.integers(1, 5000, size=2000)
+    support, freqs = size_histogram(sizes)
+    for k in (1, 2, 5):
+        res = dp_optimal(support, freqs, k)
+        assert res.chunks.max() == support.max()
+
+
+@hypothesis.given(
+    sizes=st.lists(st.integers(1, 256), min_size=1, max_size=40),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_dp_lower_bounds_every_search(sizes, k, seed):
+    """The DP optimum lower-bounds any hill-climbing result (property:
+    global <= local)."""
+    support, freqs = size_histogram(np.asarray(sizes))
+    opt = dp_optimal(support, freqs, k).waste
+    init = np.linspace(1, 300, k, dtype=np.int64)
+    init[-1] = max(init[-1], support.max())
+    res = parallel_hillclimb(init, support, freqs, max_iters=100)
+    if res.chunks.max() >= support.max():
+        assert opt <= res.waste
+    else:
+        # The DP optimizes the full-coverage problem; the penalty
+        # objective may do better by REJECTING extreme outliers
+        # (documented in EXPERIMENTS.md §Repro — observed on Table 5).
+        # The search result must then still beat DP only via the
+        # penalty accounting, never by magic:
+        assert res.waste < opt + len(support) * 2**20
+
+
+def test_hillclimb_vs_global_unimodal():
+    """On unimodal traffic the greedy walk gets close to the DP optimum —
+    consistent with the paper's §6.3 observation."""
+    rng = np.random.default_rng(0)
+    sizes = np.clip(rng.normal(500, 20, size=50_000), 1, None).astype(int)
+    support, freqs = size_histogram(sizes)
+    opt = dp_optimal(support, freqs, 4).waste
+    init = np.array([304, 384, 480, 600])
+    init[-1] = max(600, support.max())
+    res = parallel_hillclimb(init, support, freqs)
+    assert res.waste <= 1.15 * max(opt, 1)
+
+
+def test_hillclimb_global_claim_refuted_on_multimodal():
+    """Beyond-paper finding: the §6.3 'always global' claim fails on
+    well-separated multimodal traffic. The strictly-greedy +-1 walk cannot
+    carry a class across a low-traffic gap when every intermediate position
+    increases waste, so it lands measurably above the DP optimum."""
+    rng = np.random.default_rng(7)
+    sizes = sample_multimodal_sizes(
+        rng, 60_000,
+        ((1.0, 1_000.0, 10.0), (1.0, 50_000.0, 300.0),
+         (0.05, 20_000.0, 50.0)))
+    support, freqs = size_histogram(sizes)
+    k = 6
+    opt = dp_optimal(support, freqs, k).waste
+    # Start with most classes stranded in the middle mode.
+    init = np.array([18_000, 19_000, 20_000, 21_000, 22_000, 51_500])
+    res = paper_hillclimb(jax.random.PRNGKey(3), init, support, freqs,
+                          patience=500, max_steps=50_000)
+    assert res.waste > 1.5 * opt, (
+        "expected the greedy walk to strand classes; if this fires the "
+        "paper's claim held on this instance")
+    assert opt <= res.waste  # sanity: DP still a valid lower bound

@@ -1,0 +1,111 @@
+"""Hill-climbing search tests (Algorithm 1 + beyond-paper variants)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (MIN_CHUNK, anneal, multi_restart, paper_hillclimb,
+                        parallel_hillclimb, size_histogram, waste_exact)
+
+
+@pytest.fixture(scope="module")
+def unimodal():
+    rng = np.random.default_rng(0)
+    sizes = np.clip(rng.normal(500, 15, size=100_000), 1, None).astype(int)
+    return size_histogram(sizes)
+
+
+def test_paper_hillclimb_improves(unimodal):
+    support, freqs = unimodal
+    init = np.array([304, 384, 480, 600, 752, 944])
+    res = paper_hillclimb(jax.random.PRNGKey(0), init, support, freqs,
+                          patience=200, max_steps=30_000)
+    assert res.waste < res.init_waste
+    assert res.recovered_frac > 0.3
+    assert res.chunks.max() >= support.max()  # still covers everything
+
+
+def test_paper_hillclimb_monotone_nonincreasing(unimodal):
+    """Accepted moves never increase waste: final <= initial always."""
+    support, freqs = unimodal
+    init = np.array([480, 600, 1000])
+    for seed in range(3):
+        res = paper_hillclimb(jax.random.PRNGKey(seed), init, support,
+                              freqs, patience=100, max_steps=5_000)
+        assert res.waste <= res.init_waste
+
+
+def test_paper_hillclimb_respects_bounds(unimodal):
+    support, freqs = unimodal
+    init = np.array([MIN_CHUNK, 600])
+    res = paper_hillclimb(jax.random.PRNGKey(1), init, support, freqs,
+                          patience=100, max_steps=2_000)
+    assert res.chunks.min() >= MIN_CHUNK
+
+
+def test_parallel_hillclimb_at_least_as_good_as_init(unimodal):
+    support, freqs = unimodal
+    init = np.array([304, 384, 480, 600, 752, 944])
+    res = parallel_hillclimb(init, support, freqs)
+    assert res.waste <= res.init_waste
+    assert res.recovered_frac > 0.8  # big win on tight unimodal traffic
+
+
+def test_parallel_hillclimb_converges_fast(unimodal):
+    """The batched best-improvement variant needs orders of magnitude fewer
+    iterations than the paper's +-1 walk."""
+    support, freqs = unimodal
+    init = np.array([304, 384, 480, 600, 752, 944])
+    res = parallel_hillclimb(init, support, freqs)
+    assert res.steps < 200
+
+
+def test_multi_restart_beats_or_matches_single(unimodal):
+    support, freqs = unimodal
+    init = np.array([304, 384, 480, 600, 752, 944])
+    single = parallel_hillclimb(init, support, freqs)
+    multi = multi_restart(jax.random.PRNGKey(0), init, support, freqs,
+                          n_restarts=8)
+    assert multi.waste <= single.waste
+
+
+def test_anneal_improves(unimodal):
+    support, freqs = unimodal
+    init = np.array([304, 384, 480, 600, 752, 944])
+    res = anneal(jax.random.PRNGKey(0), init, support, freqs,
+                 n_steps=5_000)
+    assert res.waste < res.init_waste
+
+
+def test_best_case_single_size():
+    """Paper §6.1 best case: all items the same size -> 100% efficiency."""
+    support, freqs = np.array([500]), np.array([10_000])
+    init = np.array([480, 600])
+    res = parallel_hillclimb(init, support, freqs)
+    assert res.waste == 0
+    assert 500 in res.chunks.tolist()
+
+
+def test_worst_case_already_optimal():
+    """Paper §6.1 worst case: sizes coincide with the default chunks ->
+    the search cannot improve (waste already 0)."""
+    support = np.array([304, 384, 480])
+    freqs = np.array([100, 100, 100])
+    init = np.array([304, 384, 480])
+    res = parallel_hillclimb(init, support, freqs)
+    assert res.init_waste == 0
+    assert res.waste == 0
+
+
+def test_sigma_effect_lower_is_better():
+    """Paper §6.4: lower standard deviation -> more waste recovered."""
+    rng = np.random.default_rng(3)
+    recs = []
+    for sigma in (5.0, 80.0):
+        sizes = np.clip(rng.normal(1000, sigma, size=100_000),
+                        1, None).astype(int)
+        support, freqs = size_histogram(sizes)
+        init = np.array([944, 1184, 1480])
+        init[-1] = max(init[-1], support.max())
+        res = parallel_hillclimb(init, support, freqs)
+        recs.append(res.recovered_frac)
+    assert recs[0] > recs[1]

@@ -1,0 +1,93 @@
+"""HLO cost-walker unit tests on canned HLO text (no devices needed)."""
+import sys
+import os
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
+
+from benchmarks.hlo_analysis import (_shape_bytes, analyze, parse_hlo)
+
+CANNED = """\
+HloModule jit_f, num_partitions=8
+
+%body (param: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %param = (s32[], f32[16,128]) parameter(0)
+  %iv = s32[] get-tuple-element(%param), index=0
+  %x = f32[16,128] get-tuple-element(%param), index=1
+  %w = f32[128,128] constant({...})
+  %dot.1 = f32[16,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[16,128] all-reduce(%dot.1), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %next = s32[] add(%iv, %one)
+  ROOT %tuple = (s32[], f32[16,128]) tuple(%next, %ar)
+}
+
+%cond (param.1: (s32[], f32[16,128])) -> pred[] {
+  %param.1 = (s32[], f32[16,128]) parameter(0)
+  %iv.1 = s32[] get-tuple-element(%param.1), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%iv.1, %n), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[16,128]) -> f32[16,128] {
+  %arg = f32[16,128] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[16,128]) tuple(%zero, %arg)
+  %loop = (s32[], f32[16,128]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %ag = f32[128,128] all-gather(%arg), replica_groups={}, dimensions={0}
+  %w2 = f32[128,64] constant({...})
+  %dot.2 = f32[128,64]{1,0} dot(%ag, %w2), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+  ROOT %out = f32[16,128] get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]") == 16 * 128 * 4
+    assert _shape_bytes("bf16[4,4]{1,0}") == 32
+    assert _shape_bytes("(f32[2,2], s32[3])") == 16 + 12
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_dot_flops_inside_while_trip_counted():
+    res = analyze(CANNED)
+    # loop dot: 2*16*128*128 per iter x 5 trips; entry dot: 2*128*64*16
+    loop_flops = 5 * 2 * 16 * 128 * 128
+    entry_flops = 2 * 128 * 64 * 128
+    assert res.dot_flops == loop_flops + entry_flops
+
+
+def test_collectives_attributed_with_trips():
+    res = analyze(CANNED)
+    ar = 5 * 16 * 128 * 4     # all-reduce inside the loop, x5
+    ag = 128 * 128 * 4        # all-gather at entry, x1
+    assert res.coll_by_kind["all-reduce"] == ar
+    assert res.coll_by_kind["all-gather"] == ag
+    assert res.collective_bytes == ar + ag
+
+
+def test_cond_fallback_trip_count():
+    no_backend = CANNED.replace(
+        ', backend_config={"known_trip_count":{"n":"5"}}', "")
+    res = analyze(no_backend)
+    assert res.dot_flops == 5 * 2 * 16 * 128 * 128 + 2 * 128 * 64 * 128
+
+
+def test_unknown_trip_defaults_to_one():
+    txt = CANNED.replace(
+        ', backend_config={"known_trip_count":{"n":"5"}}', "").replace(
+        "direction=LT", "direction=NE")
+    res = analyze(txt)
+    assert res.dot_flops == 2 * 16 * 128 * 128 + 2 * 128 * 64 * 128
+
+
+def test_parse_names_computations():
+    stats = parse_hlo(CANNED)
+    assert {"body", "cond", "add", "main"} <= set(stats)
+    assert stats["main"].calls  # while edge to body

@@ -1,0 +1,175 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Shape/dtype sweeps per the kernel contract + hypothesis property runs.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import size_histogram, waste_exact
+from repro.kernels.ops import slab_decode_attention, waste_eval
+from repro.kernels.ref import slab_decode_attention_ref, waste_eval_ref
+
+# ----------------------------------------------------------------------------
+# waste_eval
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b", [1, 7, 8, 33])
+@pytest.mark.parametrize("k", [1, 3, 8])
+@pytest.mark.parametrize("s", [1, 100, 512, 700])
+def test_waste_eval_shape_sweep(b, k, s):
+    rng = np.random.default_rng(b * 100 + k * 10 + s)
+    support = np.sort(rng.choice(20_000, size=s, replace=False)) + 1
+    freqs = rng.integers(1, 50, size=s)
+    batch = rng.integers(1, 25_000, size=(b, k))
+    got = np.asarray(waste_eval(batch.astype(np.int32),
+                                support.astype(np.int32),
+                                freqs.astype(np.float32)))
+    want = np.asarray(waste_eval_ref(jnp.asarray(batch, dtype=jnp.int32),
+                                     jnp.asarray(support, dtype=jnp.int32),
+                                     jnp.asarray(freqs, dtype=jnp.float32)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert got.shape == (b,)
+
+
+def test_waste_eval_matches_exact_oracle():
+    """Kernel agrees with the int64 ground truth (storable-only sizes keep
+    everything inside float32's exact-integer range)."""
+    rng = np.random.default_rng(3)
+    sizes = rng.integers(100, 2000, size=5_000)
+    support, freqs = size_histogram(sizes)
+    batch = np.stack([[256, 512, 1024, 2048],
+                      [300, 700, 1500, 2048],
+                      [2048, 2048, 2048, 2048]]).astype(np.int32)
+    got = np.asarray(waste_eval(batch, support.astype(np.int32),
+                                freqs.astype(np.float32)))
+    for i in range(batch.shape[0]):
+        assert got[i] == waste_exact(batch[i], support, freqs)
+
+
+def test_waste_eval_unsorted_rows_ok():
+    support = np.array([10, 20, 30], dtype=np.int32)
+    freqs = np.array([1.0, 1.0, 1.0], dtype=np.float32)
+    a = np.asarray(waste_eval(np.array([[32, 16, 24]], dtype=np.int32),
+                              support, freqs))
+    b = np.asarray(waste_eval(np.array([[16, 24, 32]], dtype=np.int32),
+                              support, freqs))
+    np.testing.assert_array_equal(a, b)
+
+
+@hypothesis.given(
+    data=st.data(),
+    b=st.integers(1, 12),
+    k=st.integers(1, 6),
+    s=st.integers(1, 80),
+)
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_waste_eval_property(data, b, k, s):
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    support = np.sort(rng.choice(4096, size=s, replace=False)) + 1
+    freqs = rng.integers(0, 20, size=s)
+    batch = rng.integers(1, 8192, size=(b, k))
+    got = np.asarray(waste_eval(batch.astype(np.int32),
+                                support.astype(np.int32),
+                                freqs.astype(np.float32), page_size=8192))
+    want = np.asarray(waste_eval_ref(
+        jnp.asarray(batch, dtype=jnp.int32),
+        jnp.asarray(support, dtype=jnp.int32),
+        jnp.asarray(freqs, dtype=jnp.float32), page_size=8192))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# slab_decode_attention
+# ----------------------------------------------------------------------------
+
+
+def _mk_attention(rng, b, hq, hkv, d, t_pool, dtype):
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), dtype=dtype)
+    k = jnp.asarray(rng.normal(size=(t_pool, hkv, d)), dtype=dtype)
+    v = jnp.asarray(rng.normal(size=(t_pool, hkv, d)), dtype=dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 1), (8, 2), (8, 8), (2, 2)])
+@pytest.mark.parametrize("d", [64, 128])
+def test_slab_attention_gqa_sweep(hq, hkv, d):
+    rng = np.random.default_rng(hq * 10 + d)
+    b, t_pool, chunk = 4, 1024, 256
+    q, k, v = _mk_attention(rng, b, hq, hkv, d, t_pool, jnp.float32)
+    starts = jnp.asarray([0, 256, 512, 768], dtype=jnp.int32)
+    lens = jnp.asarray([256, 77, 1, 130], dtype=jnp.int32)
+    got = slab_decode_attention(q, k, v, starts, lens,
+                                max_chunk_tokens=chunk)
+    want = slab_decode_attention_ref(q, k, v, starts, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_slab_attention_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q, k, v = _mk_attention(rng, 2, 4, 2, 64, 512, dtype)
+    starts = jnp.asarray([0, 256], dtype=jnp.int32)
+    lens = jnp.asarray([200, 256], dtype=jnp.int32)
+    got = slab_decode_attention(q, k, v, starts, lens, max_chunk_tokens=256)
+    want = slab_decode_attention_ref(q, k, v, starts, lens)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+    assert got.dtype == dtype
+
+
+def test_slab_attention_empty_sequence_is_zero():
+    rng = np.random.default_rng(1)
+    q, k, v = _mk_attention(rng, 2, 4, 2, 64, 512, jnp.float32)
+    starts = jnp.asarray([0, 128], dtype=jnp.int32)
+    lens = jnp.asarray([0, 64], dtype=jnp.int32)
+    got = np.asarray(slab_decode_attention(q, k, v, starts, lens,
+                                           max_chunk_tokens=128))
+    np.testing.assert_array_equal(got[0], np.zeros_like(got[0]))
+    assert np.abs(got[1]).sum() > 0
+
+
+def test_slab_attention_ignores_other_chunks():
+    """Poisoning pool tokens outside a sequence's (start, len) window must
+    not change its output — the isolation property of the slab pool."""
+    rng = np.random.default_rng(2)
+    q, k, v = _mk_attention(rng, 2, 4, 2, 64, 512, jnp.float32)
+    starts = jnp.asarray([0, 256], dtype=jnp.int32)
+    lens = jnp.asarray([100, 200], dtype=jnp.int32)
+    base = np.asarray(slab_decode_attention(q, k, v, starts, lens,
+                                            max_chunk_tokens=256))
+    k2 = k.at[100:256].set(99.0)   # inside seq0's chunk but beyond len
+    v2 = v.at[100:256].set(-99.0)
+    got = np.asarray(slab_decode_attention(q, k2, v2, starts, lens,
+                                           max_chunk_tokens=256))
+    np.testing.assert_allclose(got[0], base[0], rtol=1e-6)
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 4),
+    g=st.sampled_from([1, 2, 4]),
+    hkv=st.sampled_from([1, 2]),
+    d=st.sampled_from([32, 64]),
+)
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_slab_attention_property(seed, b, g, hkv, d):
+    rng = np.random.default_rng(seed)
+    chunk = 256
+    t_pool = b * chunk
+    q, k, v = _mk_attention(rng, b, g * hkv, hkv, d, t_pool, jnp.float32)
+    starts = jnp.arange(b, dtype=jnp.int32) * chunk
+    lens = jnp.asarray(rng.integers(0, chunk + 1, size=b), dtype=jnp.int32)
+    got = slab_decode_attention(q, k, v, starts, lens,
+                                max_chunk_tokens=chunk)
+    want = slab_decode_attention_ref(q, k, v, starts, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

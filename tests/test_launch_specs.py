@@ -1,0 +1,80 @@
+"""Dry-run cell definitions: coverage and shape contracts (no devices)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import specs as S
+from repro.models import list_archs
+
+
+def test_cell_list_covers_assignment():
+    cells = S.cell_list()
+    archs = {a for a, _ in cells}
+    assert archs == set(list_archs())
+    # 10 archs x 4 shapes = 40 assigned; 5 documented long_500k skips
+    assert len(cells) == 35
+    skipped = [a for a in list_archs() if a not in S.LONG_CONTEXT_ARCHS]
+    assert len(skipped) == 5
+    for a in skipped:
+        assert a in S.LONG_SKIP_REASON  # every skip has a reason
+
+
+def test_long_context_archs_are_subquadratic():
+    # every long_500k runner is SSM/hybrid/SWA/local:global
+    from repro.models import get_config
+    for arch in S.LONG_CONTEXT_ARCHS:
+        cfg = get_config(arch)
+        subq = (cfg.family in ("ssm", "hybrid")
+                or (cfg.block_pattern
+                    and any(k == "attn_local" for k in cfg.block_pattern)))
+        assert subq, arch
+
+
+@pytest.mark.parametrize("shape", list(S.SHAPES))
+def test_input_specs_shapes(shape):
+    info = S.SHAPES[shape]
+    spec = S.input_specs("deepseek-7b", shape) if shape != "long_500k" \
+        else S.input_specs("xlstm-350m", shape)
+    if info["kind"] == "train":
+        assert spec["tokens"].shape == (info["batch"], info["seq"] + 1)
+        assert spec["tokens"].dtype == jnp.int32
+    elif info["kind"] == "prefill":
+        assert spec["tokens"].shape == (info["batch"], info["seq"])
+    else:
+        assert spec["token"].shape == (info["batch"], 1)
+        assert spec["cache_len"].shape == ()
+        assert spec["cache"] is not None
+
+
+def test_decode_cache_specs_are_structs_not_arrays():
+    """No device allocation: every cache leaf is a ShapeDtypeStruct."""
+    spec = S.input_specs("gemma3-1b", "decode_32k")
+    for leaf in jax.tree.leaves(spec["cache"]):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_decode_cache_rolling_window_for_swa_archs():
+    spec = S.input_specs("mixtral-8x7b", "long_500k")
+    # all-SWA: cache slots capped at the window, not 524288
+    assert spec["cache"]["k"].shape[2] == 4096
+
+
+def test_extras_specs_for_modality_stubs():
+    tr = S.input_specs("whisper-medium", "train_4k")
+    assert "frames" in tr and tr["frames"].shape[0] == 256
+    vl = S.input_specs("llama-3.2-vision-11b", "train_4k")
+    assert vl["image_embeds"].shape[1:] == (1601, 4096)
+
+
+def test_whisper_decode_has_cross_cache():
+    spec = S.input_specs("whisper-medium", "decode_32k")
+    assert spec["cache"]["cross"]["k"].shape[3] == 16  # kv heads
+    assert spec["cache"]["cross"]["k"].shape[2] == 1500  # encoder frames
+
+
+def test_param_specs_no_allocation():
+    p = S.param_specs("arctic-480b")  # 480B params — must stay abstract
+    n = sum(l.size for l in jax.tree.leaves(p))
+    assert n > 4e11
+    assert all(isinstance(l, jax.ShapeDtypeStruct)
+               for l in jax.tree.leaves(p))

@@ -1,0 +1,101 @@
+"""Slab-allocator simulator tests (the paper's testbed semantics)."""
+import numpy as np
+import pytest
+
+from repro.core import size_histogram, waste_exact
+from repro.memcached import SlabAllocator, compare_schedules, run_workload
+
+
+def test_basic_set_get():
+    a = SlabAllocator([64, 128])
+    assert a.set("k1", 50)
+    assert a.get("k1")
+    assert not a.get("missing")
+
+
+def test_item_goes_to_smallest_fitting_class():
+    a = SlabAllocator([64, 128, 256])
+    a.set("x", 100)
+    st = a.stats()
+    assert st.per_class_resident[128] == 1
+    assert st.per_class_resident[64] == 0
+    assert st.waste == 28
+
+
+def test_exact_fit_wastes_nothing():
+    a = SlabAllocator([64])
+    a.set("x", 64)
+    assert a.stats().waste == 0
+
+
+def test_oversize_rejected():
+    a = SlabAllocator([64])
+    assert not a.set("big", 65)
+    st = a.stats()
+    assert st.n_rejected == 1
+    assert st.n_resident == 0
+
+
+def test_overwrite_same_key_not_double_counted():
+    a = SlabAllocator([64])
+    a.set("x", 10)
+    a.set("x", 20)
+    st = a.stats()
+    assert st.n_resident == 1
+    assert st.item_bytes == 20
+
+
+def test_item_overhead_applied():
+    a = SlabAllocator([64, 128], item_overhead=56)
+    a.set("x", 10)  # 10 + 56 = 66 -> class 128
+    assert a.stats().per_class_resident[128] == 1
+
+
+def test_page_accounting():
+    # 1 MB page, 1024-byte chunks -> 1024 chunks per page
+    a = SlabAllocator([1024])
+    for i in range(1025):
+        a.set(str(i), 1000)
+    st = a.stats()
+    assert st.pages_allocated == 2
+    assert st.n_resident == 1025
+
+
+def test_lru_eviction_under_memory_pressure():
+    page = 1 << 20
+    a = SlabAllocator([1024], mem_limit=page)  # exactly one page: 1024 chunks
+    for i in range(1500):
+        a.set(str(i), 1000)
+    st = a.stats()
+    assert st.n_resident == 1024
+    assert st.n_evicted == 1500 - 1024
+    assert not a.get("0")        # oldest evicted
+    assert a.get("1499")         # newest resident
+
+
+def test_page_tail_waste():
+    # chunk 3000: 1 MB page holds 349 chunks, tail = 1048576 - 349*3000
+    a = SlabAllocator([3000])
+    a.set("x", 2900)
+    st = a.stats()
+    assert st.page_tail_waste == (1 << 20) - ((1 << 20) // 3000) * 3000
+
+
+def test_simulator_matches_waste_exact_unpressured():
+    """Without memory pressure the simulator's measured waste equals the
+    analytic objective used by the optimizer — ties the testbed to the
+    search."""
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(100, 2000, size=20_000)
+    chunks = [256, 512, 1024, 2048]
+    st = run_workload(chunks, sizes)
+    support, freqs = size_histogram(sizes)
+    assert st.waste == waste_exact(chunks, support, freqs)
+    assert st.n_rejected == 0
+
+
+def test_compare_schedules_recovered_frac():
+    rng = np.random.default_rng(1)
+    sizes = np.clip(rng.normal(500, 10, 10_000), 1, None).astype(int)
+    cmp_ = compare_schedules([480, 600], [505, 545], sizes)
+    assert cmp_.recovered_frac > 0.5

@@ -1,0 +1,180 @@
+"""Per-architecture smoke tests on reduced configs (deliverable f).
+
+For each assigned arch: instantiate the family-preserving reduced config,
+run one forward/train step on CPU, assert output shapes + no NaNs, and —
+the strong check — verify that prefill+decode through the KV/state caches
+reproduces the full-sequence forward logits exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model, get_config, get_model, list_archs
+
+ARCHS = list_archs()
+
+
+def extras_for(cfg, b, rng=None):
+    rng = rng or np.random.default_rng(5)
+    ex = {}
+    if cfg.family == "encdec":
+        ex["frames"] = jnp.asarray(
+            rng.normal(size=(b, 24, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        ex["image_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_image_tokens, cfg.d_model)),
+            jnp.float32)
+    return ex
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    spec = {
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == spec
+
+
+def test_moe_configs():
+    mixtral = get_config("mixtral-8x7b")
+    assert (mixtral.n_experts, mixtral.experts_per_token) == (8, 2)
+    arctic = get_config("arctic-480b")
+    assert (arctic.n_experts, arctic.experts_per_token) == (128, 2)
+    assert arctic.moe_dense_residual
+
+
+def test_param_counts_in_range():
+    """Parameter formulas land near the advertised sizes."""
+    for arch, lo, hi in [("gemma3-1b", 0.8e9, 1.3e9),
+                         ("gemma-7b", 7e9, 10e9),
+                         ("deepseek-7b", 6e9, 8e9),
+                         ("mixtral-8x7b", 42e9, 50e9),
+                         ("arctic-480b", 430e9, 520e9),
+                         ("xlstm-350m", 0.2e9, 0.5e9)]:
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo},{hi}]"
+    mixtral = get_config("mixtral-8x7b")
+    assert mixtral.active_param_count() < 0.4 * mixtral.param_count()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_shapes_and_finite(arch):
+    cfg, model = get_model(arch, reduced=True)
+    b, s = 2, 32
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                cfg.vocab_size)
+    logits, aux = model.train_logits(params, tokens, extras_for(cfg, b))
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step_no_nans(arch):
+    """One SGD step on the reduced config: finite loss and grads."""
+    cfg, model = get_model(arch, reduced=True)
+    b, s = 2, 16
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s + 1), 0,
+                                cfg.vocab_size)
+    ex = extras_for(cfg, b)
+
+    def loss_fn(p):
+        logits, aux = model.train_logits(p, tokens[:, :-1], ex)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(
+            logp, tokens[:, 1:, None], axis=-1).mean()
+        return nll + aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in leaves)
+    assert any(float(jnp.abs(g.astype(jnp.float32)).max()) > 0
+               for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch):
+    """prefill + decode through the cache == full-sequence forward.
+
+    The strongest cache-correctness property; catches masking, RoPE
+    position, rolling-buffer, and state-carry bugs in one assert.
+    """
+    cfg, model = get_model(arch, reduced=True)
+    if cfg.n_experts:
+        # generous capacity so no token drops differ between lengths
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+        model = build_model(cfg)
+    b, s = 2, 17
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s + 1), 0,
+                                cfg.vocab_size)
+    ex = extras_for(cfg, b)
+    full, _ = model.train_logits(params, tokens, ex)
+    if cfg.family == "ssm":
+        lg, cache = model.prefill(params, tokens[:, :s], ex)
+    else:
+        lg, cache = model.prefill(params, tokens[:, :s], ex, 32)
+    np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                               np.asarray(full[:, s - 1]),
+                               rtol=2e-3, atol=2e-3)
+    dec, _ = model.decode(params, tokens[:, s:s + 1], cache,
+                          jnp.int32(s), ex)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, s]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rolling_window_decode_past_wraparound():
+    """mixtral-style all-SWA rolling cache: decoding far past the window
+    still matches the full forward (eviction order + position masking)."""
+    cfg, model = get_model("mixtral-8x7b", reduced=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0, sliding_window=8)
+    model = build_model(cfg)
+    b, s_total = 1, 40
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s_total), 0,
+                                cfg.vocab_size)
+    full, _ = model.train_logits(params, tokens, None)
+    prompt = 13
+    _, cache = model.prefill(params, tokens[:, :prompt], None, 64)
+    assert cache["k"].shape[2] == 8  # rolling buffer is window-sized
+    for t in range(prompt, s_total):
+        dec, cache = model.decode(params, tokens[:, t:t + 1], cache,
+                                  jnp.int32(t), None)
+        np.testing.assert_allclose(
+            np.asarray(dec[:, 0]), np.asarray(full[:, t]),
+            rtol=2e-3, atol=2e-3,
+            err_msg=f"divergence at step {t}")
+
+
+def test_reduced_keeps_family_structure():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        red = cfg.reduced()
+        assert red.family == cfg.family
+        assert set(red.block_pattern) == set(cfg.block_pattern) or \
+            not cfg.block_pattern
+        if cfg.n_experts:
+            assert red.n_experts > 0

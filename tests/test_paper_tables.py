@@ -1,0 +1,86 @@
+"""Reproduction of the paper's §5 experiments (Tables 1-5).
+
+Workload calibration (see DESIGN.md §1): (mu, sigma) read as byte-space
+moments of the log-normal, n = 1e6 items, zero metadata overhead. Under
+this reading our regenerated *old-configuration* waste matches the paper's
+reported bytes to ~0.1% on Tables 4 and 5 (the two tables whose structure
+pins the workload unambiguously), confirming the calibration; Tables 1-3
+agree in magnitude. The learned-schedule comparison is validated on the
+paper's scale-invariant headline: fraction of wasted memory recovered,
+which the paper reports as 33.65%-55.76%.
+
+These tests run a reduced n (100k) for speed; benchmarks/paper_tables.py
+runs the full 1e6-item experiment.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_WORKLOADS, SlabPolicy, dp_optimal,
+                        size_histogram, waste_exact)
+from repro.memcached import paper_traffic
+
+N_TEST = 100_000
+
+
+@pytest.fixture(scope="module", params=[w.table for w in PAPER_WORKLOADS])
+def workload(request):
+    wl = PAPER_WORKLOADS[request.param - 1]
+    sizes = paper_traffic(wl, n_items=N_TEST, seed=0)
+    support, freqs = size_histogram(sizes)
+    return wl, support, freqs
+
+
+def test_old_config_waste_scales_to_paper(workload):
+    """Old-config waste per item is within 2x of the paper's figure for
+    every table, and within 5% for Tables 4-5 (the calibration anchors)."""
+    wl, support, freqs = workload
+    w = waste_exact(wl.old_chunks, support, freqs)
+    per_item = w / N_TEST
+    paper_per_item = wl.old_waste / 1_000_000
+    assert 0.5 * paper_per_item < per_item < 2.0 * paper_per_item
+    if wl.table in (4, 5):
+        assert per_item == pytest.approx(paper_per_item, rel=0.05)
+
+
+def test_learned_schedule_beats_paper_band(workload):
+    """Our search recovers at least the paper's reported fraction for the
+    same table (the paper's result is the floor, not the ceiling)."""
+    wl, support, freqs = workload
+    policy = SlabPolicy(seed=0)
+    sched = policy.fit(support, freqs, k=len(wl.old_chunks),
+                       baseline=np.asarray(wl.old_chunks), method="dp")
+    assert sched.recovered_frac >= wl.recovered_frac
+
+
+def test_paper_hillclimb_reaches_band(workload):
+    """The paper-faithful Algorithm 1 itself reaches the paper's reported
+    recovery band (>= table's fraction) given a comparable step budget."""
+    wl, support, freqs = workload
+    policy = SlabPolicy(seed=1)
+    sched = policy.fit(support, freqs, k=len(wl.old_chunks),
+                       baseline=np.asarray(wl.old_chunks),
+                       method="hillclimb", patience=1000, max_steps=150_000)
+    assert sched.recovered_frac >= wl.recovered_frac
+
+
+def test_baseline_waste_fraction_around_ten_percent(workload):
+    """Paper §1: 'an average 10% wastage in memory' under log-normal
+    traffic with the default classes."""
+    wl, support, freqs = workload
+    policy = SlabPolicy()
+    sched = policy.fit(support, freqs, k=len(wl.old_chunks),
+                       baseline=np.asarray(wl.old_chunks), method="dp")
+    frac = sched.baseline_waste / max(
+        int(np.sum(support * freqs)), 1)
+    assert 0.03 < frac < 0.30  # ~10%, workload-dependent
+
+
+def test_new_config_never_uncovers_items(workload):
+    wl, support, freqs = workload
+    policy = SlabPolicy(seed=0)
+    for method in ("dp", "parallel"):
+        sched = policy.fit(support, freqs, k=len(wl.old_chunks),
+                           baseline=np.asarray(wl.old_chunks),
+                           method=method)
+        assert sched.chunk_sizes.max() >= support.max()

@@ -1,0 +1,76 @@
+"""End-to-end behaviour tests: the paper's loop running through the
+whole system — observe traffic, learn a schedule, deploy it, measure."""
+import copy
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_WORKLOADS, SlabPolicy, size_histogram,
+                        waste_exact)
+from repro.memcached import paper_traffic, run_workload
+
+
+def test_observe_learn_deploy_measure_loop():
+    """The full paper pipeline: traffic -> histogram -> learned schedule
+    -> redeploy in the allocator -> measured waste drops by the schedule's
+    predicted amount (analytic objective == allocator ground truth)."""
+    wl = PAPER_WORKLOADS[2]  # mu=2109
+    sizes = paper_traffic(wl, n_items=50_000)
+    support, freqs = size_histogram(sizes)
+    old = np.asarray(wl.old_chunks)
+
+    sched = SlabPolicy(seed=0).fit(support, freqs, k=len(old),
+                                   baseline=old, method="dp")
+    sim_old = run_workload(old, sizes)
+    sim_new = run_workload(sched.chunk_sizes, sizes)
+    assert sim_old.waste == sched.baseline_waste
+    assert sim_new.waste == sched.waste
+    assert sched.recovered_frac >= wl.recovered_frac  # >= paper's band
+
+
+def test_train_then_serve_same_params():
+    """Framework loop: init a zoo model, take two optimizer steps, then
+    serve greedy tokens from the trained params through the cache path."""
+    from repro.models import get_model
+    from repro.serving import generate
+    from repro.training import (AdamWConfig, TrainConfig, init_train_state,
+                                make_train_step)
+
+    cfg, model = get_model("gemma3-1b", reduced=True)
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=1,
+                                             total_steps=10),
+                       microbatches=2, z_loss=0.0)
+    state = init_train_state(model.init(jax.random.PRNGKey(0)), tcfg)
+    step = jax.jit(make_train_step(model, tcfg))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 33), 0,
+                                cfg.vocab_size)
+    losses = []
+    for _ in range(2):
+        state, metrics = step(state, {"tokens": tokens})
+        losses.append(float(metrics["loss"]))
+    assert losses[1] < losses[0]
+
+    out = generate(model, state.params, tokens[:2, :8], steps=4,
+                   max_len=16, jit=False)
+    assert out.shape == (2, 4)
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
+
+
+def test_slab_pool_serves_learned_schedule_end_to_end():
+    """Serving loop: traffic through the pool, refit online, waste drops."""
+    from repro.serving import (ContinuousBatcher, KVSlabPool,
+                               default_pow2_classes,
+                               lognormal_request_workload)
+
+    rng = np.random.default_rng(0)
+    workload = lognormal_request_workload(rng, 150)
+    pool = KVSlabPool(2_000_000, default_pow2_classes())
+    before_classes = list(pool.chunk_classes)
+    batcher = ContinuousBatcher(pool, max_batch=32, refit_every=150)
+    res = batcher.run(copy.deepcopy(workload), steps=3000)
+    assert res.completed + res.rejected == 150
+    assert list(pool.chunk_classes) != before_classes  # refit happened
+    assert pool.stats().active_requests == 0
