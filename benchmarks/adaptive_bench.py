@@ -1,0 +1,183 @@
+"""Benchmark: the paper's loop, closed — adaptive slab control under drift.
+
+Replays non-stationary item-size traffic (phase shift between two paper
+operating points, gradual drift, diurnal mixture) through the memcached
+simulator under three policies:
+
+* ``default``  — memcached's stock 1.25-geometric schedule, never changed,
+* ``static``   — the paper's learned schedule, fit once on the warmup
+                 prefix and frozen (the repo's old offline-only story),
+* ``adaptive`` — the same initial fit plus the online ``SlabController``
+                 (decayed sketch -> drift detection -> cost-gated refit ->
+                 live ``reconfigure`` with slabs-reassign semantics).
+
+Learned schedules are deployed with the stock geometric tail above their
+span (`schedule_with_default_tail`) — as a real memcached would — so a
+shifted workload degrades into coarse default classes instead of being
+rejected. Waste is charged per insert against the schedule active at that
+moment (chunk - item, or a full page for unstorable items — the same
+charging rule the optimizers use), so the trajectory reflects when each
+policy adapted, not just where it ended.
+
+``python benchmarks/adaptive_bench.py`` emits the full comparison,
+trajectories included, as JSON.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (PAGE_SIZE, ControllerConfig, SlabController,
+                        SlabPolicy, default_memcached_schedule,
+                        schedule_with_default_tail, size_histogram)
+from repro.core.distribution import PAPER_WORKLOADS
+from repro.memcached import (SlabAllocator, diurnal_traffic, drift_traffic,
+                             phase_shift_traffic)
+
+K = 6                  # learned class budget (paper's Table-1 shape)
+WARMUP_FRAC = 0.1      # prefix the static/adaptive schedules are fit on
+
+
+def _controller(chunks, n_items: int) -> SlabController:
+    cadence = max(1000, n_items // 40)
+    return SlabController(chunks, config=ControllerConfig(
+        k=K, check_every=cadence, half_life=2.0 * cadence,
+        drift_threshold=0.12, min_items_between_refits=2 * cadence,
+        min_rel_improvement=0.02,
+        # phase-shifted cache traffic: evicted victims hold the stale
+        # distribution and are rarely re-referenced, so a migration
+        # byte costs far less than a recurring waste byte
+        amortization_windows=8.0, cost_weight=0.1))
+
+
+def drive(sizes: np.ndarray, chunks, *,
+          controller: Optional[SlabController] = None,
+          n_checkpoints: int = 60,
+          page_size: int = PAGE_SIZE) -> Dict:
+    """Replay ``sizes`` through a live allocator, charging waste against
+    the schedule active at each insert; optionally run the controller."""
+    alloc = SlabAllocator(chunks, page_size=page_size)
+    csizes = alloc.chunk_sizes
+    cum_waste = 0
+    cum_bytes = 0
+    every = max(1, len(sizes) // n_checkpoints)
+    trajectory: List[Dict] = []
+    refit_events: List[Dict] = []
+    for i, s in enumerate(np.asarray(sizes).tolist()):
+        s = int(s)
+        idx = int(np.searchsorted(csizes, s, side="left"))
+        cum_waste += (int(csizes[idx]) - s if idx < len(csizes)
+                      else page_size - s)
+        cum_bytes += s
+        alloc.set(str(i), s)
+        if controller is not None:
+            controller.observe(s)
+            decision = controller.maybe_refit(
+                cost_bytes_fn=lambda c: alloc.migration_cost_bytes(
+                    schedule_with_default_tail(c, page_size=page_size)))
+            if decision is not None and decision.approved:
+                deployed = schedule_with_default_tail(decision.chunks,
+                                                      page_size=page_size)
+                report = alloc.reconfigure(deployed)
+                controller.set_chunks(deployed)   # controller sees what's live
+                csizes = alloc.chunk_sizes
+                refit_events.append({
+                    "at_item": i, "drift": round(decision.drift, 4),
+                    "classes": decision.chunks.tolist(),
+                    "evicted_items": report.evicted_items,
+                    "evicted_bytes": report.evicted_bytes,
+                    "reassigned_pages": report.reassigned_pages})
+        if (i + 1) % every == 0 or i + 1 == len(sizes):
+            trajectory.append({
+                "item": i + 1,
+                "cum_waste_frac": round(cum_waste / max(cum_bytes, 1), 6)})
+    st = alloc.stats()
+    return {
+        "cum_waste_bytes": int(cum_waste),
+        "cum_item_bytes": int(cum_bytes),
+        "cum_waste_frac": cum_waste / max(cum_bytes, 1),
+        "final_resident_waste_frac": st.waste_fraction,
+        "n_rejected": st.n_rejected,
+        "n_reassigned_pages": st.n_reassigned_pages,
+        "migration_evictions": st.migration_evictions,
+        "n_refits": len(refit_events),
+        "refit_events": refit_events,
+        "trajectory": trajectory,
+    }
+
+
+def compare(sizes: np.ndarray, *, page_size: int = PAGE_SIZE
+            ) -> Dict[str, Dict]:
+    """default-static vs learned-static vs adaptive on one size stream."""
+    warmup = sizes[:max(1, int(len(sizes) * WARMUP_FRAC))]
+    support, freqs = size_histogram(warmup)
+    fit = SlabPolicy(page_size=page_size).fit(support, freqs, K,
+                                              method="dp")
+    learned = schedule_with_default_tail(fit.chunk_sizes,
+                                         page_size=page_size)
+    out = {
+        "default": drive(sizes, default_memcached_schedule(
+            page_size=page_size), page_size=page_size),
+        "static": drive(sizes, learned, page_size=page_size),
+        # the controller's current-schedule view must match what is
+        # deployed (the tailed schedule), or its waste comparisons
+        # page-charge items the allocator actually stores in the tail
+        "adaptive": drive(sizes, learned,
+                          controller=_controller(learned, len(sizes)),
+                          page_size=page_size),
+    }
+    for cfg in out.values():
+        del cfg["trajectory"][:-1]   # CSV rows don't need the curve
+    return out
+
+
+def scenarios(n_items: int) -> List[Tuple[str, np.ndarray]]:
+    a, b = PAPER_WORKLOADS[0], PAPER_WORKLOADS[2]
+    return [
+        ("phase_shift", phase_shift_traffic(a, b, n_items=n_items, seed=7)),
+        ("gradual_drift", drift_traffic(a, b, n_items=n_items, seed=7)),
+        ("diurnal", diurnal_traffic(a, b, n_items=n_items,
+                                    period=n_items // 2, seed=7)),
+    ]
+
+
+def run(n_items: int = 60_000) -> List[Tuple[str, float, str]]:
+    rows = []
+    for scenario, sizes in scenarios(n_items):
+        t0 = time.perf_counter()
+        res = compare(sizes)
+        dt = (time.perf_counter() - t0) * 1e6 / (3 * n_items)
+        rows.append((
+            scenario, dt,
+            f"default={res['default']['cum_waste_frac']:.4f};"
+            f"static={res['static']['cum_waste_frac']:.4f};"
+            f"adaptive={res['adaptive']['cum_waste_frac']:.4f};"
+            f"refits={res['adaptive']['n_refits']};"
+            f"migration_evictions="
+            f"{res['adaptive']['migration_evictions']}"))
+    return rows
+
+
+def main(n_items: int = 120_000) -> Dict:
+    """Full comparison with trajectories, as JSON on stdout."""
+    out = {"n_items": n_items, "k": K, "warmup_frac": WARMUP_FRAC,
+           "scenarios": {}}
+    for scenario, sizes in scenarios(n_items):
+        warmup = sizes[:max(1, int(len(sizes) * WARMUP_FRAC))]
+        support, freqs = size_histogram(warmup)
+        fit = SlabPolicy().fit(support, freqs, K, method="dp")
+        learned = schedule_with_default_tail(fit.chunk_sizes)
+        out["scenarios"][scenario] = {
+            "default": drive(sizes, default_memcached_schedule()),
+            "static": drive(sizes, learned),
+            "adaptive": drive(sizes, learned,
+                              controller=_controller(learned, len(sizes))),
+        }
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

@@ -28,19 +28,31 @@ def run(n_requests: int = 300) -> List[Tuple[str, float, str]]:
     learned = np.unique(quantize_lengths(sched.chunk_sizes))
 
     rows = []
-    for name, classes, refit in (
-            ("pow2_baseline", default_pow2_classes(), None),
-            ("learned_offline", learned, None),
-            ("learned_online_refit", default_pow2_classes(), 200)):
-        pool = KVSlabPool(2_000_000, classes)
-        batcher = ContinuousBatcher(pool, max_batch=48, refit_every=refit)
+    for name, classes, refit, adaptive in (
+            ("pow2_baseline", default_pow2_classes(), None, False),
+            ("learned_offline", learned, None, False),
+            ("learned_online_refit", default_pow2_classes(), 200, False),
+            ("adaptive_controller", default_pow2_classes(), None, True)):
+        if adaptive:
+            from repro.core import ControllerConfig
+            pool = KVSlabPool(2_000_000, default_pow2_classes(),
+                              controller_config=ControllerConfig(
+                                  page_size=1 << 22, min_chunk=128,
+                                  align=128, k=8, check_every=100,
+                                  half_life=400.0, drift_threshold=0.1,
+                                  min_items_between_refits=100))
+        else:
+            pool = KVSlabPool(2_000_000, classes)
+        batcher = ContinuousBatcher(pool, max_batch=48, refit_every=refit,
+                                    adaptive=adaptive)
         t0 = time.perf_counter()
         res = batcher.run(copy.deepcopy(workload), steps=4000)
         dt = (time.perf_counter() - t0) * 1e6 / max(res.steps, 1)
         rows.append((f"kvpool_{name}", dt,
                      f"waste_frac={res.mean_waste_fraction:.4f};"
                      f"completed={res.completed};"
-                     f"copies={res.realloc_copies}"))
+                     f"copies={res.realloc_copies};"
+                     f"refits={res.n_refits}"))
     return rows
 
 

@@ -11,15 +11,16 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bucketing_bench, convergence_bench,
-                            k_sweep, kernel_bench, kv_pool_bench,
-                            paper_tables, sigma_sweep)
+    from benchmarks import (adaptive_bench, bucketing_bench,
+                            convergence_bench, k_sweep, kernel_bench,
+                            kv_pool_bench, paper_tables, sigma_sweep)
     suites = [
         ("paper_tables", lambda: paper_tables.run()),
         ("sigma_sweep", lambda: sigma_sweep.run()),
         ("k_sweep", lambda: k_sweep.run()),
         ("convergence", lambda: convergence_bench.run()),
         ("kv_pool", lambda: kv_pool_bench.run()),
+        ("adaptive", lambda: adaptive_bench.run()),
         ("bucketing", lambda: bucketing_bench.run()),
         ("kernels", lambda: kernel_bench.run()),
     ]

@@ -7,6 +7,8 @@ Public surface:
     dp_optimal   — exact global optimum (tests the paper's §6.3 claim)
     anneal       — simulated-annealing variant
     slab_policy  — SlabPolicy / SlabSchedule, the composable API
+    observe      — streaming decayed size sketch + drift distances
+    controller   — SlabController, the online observe→detect→refit loop
 """
 from repro.core.distribution import (PAGE_SIZE, PAPER_N_ITEMS,
                                      PAPER_WORKLOADS, PaperWorkload,
@@ -22,10 +24,14 @@ from repro.core.hillclimb import (MIN_CHUNK, SearchResult, multi_restart,
 from repro.core.anneal import anneal
 from repro.core.slab_policy import (SlabPolicy, SlabSchedule,
                                     covering_default_classes,
-                                    default_memcached_schedule)
+                                    default_memcached_schedule,
+                                    schedule_with_default_tail)
 from repro.core.waste import (default_waste_fraction, per_class_waste_exact,
                               utilization_exact, waste_batch_jax, waste_exact,
                               waste_jax)
+from repro.core.observe import DecayedSizeHistogram, histogram_distance
+from repro.core.controller import (ControllerConfig, RefitDecision,
+                                   SlabController)
 
 __all__ = [
     "PAGE_SIZE", "PAPER_N_ITEMS", "PAPER_WORKLOADS", "PaperWorkload",
@@ -35,7 +41,9 @@ __all__ = [
     "MIN_CHUNK", "SearchResult", "multi_restart", "paper_hillclimb",
     "parallel_hillclimb", "anneal",
     "SlabPolicy", "SlabSchedule", "covering_default_classes",
-    "default_memcached_schedule",
+    "default_memcached_schedule", "schedule_with_default_tail",
     "default_waste_fraction", "per_class_waste_exact", "utilization_exact",
     "waste_batch_jax", "waste_exact", "waste_jax",
+    "DecayedSizeHistogram", "histogram_distance",
+    "ControllerConfig", "RefitDecision", "SlabController",
 ]

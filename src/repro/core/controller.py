@@ -1,0 +1,312 @@
+"""SlabController — the online half of the paper's loop.
+
+The paper closes a loop: *analyse the pattern of sizes previously
+entered, then re-configure the slab classes*. `SlabController` is that
+loop as a reusable component shared by every allocator in this repo
+(`repro.memcached.SlabAllocator`, `repro.serving.KVSlabPool`,
+`repro.data` bucketing): it owns the live traffic sketch
+(:class:`~repro.core.observe.DecayedSizeHistogram`), detects when the
+schedule has gone stale (drift of the sketch vs. the fitting-time
+reference histogram), and decides whether a refit pays for itself before
+approving one.
+
+Decision pipeline, run every ``check_every`` observations:
+
+1. **drift gate** — ``histogram_distance(reference, live)`` must exceed
+   ``drift_threshold`` (hysteresis part 1: small wobbles never trigger).
+2. **cooldown** — at least ``min_items_between_refits`` observations must
+   have passed since the last approved refit (hysteresis part 2: no
+   refit storms while a phase transition is in flight).
+3. **candidate frontier** — refit via ``SlabPolicy`` on the live sketch,
+   then score {current, refit, covering-default} schedules in ONE batched
+   evaluation through the Pallas kernel ``repro.kernels.ops.waste_eval``
+   (compiled on TPU, interpret elsewhere), keeping the scoring hot path
+   on-device.
+4. **improvement gate** — the winner must beat the current schedule by
+   ``min_rel_improvement`` (hysteresis part 3: ignore marginal wins).
+5. **cost model** — reconfiguring a live cache is not free: the consumer
+   reports predicted migration/eviction bytes via ``cost_bytes_fn`` (for
+   `SlabAllocator.reconfigure` that is the resident bytes of victim
+   classes). The refit is approved only when the predicted waste savings
+   over ``amortization_windows`` sketch-windows of future traffic exceed
+   ``cost_weight`` times that cost.
+
+Approved refits update the controller's schedule and reset the reference
+histogram to the fitting snapshot; the *consumer* applies the new chunks
+to its own storage (`reconfigure` / `set_classes`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.distribution import PAGE_SIZE
+from repro.core.observe import DecayedSizeHistogram, histogram_distance
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    """Knobs of the observe → detect → refit → reconfigure loop."""
+
+    k: Optional[int] = None              # class budget (None: len(chunks))
+    check_every: int = 2000              # observations between drift checks
+    half_life: Optional[float] = None    # sketch half-life in observations
+    #                                      (None: 2*check_every; inf: no decay)
+    drift_threshold: float = 0.15        # min distance to consider a refit
+    drift_metric: str = "l1"             # "l1" | "emd"
+    min_items_between_refits: int = 4000  # cooldown after an approved refit
+    min_rel_improvement: float = 0.02    # winner must beat current by this
+    # The cost model compares two different kinds of bytes: predicted
+    # waste savings accrue over ``amortization_windows`` sketch-masses of
+    # FUTURE traffic (memory held hole-free, again and again), while
+    # migration cost is paid ONCE (victims are evicted and at worst
+    # refetched — and under drifted traffic the victim classes hold the
+    # stale distribution, whose re-reference probability is low).
+    # ``cost_weight`` is the explicit exchange rate; 1.0 treats one
+    # evicted byte as as expensive as one never-saved waste byte
+    # (maximally refit-averse), drift scenarios where old items go cold
+    # typically want 0.05-0.25.
+    amortization_windows: float = 4.0    # future windows that repay the cost
+    cost_weight: float = 1.0             # migration byte : waste byte rate
+    method: str = "dp"                   # SlabPolicy fit method
+    page_size: int = PAGE_SIZE
+    min_chunk: int = 48
+    align: int = 1                       # chunk quantization grid (tokens/B)
+    max_bins: int = 1 << 14              # sketch bin budget
+
+
+@dataclasses.dataclass
+class RefitDecision:
+    """One drift-check verdict (returned whether or not a refit happened)."""
+
+    approved: bool
+    reason: str                      # "refit" | why it was declined
+    drift: float
+    chunks: Optional[np.ndarray]     # winning schedule (approved or not)
+    current_waste: int               # exact waste of current chunks on sketch
+    candidate_waste: int             # exact waste of winner on sketch
+    predicted_savings: float         # bytes saved over amortization horizon
+    predicted_cost: float            # weighted migration bytes
+    at_observation: int              # controller clock when decided
+
+
+def _quantize_up(chunks: np.ndarray, align: int) -> np.ndarray:
+    chunks = np.asarray(chunks, dtype=np.int64)
+    if align > 1:
+        chunks = ((chunks + align - 1) // align) * align
+    return np.unique(chunks)
+
+
+def _pad_rows(rows: List[np.ndarray]) -> np.ndarray:
+    """Stack schedules of different lengths into one (B, K) batch by
+    repeating each row's top chunk — duplicate classes are waste-neutral,
+    so padding does not change any row's score."""
+    k = max(len(r) for r in rows)
+    out = np.empty((len(rows), k), dtype=np.int64)
+    for i, r in enumerate(rows):
+        out[i, :len(r)] = r
+        out[i, len(r):] = r[-1]
+    return out
+
+
+def _score_frontier(rows: List[np.ndarray], support: np.ndarray,
+                    freqs: np.ndarray, *, page_size: int) -> np.ndarray:
+    """One batched waste evaluation of the candidate frontier.
+
+    Prefers the Pallas kernel (compiled on TPU, interpret elsewhere);
+    falls back to the vmapped jnp oracle if the kernel stack is
+    unavailable (e.g. a CPU wheel without pallas support).
+    """
+    batch = _pad_rows(rows)
+    try:
+        from repro.kernels.ops import waste_eval
+        scores = waste_eval(batch, support, freqs, page_size=page_size)
+    except Exception:  # pragma: no cover - kernel stack unavailable
+        from repro.core.waste import waste_batch_jax
+        scores = waste_batch_jax(batch, support, freqs, page_size=page_size)
+    return np.asarray(scores, dtype=np.float64)
+
+
+class SlabController:
+    """Drift-aware refit controller over a live size sketch."""
+
+    def __init__(self, chunk_sizes, *,
+                 config: Optional[ControllerConfig] = None,
+                 policy=None,
+                 reference: Optional[Tuple[np.ndarray, np.ndarray]] = None):
+        self.config = config or ControllerConfig()
+        self.chunks = np.unique(np.asarray(chunk_sizes, dtype=np.int64))
+        if self.chunks.size == 0:
+            raise ValueError("need at least one slab class")
+        half_life = self.config.half_life
+        if half_life is None:
+            half_life = 2.0 * self.config.check_every
+        if not np.isfinite(half_life):
+            half_life = None        # undecayed: full-history histogram
+        self.sketch = DecayedSizeHistogram(half_life=half_life,
+                                           max_bins=self.config.max_bins)
+        self._policy = policy
+        # Fitting-time histogram the drift detector compares against.
+        # None until the first check (or refit) establishes one.
+        self.reference = reference
+        self._since_check = 0
+        self._last_refit_at = 0
+        self.n_refits = 0
+        self.n_checks = 0
+        self.last_drift = 0.0
+        self.decisions: List[RefitDecision] = []
+
+    # -- shared policy -------------------------------------------------------
+    @property
+    def policy(self):
+        if self._policy is None:
+            from repro.core.slab_policy import SlabPolicy
+            self._policy = SlabPolicy(page_size=self.config.page_size,
+                                      min_chunk=self.config.min_chunk)
+        return self._policy
+
+    @property
+    def n_observed(self) -> int:
+        return self.sketch.n_observed
+
+    def set_chunks(self, chunk_sizes) -> None:
+        """Sync the controller after the consumer adjusted the schedule
+        out-of-band (e.g. alignment quantization)."""
+        self.chunks = np.unique(np.asarray(chunk_sizes, dtype=np.int64))
+
+    # -- observe -------------------------------------------------------------
+    def observe(self, size: int) -> None:
+        self.sketch.observe(size)
+        self._since_check += 1
+
+    def observe_many(self, sizes) -> None:
+        sizes = np.asarray(sizes).ravel()
+        self.sketch.observe_many(sizes)
+        self._since_check += len(sizes)
+
+    # -- detect + decide -----------------------------------------------------
+    def drift(self) -> float:
+        """Distance of the live sketch from the fitting-time reference."""
+        if self.reference is None:
+            return 0.0
+        return histogram_distance(self.reference,
+                                  self.sketch.snapshot_weights(),
+                                  metric=self.config.drift_metric)
+
+    def maybe_refit(self,
+                    cost_bytes_fn: Optional[Callable[[np.ndarray], float]]
+                    = None) -> Optional[RefitDecision]:
+        """Run one drift check if the cadence is due.
+
+        Returns ``None`` between checks; otherwise a :class:`RefitDecision`
+        (``approved`` tells the caller whether to apply ``chunks``).
+        """
+        if self._since_check < self.config.check_every:
+            return None
+        self._since_check = 0
+        self.n_checks += 1
+        live = self.sketch.snapshot_weights()
+        if live[0].size == 0:
+            return None
+        if self.reference is None:
+            # First check: adopt the live sketch as the reference the
+            # initial schedule is presumed fit to.
+            self.reference = live
+            return None
+        drift = histogram_distance(self.reference, live,
+                                   metric=self.config.drift_metric)
+        self.last_drift = drift
+        if drift < self.config.drift_threshold:
+            return self._decide(False, "drift-below-threshold", drift)
+        if (self.n_observed - self._last_refit_at
+                < self.config.min_items_between_refits):
+            return self._decide(False, "cooldown", drift)
+        return self._evaluate_refit(drift, cost_bytes_fn)
+
+    def _evaluate_refit(self, drift: float,
+                        cost_bytes_fn) -> RefitDecision:
+        cfg = self.config
+        support, freqs = self.sketch.snapshot()
+        if support.size == 0:
+            return self._decide(False, "empty-sketch", drift)
+        k = cfg.k or len(self.chunks)
+        fitted = self.policy.fit(support, freqs, k, method=cfg.method,
+                                 baseline=self.chunks)
+        candidates = [self.chunks,
+                      _quantize_up(fitted.chunk_sizes, cfg.align)]
+        from repro.core.slab_policy import covering_default_classes
+        defaults = _quantize_up(
+            covering_default_classes(support, k=k, page_size=cfg.page_size),
+            cfg.align)
+        if defaults.size:
+            candidates.append(defaults)
+        scores = _score_frontier(candidates, support, freqs,
+                                 page_size=cfg.page_size)
+        best = int(np.argmin(scores[1:])) + 1   # best non-current candidate
+        winner = candidates[best]
+        # The frontier scores ARE the waste values (row 0 is the current
+        # schedule; padding is waste-neutral) — float32 round-off is a
+        # few bytes on ~1e8 totals, far inside the 2% hysteresis band.
+        w_cur = int(round(scores[0]))
+        w_new = int(round(scores[best]))
+        rel = (w_cur - w_new) / max(w_cur, 1)
+        if rel < cfg.min_rel_improvement:
+            # The schedule is still (near-)optimal for current traffic:
+            # re-anchor the reference so steady-state traffic that merely
+            # *settled* far from the old fitting histogram stops
+            # triggering a full candidate evaluation every check.
+            self.reference = self.sketch.snapshot_weights()
+            return self._decide(False, "improvement-below-hysteresis", drift,
+                                chunks=winner, w_cur=w_cur, w_new=w_new)
+        # Savings accrue over future traffic (amortization_windows sketch
+        # masses); migration cost is paid once, now.
+        savings = float(w_cur - w_new) * cfg.amortization_windows
+        cost = cfg.cost_weight * float(cost_bytes_fn(winner)
+                                       if cost_bytes_fn else 0.0)
+        if savings <= cost:
+            return self._decide(False, "cost-exceeds-savings", drift,
+                                chunks=winner, w_cur=w_cur, w_new=w_new,
+                                savings=savings, cost=cost)
+        self.chunks = winner
+        self.reference = self.sketch.snapshot_weights()
+        self._last_refit_at = self.n_observed
+        self.n_refits += 1
+        return self._decide(True, "refit", drift, chunks=winner,
+                            w_cur=w_cur, w_new=w_new,
+                            savings=savings, cost=cost)
+
+    def _decide(self, approved: bool, reason: str, drift: float, *,
+                chunks: Optional[np.ndarray] = None, w_cur: int = 0,
+                w_new: int = 0, savings: float = 0.0,
+                cost: float = 0.0) -> RefitDecision:
+        d = RefitDecision(approved=approved, reason=reason, drift=drift,
+                          chunks=chunks, current_waste=w_cur,
+                          candidate_waste=w_new, predicted_savings=savings,
+                          predicted_cost=cost,
+                          at_observation=self.n_observed)
+        self.decisions.append(d)
+        return d
+
+    # -- unconditional refit (manual / legacy cadence path) ------------------
+    def refit_now(self, k: Optional[int] = None, *,
+                  method: Optional[str] = None,
+                  policy=None) -> np.ndarray:
+        """Fit on the live sketch unconditionally and adopt the result.
+
+        This is the legacy ``refit_every`` path and the manual-maintenance
+        path; the drift/cost gates are bypassed by design.
+        """
+        support, freqs = self.sketch.snapshot()
+        if support.size == 0:
+            return self.chunks
+        cfg = self.config
+        pol = policy or self.policy
+        sched = pol.fit(support, freqs, k or cfg.k or len(self.chunks),
+                        method=method or cfg.method, baseline=self.chunks)
+        self.chunks = _quantize_up(sched.chunk_sizes, cfg.align)
+        self.reference = self.sketch.snapshot_weights()
+        self._last_refit_at = self.n_observed
+        self.n_refits += 1
+        return self.chunks

@@ -52,13 +52,22 @@ PAPER_WORKLOADS: Tuple[PaperWorkload, ...] = (
 PAPER_N_ITEMS = 1_000_000
 
 
-def lognormal_params_from_moments(mean: float, std: float) -> Tuple[float, float]:
-    """(mu_log, sigma_log) of a LogNormal with the given byte-space moments."""
-    if mean <= 0:
+def lognormal_params_from_moments(mean, std):
+    """(mu_log, sigma_log) of a LogNormal with the given byte-space moments.
+
+    Accepts scalars (returns floats) or same-shape arrays (returns
+    arrays) — the non-stationary traffic generators interpolate the
+    moments per item.
+    """
+    mean = np.asarray(mean, dtype=np.float64)
+    std = np.asarray(std, dtype=np.float64)
+    if np.any(mean <= 0):
         raise ValueError(f"mean must be positive, got {mean}")
     var_ratio = (std / mean) ** 2
-    sigma_log = float(np.sqrt(np.log1p(var_ratio)))
-    mu_log = float(np.log(mean) - 0.5 * sigma_log**2)
+    sigma_log = np.sqrt(np.log1p(var_ratio))
+    mu_log = np.log(mean) - 0.5 * sigma_log**2
+    if mu_log.ndim == 0:
+        return float(mu_log), float(sigma_log)
     return mu_log, sigma_log
 
 

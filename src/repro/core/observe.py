@@ -1,0 +1,182 @@
+"""Streaming observation of item sizes — the first half of the paper's loop.
+
+The paper's technique is *analyse the sizes of items previously entered,
+then re-configure the slab classes*. Everything downstream (the waste
+objective, the optimizers, `SlabPolicy`) consumes a `(support, freqs)`
+histogram; this module produces that histogram **online** from a stream
+of sizes, with exponential decay so the estimate tracks drifting traffic
+instead of averaging over the whole past.
+
+`DecayedSizeHistogram` is an exponentially-decayed sparse histogram with
+O(1) amortized updates (lazy per-bin decay: each bin stores the step at
+which it was last touched and is brought forward only when re-observed,
+pruned, or snapshotted). `snapshot()` returns the same `(support, freqs)`
+int64 pair as `repro.core.distribution.size_histogram`, so every consumer
+of the offline histogram works unchanged on the live sketch.
+
+`histogram_distance` is the drift signal: normalized L1 (total variation)
+or earth-mover's distance between two histograms over their shared
+support, both in [0, 1]. The controller compares the live sketch against
+the fitting-time reference histogram to decide when the schedule is
+stale.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+class DecayedSizeHistogram:
+    """Exponentially-decayed sparse size histogram, O(1) per observation.
+
+    ``half_life`` is measured in *observations*: after ``half_life``
+    further observations, a sample's weight has halved. ``half_life=None``
+    disables decay — the sketch then reproduces ``size_histogram`` of the
+    full stream exactly (used by consumers that want the legacy
+    every-item-counts behaviour and by round-trip tests).
+    """
+
+    def __init__(self, *, half_life: Optional[float] = None,
+                 max_bins: int = 1 << 14):
+        if half_life is not None and half_life <= 0:
+            raise ValueError(f"half_life must be positive, got {half_life}")
+        if max_bins < 2:
+            raise ValueError("max_bins must be >= 2")
+        self.half_life = half_life
+        self.max_bins = max_bins
+        self._decay = 0.5 ** (1.0 / half_life) if half_life else 1.0
+        self._w: Dict[int, float] = {}       # size -> weight at step _last[s]
+        self._last: Dict[int, int] = {}      # size -> step of last update
+        self._t = 0                          # observation clock
+        self.n_observed = 0                  # lifetime count (undecayed)
+        self._total = 0.0                    # decayed total weight
+
+    # -- updates -----------------------------------------------------------
+    def observe(self, size: int, weight: float = 1.0) -> None:
+        """Record one size. O(1); decay of other bins is lazy."""
+        s = int(size)
+        if s < 0:
+            raise ValueError(f"size must be non-negative, got {s}")
+        self._t += 1
+        self.n_observed += 1
+        self._total = self._total * self._decay + weight
+        w = self._w.get(s)
+        if w is not None:
+            self._w[s] = w * self._decay ** (self._t - self._last[s]) + weight
+        else:
+            if len(self._w) >= self.max_bins:
+                self._prune()
+            self._w[s] = weight
+        self._last[s] = self._t
+
+    def observe_many(self, sizes) -> None:
+        for s in np.asarray(sizes).ravel().tolist():
+            self.observe(int(s))
+
+    # -- views -------------------------------------------------------------
+    @property
+    def effective_count(self) -> float:
+        """Decayed total mass (== n_observed when decay is disabled)."""
+        return self._total
+
+    def _synced_weights(self) -> Dict[int, float]:
+        """All bins decayed forward to the current step."""
+        if self._decay == 1.0:
+            return dict(self._w)
+        return {s: w * self._decay ** (self._t - self._last[s])
+                for s, w in self._w.items()}
+
+    def _prune(self) -> None:
+        """Drop the lightest ~10% of bins (called when max_bins is hit)."""
+        synced = self._synced_weights()
+        keep = sorted(synced, key=synced.__getitem__, reverse=True)
+        keep = keep[:max(1, int(self.max_bins * 0.9))]
+        kept = set(keep)
+        t = self._t
+        self._w = {s: synced[s] for s in keep}
+        self._last = {s: t for s in keep}
+        for s in list(kept):
+            if self._w[s] <= 0.0:
+                del self._w[s]
+                del self._last[s]
+
+    def snapshot(self) -> Tuple[np.ndarray, np.ndarray]:
+        """``(support, freqs)`` int64, compatible with ``size_histogram``.
+
+        Weights are rounded to the nearest integer; bins whose decayed
+        weight rounds to zero are dropped (they no longer represent
+        current traffic). With decay disabled this is bit-exact with
+        ``size_histogram`` over every observed size.
+        """
+        synced = self._synced_weights()
+        if not synced:
+            return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
+        support = np.asarray(sorted(synced), dtype=np.int64)
+        freqs = np.rint([synced[int(s)] for s in support]).astype(np.int64)
+        keep = freqs > 0
+        return support[keep], freqs[keep]
+
+    def snapshot_weights(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Float-weight variant of :meth:`snapshot` (no rounding) — the
+        drift metric uses this to avoid quantization noise."""
+        synced = self._synced_weights()
+        if not synced:
+            return (np.zeros(0, dtype=np.int64),
+                    np.zeros(0, dtype=np.float64))
+        support = np.asarray(sorted(synced), dtype=np.int64)
+        w = np.asarray([synced[int(s)] for s in support], dtype=np.float64)
+        keep = w > 0.0
+        return support[keep], w[keep]
+
+    def reset(self) -> None:
+        self._w.clear()
+        self._last.clear()
+        self._t = 0
+        self.n_observed = 0
+        self._total = 0.0
+
+
+def _aligned(a: Tuple[np.ndarray, np.ndarray],
+             b: Tuple[np.ndarray, np.ndarray]
+             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    sa, fa = a
+    sb, fb = b
+    sa = np.asarray(sa, dtype=np.int64)
+    sb = np.asarray(sb, dtype=np.int64)
+    support = np.union1d(sa, sb)
+    pa = np.zeros(len(support), dtype=np.float64)
+    pb = np.zeros(len(support), dtype=np.float64)
+    pa[np.searchsorted(support, sa)] = np.asarray(fa, dtype=np.float64)
+    pb[np.searchsorted(support, sb)] = np.asarray(fb, dtype=np.float64)
+    return support, pa, pb
+
+
+def histogram_distance(a, b, *, metric: str = "l1") -> float:
+    """Distance in [0, 1] between two ``(support, freqs)`` histograms.
+
+    ``"l1"``  — total variation: ``0.5 * sum |p - q|`` of the normalized
+    mass functions over the union support. Insensitive to *how far* mass
+    moved; cheap and scale-free.
+    ``"emd"`` — earth-mover's (Wasserstein-1) distance of the normalized
+    distributions, divided by the span of the union support, so shifting
+    all mass from one end to the other scores 1.
+    """
+    support, pa, pb = _aligned(a, b)
+    if support.size == 0:
+        return 0.0
+    ta, tb = pa.sum(), pb.sum()
+    if ta <= 0 or tb <= 0:
+        return 0.0 if ta == tb else 1.0
+    pa = pa / ta
+    pb = pb / tb
+    if metric == "l1":
+        return float(0.5 * np.abs(pa - pb).sum())
+    if metric == "emd":
+        if support.size == 1:
+            return 0.0
+        span = float(support[-1] - support[0])
+        cdf_gap = np.abs(np.cumsum(pa - pb))[:-1]
+        gaps = np.diff(support).astype(np.float64)
+        return float(np.sum(cdf_gap * gaps) / span)
+    raise ValueError(f"unknown metric {metric!r}")

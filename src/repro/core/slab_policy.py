@@ -177,6 +177,22 @@ def covering_default_classes(support, *, k: int | None = None,
     return defaults[lo:hi + 1].astype(np.int64)
 
 
+def schedule_with_default_tail(chunks, *,
+                               page_size: int = PAGE_SIZE) -> np.ndarray:
+    """Learned classes plus the stock geometric classes above them.
+
+    A real memcached that re-learns classes for its observed traffic span
+    still keeps the default classes above that span (items larger than
+    anything seen so far must remain storable). The adaptive benchmarks
+    deploy every learned schedule this way so an operating-point shift
+    degrades gracefully into the geometric tail instead of rejecting.
+    """
+    chunks = np.unique(np.asarray(chunks, dtype=np.int64))
+    defaults = default_memcached_schedule(page_size=page_size)
+    return np.unique(np.concatenate(
+        [chunks, defaults[defaults > chunks[-1]]]))
+
+
 def _pad_or_trim(chunks: np.ndarray, k: int, support: np.ndarray
                  ) -> np.ndarray:
     """Give a search exactly k movable classes without losing coverage."""

@@ -1,12 +1,14 @@
 """The paper's testbed: a Memcached-faithful slab-allocator simulator."""
 from repro.memcached.metrics import WasteComparison, compare_schedules
-from repro.memcached.slab_allocator import (SlabAllocator, SlabStats,
-                                            run_workload)
-from repro.memcached.traffic import (all_paper_workloads, paper_histogram,
-                                     paper_traffic)
+from repro.memcached.slab_allocator import (ReconfigureReport, SlabAllocator,
+                                            SlabStats, run_workload)
+from repro.memcached.traffic import (all_paper_workloads, diurnal_traffic,
+                                     drift_traffic, paper_histogram,
+                                     paper_traffic, phase_shift_traffic)
 
 __all__ = [
-    "WasteComparison", "compare_schedules", "SlabAllocator", "SlabStats",
-    "run_workload", "all_paper_workloads", "paper_histogram",
-    "paper_traffic",
+    "WasteComparison", "compare_schedules", "ReconfigureReport",
+    "SlabAllocator", "SlabStats", "run_workload", "all_paper_workloads",
+    "diurnal_traffic", "drift_traffic", "paper_histogram", "paper_traffic",
+    "phase_shift_traffic",
 ]

@@ -12,12 +12,26 @@ Models the storage hierarchy the paper measures:
 
 The paper's measurement — "Memory wasted" — is the internal fragmentation
 of resident items: sum(chunk_size - item_size). That is ``stats().waste``.
+
+Live reconfiguration (the paper's loop, applied): ``reassign`` moves one
+page between classes with memcached's ``slabs reassign`` semantics (the
+victim class's coldest page is reclaimed, its resident items evicted, the
+page re-carved for the recipient class), and ``reconfigure`` retargets the
+whole schedule: classes whose chunk size survives keep their pages and
+items; vanished classes have every resident item evicted and their pages
+parked in a free pool that future page grabs draw from first. Pages are
+conserved across both (``pages_allocated`` never changes), and the costs
+the controller's model charges — ``migration_evictions`` and
+``n_reassigned_pages`` — are tracked in stats.
+
+A key → class index makes ``get``/``delete`` O(1) instead of scanning
+every class's LRU; the adaptive benchmarks replay millions of ops.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -36,10 +50,23 @@ class SlabStats:
     page_tail_waste: int     # per-page remainder not usable as chunks
     per_class_resident: Dict[int, int]
     per_class_waste: Dict[int, int]
+    n_reassigned_pages: int = 0   # pages moved between classes (live reconfig)
+    migration_evictions: int = 0  # items evicted to reclaim victim pages
 
     @property
     def waste_fraction(self) -> float:
         return self.waste / max(self.item_bytes, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconfigureReport:
+    """Outcome of one live schedule change (the reconfiguration cost)."""
+
+    evicted_items: int        # items lost from vanished classes
+    evicted_bytes: int        # their payload bytes (the migration cost)
+    reassigned_pages: int     # pages parked for re-carving
+    kept_classes: Tuple[int, ...]
+    new_classes: Tuple[int, ...]
 
 
 class _SlabClass:
@@ -50,6 +77,10 @@ class _SlabClass:
         self.free_chunks = 0
         self.pages = 0
         self.lru: OrderedDict[str, int] = OrderedDict()  # key -> item size
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(self.lru.values())
 
 
 class SlabAllocator:
@@ -70,9 +101,13 @@ class SlabAllocator:
         self.classes: List[_SlabClass] = [_SlabClass(c) for c in chunk_sizes]
         self.mem_limit = mem_limit
         self.pages_allocated = 0
+        self.free_pages = 0            # reclaimed pages awaiting re-carving
         self.n_rejected = 0
         self.n_evicted = 0
+        self.n_reassigned_pages = 0
+        self.migration_evictions = 0
         self._total_set = 0
+        self._key_class: Dict[str, _SlabClass] = {}  # O(1) get/delete index
 
     # -- class selection ---------------------------------------------------
     def class_for(self, total_size: int) -> Optional[int]:
@@ -83,11 +118,14 @@ class SlabAllocator:
 
     # -- memory management -------------------------------------------------
     def _grab_page(self, cls: _SlabClass) -> bool:
-        if (self.mem_limit is not None
+        if self.free_pages:
+            self.free_pages -= 1
+        elif (self.mem_limit is not None
                 and (self.pages_allocated + 1) * self.page_size
                 > self.mem_limit):
             return False
-        self.pages_allocated += 1
+        else:
+            self.pages_allocated += 1
         cls.pages += 1
         cls.free_chunks += self.page_size // cls.chunk_size
         return True
@@ -101,7 +139,8 @@ class SlabAllocator:
             self.n_rejected += 1
             return False
         cls = self.classes[idx]
-        if key in cls.lru:                      # overwrite in place
+        prev = self._key_class.get(key)
+        if prev is cls:                         # overwrite in place
             cls.lru.move_to_end(key)
             cls.lru[key] = total
             return True
@@ -109,27 +148,111 @@ class SlabAllocator:
             if not cls.lru:                     # nothing to evict
                 self.n_rejected += 1
                 return False
-            cls.lru.popitem(last=False)         # evict class LRU head
+            victim, _ = cls.lru.popitem(last=False)  # evict class LRU head
+            del self._key_class[victim]
             self.n_evicted += 1
             cls.free_chunks += 1
         cls.free_chunks -= 1
         cls.lru[key] = total
+        self._key_class[key] = cls
+        if prev is not None:   # size moved the key to a new class
+            del prev.lru[key]
+            prev.free_chunks += 1
         return True
 
     def get(self, key: str) -> bool:
-        for cls in self.classes:
-            if key in cls.lru:
-                cls.lru.move_to_end(key)
-                return True
-        return False
+        cls = self._key_class.get(key)
+        if cls is None:
+            return False
+        cls.lru.move_to_end(key)
+        return True
 
     def delete(self, key: str) -> bool:
-        for cls in self.classes:
-            if key in cls.lru:
-                del cls.lru[key]
-                cls.free_chunks += 1
-                return True
-        return False
+        cls = self._key_class.pop(key, None)
+        if cls is None:
+            return False
+        del cls.lru[key]
+        cls.free_chunks += 1
+        return True
+
+    # -- live reconfiguration ------------------------------------------------
+    def reassign(self, src: int, dst: int) -> int:
+        """Move one page from class ``src`` to class ``dst`` (class indexes),
+        with memcached ``slabs reassign`` semantics: reclaim the victim
+        class's coldest page by evicting its resident items, then re-carve
+        the page into the recipient's chunk size. Returns evicted items.
+        """
+        if src == dst:
+            raise ValueError("src and dst must differ")
+        s_cls, d_cls = self.classes[src], self.classes[dst]
+        if s_cls.pages == 0:
+            raise ValueError(f"class {s_cls.chunk_size} has no pages")
+        per_page = self.page_size // s_cls.chunk_size
+        evicted = 0
+        # The simulator does not track page membership; the coldest page
+        # is modelled as the LRU-oldest items beyond the free chunks.
+        while s_cls.free_chunks < per_page:
+            victim, _ = s_cls.lru.popitem(last=False)
+            del self._key_class[victim]
+            s_cls.free_chunks += 1
+            evicted += 1
+        s_cls.free_chunks -= per_page
+        s_cls.pages -= 1
+        d_cls.pages += 1
+        d_cls.free_chunks += self.page_size // d_cls.chunk_size
+        self.n_reassigned_pages += 1
+        self.migration_evictions += evicted
+        return evicted
+
+    def migration_cost_bytes(self, new_chunk_sizes: Sequence[int]) -> int:
+        """Predicted eviction bytes of reconfiguring to ``new_chunk_sizes``
+        (resident payload of classes that would vanish) — the quantity the
+        controller's cost model charges against predicted savings."""
+        new = {int(c) for c in new_chunk_sizes}
+        return sum(cls.resident_bytes for cls in self.classes
+                   if cls.chunk_size not in new)
+
+    def reconfigure(self, new_chunk_sizes: Sequence[int]
+                    ) -> ReconfigureReport:
+        """Retarget the schedule live. Surviving chunk sizes keep their
+        pages and resident items; vanished classes evict everything and
+        park their pages in the free pool (``pages_allocated`` conserved).
+        """
+        new_sizes = sorted({int(c) for c in new_chunk_sizes})
+        if not new_sizes:
+            raise ValueError("need at least one slab class")
+        if new_sizes[0] <= 0 or new_sizes[-1] > self.page_size:
+            raise ValueError(
+                f"chunk sizes must be in (0, {self.page_size}]")
+        by_size = {cls.chunk_size: cls for cls in self.classes}
+        kept = []
+        classes: List[_SlabClass] = []
+        for size in new_sizes:
+            old = by_size.pop(size, None)
+            if old is not None:
+                kept.append(size)
+                classes.append(old)
+            else:
+                classes.append(_SlabClass(size))
+        evicted_items = 0
+        evicted_bytes = 0
+        reassigned = 0
+        for victim in by_size.values():
+            evicted_items += len(victim.lru)
+            evicted_bytes += victim.resident_bytes
+            for key in victim.lru:
+                del self._key_class[key]
+            victim.lru.clear()
+            reassigned += victim.pages
+            self.free_pages += victim.pages
+        self.classes = classes
+        self.chunk_sizes = np.asarray(new_sizes, dtype=np.int64)
+        self.n_reassigned_pages += reassigned
+        self.migration_evictions += evicted_items
+        return ReconfigureReport(
+            evicted_items=evicted_items, evicted_bytes=evicted_bytes,
+            reassigned_pages=reassigned, kept_classes=tuple(kept),
+            new_classes=tuple(new_sizes))
 
     # -- measurement ---------------------------------------------------------
     def stats(self) -> SlabStats:
@@ -154,7 +277,9 @@ class SlabAllocator:
             n_evicted=self.n_evicted, pages_allocated=self.pages_allocated,
             item_bytes=item_bytes, allocated_bytes=allocated,
             waste=allocated - item_bytes, page_tail_waste=tail,
-            per_class_resident=per_resident, per_class_waste=per_waste)
+            per_class_resident=per_resident, per_class_waste=per_waste,
+            n_reassigned_pages=self.n_reassigned_pages,
+            migration_evictions=self.migration_evictions)
 
 
 def run_workload(chunk_sizes: Sequence[int], sizes: np.ndarray, *,

@@ -1,4 +1,18 @@
-"""Workload generation for the paper's experiments (Tables 1-5)."""
+"""Workload generation for the paper's experiments (Tables 1-5), plus
+non-stationary variants the online controller adapts to.
+
+The paper's runs are stationary — one (mu, sigma) operating point per
+table — which can never exercise the *loop* half of its contribution.
+The non-stationary generators below provide the scenarios where online
+adaptation wins or loses:
+
+* ``phase_shift_traffic`` — an abrupt jump between two paper operating
+  points mid-stream (a deploy / tenant change),
+* ``drift_traffic``       — gradual linear drift of the byte-space
+  moments from one operating point to another (organic growth),
+* ``diurnal_traffic``     — a periodic mixture of two operating points
+  (day/night traffic mix).
+"""
 from __future__ import annotations
 
 from typing import Tuple
@@ -7,6 +21,7 @@ import numpy as np
 
 from repro.core.distribution import (PAGE_SIZE, PAPER_N_ITEMS,
                                      PAPER_WORKLOADS, PaperWorkload,
+                                     lognormal_params_from_moments,
                                      sample_lognormal_sizes, size_histogram)
 
 
@@ -30,3 +45,55 @@ def paper_histogram(workload: PaperWorkload, *,
 
 def all_paper_workloads() -> Tuple[PaperWorkload, ...]:
     return PAPER_WORKLOADS
+
+
+# -- non-stationary workloads (what the adaptive controller serves) ---------
+
+def phase_shift_traffic(a: PaperWorkload, b: PaperWorkload, *,
+                        n_items: int = PAPER_N_ITEMS,
+                        shift_at: float = 0.5,
+                        seed: int = 0) -> np.ndarray:
+    """Abrupt operating-point change: sizes ~ ``a`` until ``shift_at`` of
+    the stream, then ~ ``b``."""
+    if not 0.0 < shift_at < 1.0:
+        raise ValueError(f"shift_at must be in (0, 1), got {shift_at}")
+    n_a = int(n_items * shift_at)
+    rng = np.random.default_rng(seed)
+    part_a = sample_lognormal_sizes(rng, n_a, a.mu, a.sigma,
+                                    max_size=PAGE_SIZE)
+    part_b = sample_lognormal_sizes(rng, n_items - n_a, b.mu, b.sigma,
+                                    max_size=PAGE_SIZE)
+    return np.concatenate([part_a, part_b])
+
+
+def drift_traffic(a: PaperWorkload, b: PaperWorkload, *,
+                  n_items: int = PAPER_N_ITEMS,
+                  seed: int = 0) -> np.ndarray:
+    """Gradual drift: the byte-space (mean, std) interpolate linearly from
+    ``a`` to ``b`` across the stream; item ``i`` is drawn at the
+    interpolated operating point."""
+    rng = np.random.default_rng(seed)
+    t = np.linspace(0.0, 1.0, n_items)
+    mean = (1.0 - t) * a.mu + t * b.mu
+    std = (1.0 - t) * a.sigma + t * b.sigma
+    mu_log, sigma_log = lognormal_params_from_moments(mean, std)
+    raw = np.exp(mu_log + sigma_log * rng.standard_normal(n_items))
+    return np.clip(np.rint(raw), 1, PAGE_SIZE).astype(np.int64)
+
+
+def diurnal_traffic(a: PaperWorkload, b: PaperWorkload, *,
+                    n_items: int = PAPER_N_ITEMS,
+                    period: int = 200_000,
+                    seed: int = 0) -> np.ndarray:
+    """Periodic mixture: item ``i`` is drawn from ``b`` with probability
+    ``0.5 * (1 - cos(2*pi*i/period))`` (pure-``a`` troughs, pure-``b``
+    peaks) — the day/night shape of production cache traffic."""
+    rng = np.random.default_rng(seed)
+    i = np.arange(n_items)
+    p_b = 0.5 * (1.0 - np.cos(2.0 * np.pi * i / period))
+    from_b = rng.random(n_items) < p_b
+    sizes_a = sample_lognormal_sizes(rng, n_items, a.mu, a.sigma,
+                                     max_size=PAGE_SIZE)
+    sizes_b = sample_lognormal_sizes(rng, n_items, b.mu, b.sigma,
+                                     max_size=PAGE_SIZE)
+    return np.where(from_b, sizes_b, sizes_a)

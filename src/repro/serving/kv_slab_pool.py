@@ -18,9 +18,12 @@ Implementation notes:
     learner fits on the align-quantized length histogram;
   * per-class free lists + bump pointer, O(1) alloc/free — the memcached
     discipline, in tokens instead of bytes;
-  * ``refit()`` re-learns classes online from the sliding histogram of
-    observed lengths (the paper's "analyse the pattern of sizes
-    previously entered"); pools refit at a configurable cadence.
+  * observation and refitting are delegated to the shared
+    ``repro.core.SlabController`` (the paper's "analyse the pattern of
+    sizes previously entered" loop): every ``alloc`` feeds the
+    controller's decayed sketch, ``refit()`` fits unconditionally through
+    it, and ``maybe_refit()`` runs its full drift/hysteresis/cost
+    decision pipeline — the same path the memcached simulator uses.
 """
 from __future__ import annotations
 
@@ -30,7 +33,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import SlabPolicy, size_histogram, waste_exact
+from repro.core import ControllerConfig, SlabController, SlabPolicy
+from repro.core.controller import RefitDecision
 
 ALIGN = 128  # tokens; matches the Pallas kernel's BLOCK_T
 
@@ -75,7 +79,8 @@ class KVSlabPool:
     """Contiguous KV pool with slab-class allocation."""
 
     def __init__(self, pool_tokens: int, chunk_classes, *,
-                 align: int = ALIGN):
+                 align: int = ALIGN,
+                 controller_config: Optional[ControllerConfig] = None):
         self.pool_tokens = int(pool_tokens)
         self.align = align
         self.set_classes(chunk_classes)
@@ -83,7 +88,14 @@ class KVSlabPool:
         self._free: Dict[int, List[int]] = defaultdict(list)
         self._live: Dict[int, Allocation] = {}
         self.n_failed = 0
-        self.observed_lengths: List[int] = []
+        if controller_config is None:
+            # half_life=inf: undecayed sketch == the legacy all-history
+            # histogram, so `refit()` behaves exactly as it used to.
+            controller_config = ControllerConfig(
+                page_size=1 << 22, min_chunk=align, align=align,
+                half_life=float("inf"))
+        self.controller = SlabController(self.chunk_classes,
+                                         config=controller_config)
 
     # -- class management ----------------------------------------------------
     def set_classes(self, chunk_classes) -> None:
@@ -91,6 +103,31 @@ class KVSlabPool:
         if any(c % self.align for c in cc):
             raise ValueError(f"classes must be multiples of {self.align}")
         self.chunk_classes = cc
+        if getattr(self, "_free", None):
+            self._rehome_stranded_free()
+
+    def _carve_range(self, size: int, start: int) -> None:
+        """Split a free token range into current class sizes, largest
+        first (a sub-min-class remainder can still strand — bounded by
+        one min-chunk per range)."""
+        remaining, pos = size, start
+        for c in sorted(self.chunk_classes, reverse=True):
+            while remaining >= c:
+                self._free[c].append(pos)
+                pos += c
+                remaining -= c
+
+    def _rehome_stranded_free(self) -> None:
+        """Re-carve freelist ranges of vanished classes into current
+        class sizes so pool tokens don't leak across refits."""
+        valid = set(self.chunk_classes)
+        stranded = [(size, start)
+                    for size, starts in self._free.items()
+                    if size not in valid for start in starts]
+        for size in [s for s in list(self._free) if s not in valid]:
+            del self._free[size]
+        for size, start in stranded:
+            self._carve_range(size, start)
 
     def class_for(self, length: int) -> Optional[int]:
         for c in self.chunk_classes:            # K is small
@@ -100,7 +137,8 @@ class KVSlabPool:
 
     # -- alloc/free ------------------------------------------------------------
     def alloc(self, request_id: int, length: int) -> Optional[Allocation]:
-        self.observed_lengths.append(length)
+        al = self.align
+        self.controller.observe((int(length) + al - 1) // al * al)
         chunk = self.class_for(length)
         if chunk is None:
             self.n_failed += 1
@@ -131,7 +169,10 @@ class KVSlabPool:
 
     def free(self, request_id: int) -> None:
         a = self._live.pop(request_id)
-        self._free[a.chunk].append(a.start)
+        if a.chunk in self.chunk_classes:
+            self._free[a.chunk].append(a.start)
+        else:   # class vanished in a refit while this request was live
+            self._carve_range(a.chunk, a.start)
 
     def allocation(self, request_id: int) -> Allocation:
         return self._live[request_id]
@@ -139,24 +180,34 @@ class KVSlabPool:
     # -- learning -------------------------------------------------------------
     def refit(self, k: Optional[int] = None, *, method: str = "dp",
               policy: Optional[SlabPolicy] = None) -> np.ndarray:
-        """Re-learn chunk classes from observed lengths (paper's loop).
+        """Re-learn chunk classes from observed lengths (paper's loop),
+        unconditionally, through the shared controller.
 
         Only safe when the pool is empty or during a maintenance window
         (live allocations keep their old chunks; new allocations use the
         new schedule — memcached's own constraint when slab_sizes change
         requires a restart, we allow hot refit for new chunks only).
         """
-        if not self.observed_lengths:
+        if self.controller.n_observed == 0:
             return np.asarray(self.chunk_classes)
-        k = k or len(self.chunk_classes)
-        q = quantize_lengths(np.asarray(self.observed_lengths), self.align)
-        support, freqs = size_histogram(q)
-        policy = policy or SlabPolicy(page_size=1 << 22, min_chunk=self.align)
-        sched = policy.fit(support, freqs, k, method=method,
-                           baseline=np.asarray(self.chunk_classes))
-        new = quantize_lengths(sched.chunk_sizes, self.align)
-        self.set_classes(np.unique(new))
-        return np.unique(new)
+        new = self.controller.refit_now(k or len(self.chunk_classes),
+                                        method=method, policy=policy)
+        self.set_classes(new)
+        return np.asarray(self.chunk_classes)
+
+    def maybe_refit(self) -> Optional[RefitDecision]:
+        """One step of the controller's drift/hysteresis/cost pipeline;
+        applies the new classes when a refit is approved. Live
+        allocations keep their chunks (hot refit), so no migration cost
+        is charged; freelist ranges of vanished classes are re-carved
+        into the new class sizes by ``set_classes``. Chunks still held
+        by live requests re-enter the freelist at their old size on
+        ``free`` and are re-carved at the next class change."""
+        decision = self.controller.maybe_refit()
+        if decision is not None and decision.approved:
+            self.set_classes(decision.chunks)
+            self.controller.set_chunks(self.chunk_classes)
+        return decision
 
     # -- measurement ------------------------------------------------------------
     def stats(self) -> PoolStats:

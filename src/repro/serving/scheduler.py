@@ -39,22 +39,36 @@ class SimResult:
     mean_waste_fraction: float   # time-averaged pool fragmentation
     peak_active: int
     mean_active: float
+    n_refits: int = 0            # schedule changes applied during the run
 
 
 class ContinuousBatcher:
-    """Admit-from-queue / decode-all / free-on-finish loop."""
+    """Admit-from-queue / decode-all / free-on-finish loop.
+
+    Refit modes:
+      * ``refit_every=N`` — legacy cadence: unconditionally re-learn the
+        classes every N steps (through the pool's shared controller);
+      * ``adaptive=True`` — drive the controller's full drift-detection /
+        hysteresis / cost-model pipeline each step; refits happen only
+        when the controller approves one. Decisions land in
+        ``self.refit_decisions``.
+    """
 
     def __init__(self, pool: KVSlabPool, *, max_batch: int = 64,
-                 refit_every: Optional[int] = None):
+                 refit_every: Optional[int] = None,
+                 adaptive: bool = False):
         self.pool = pool
         self.max_batch = max_batch
         self.refit_every = refit_every
+        self.adaptive = adaptive
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}
         self.realloc_copies = 0
         self.realloc_tokens = 0
         self.completed = 0
         self.rejected = 0
+        self.n_refits = 0
+        self.refit_decisions: List = []
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -92,8 +106,17 @@ class ContinuousBatcher:
             if rid in self.pool._live:
                 self.pool.free(rid)
             del self.active[rid]
-        if self.refit_every and t > 0 and t % self.refit_every == 0:
+        if self.adaptive:
+            decision = self.pool.maybe_refit()
+            if decision is not None:
+                self.refit_decisions.append(decision)
+                if decision.approved:
+                    self.n_refits += 1
+        elif self.refit_every and t > 0 and t % self.refit_every == 0:
+            before = list(self.pool.chunk_classes)
             self.pool.refit()
+            if list(self.pool.chunk_classes) != before:
+                self.n_refits += 1
 
     def run(self, workload: List[Request], steps: int) -> SimResult:
         for r in workload:
@@ -117,7 +140,8 @@ class ContinuousBatcher:
             mean_waste_fraction=(float(np.mean(waste_samples))
                                  if waste_samples else 0.0),
             peak_active=int(np.max(active_samples)),
-            mean_active=float(np.mean(active_samples)))
+            mean_active=float(np.mean(active_samples)),
+            n_refits=self.n_refits)
 
 
 def lognormal_request_workload(rng: np.random.Generator, n: int, *,

@@ -1,0 +1,338 @@
+"""The online loop: decayed sketch, drift detection, controller decisions,
+live reassign/reconfigure semantics, and the end-to-end adaptation win."""
+import numpy as np
+import pytest
+
+from repro.core import (ControllerConfig, DecayedSizeHistogram,
+                        SlabController, SlabPolicy, histogram_distance,
+                        schedule_with_default_tail, size_histogram)
+from repro.core.distribution import PAGE_SIZE, PAPER_WORKLOADS
+from repro.memcached import (SlabAllocator, diurnal_traffic, drift_traffic,
+                             phase_shift_traffic)
+
+
+# -- decayed sketch ---------------------------------------------------------
+
+def test_sketch_roundtrip_exact_without_decay():
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(1, 300, 5_000)
+    h = DecayedSizeHistogram()           # no decay
+    h.observe_many(sizes)
+    support, freqs = h.snapshot()
+    ref_s, ref_f = size_histogram(sizes)
+    np.testing.assert_array_equal(support, ref_s)
+    np.testing.assert_array_equal(freqs, ref_f)
+    assert h.effective_count == pytest.approx(len(sizes))
+
+
+def test_sketch_decay_math():
+    half_life = 100.0
+    h = DecayedSizeHistogram(half_life=half_life)
+    h.observe(10)
+    for _ in range(100):                 # one half-life of other traffic
+        h.observe(20)
+    support, weights = h.snapshot_weights()
+    w10 = weights[support.tolist().index(10)]
+    assert w10 == pytest.approx(0.5, rel=1e-9)
+    # total mass follows the geometric series, not the raw count
+    decay = 0.5 ** (1.0 / half_life)
+    expect = 0.5 + (1 - decay**100) / (1 - decay)
+    assert h.effective_count == pytest.approx(expect, rel=1e-9)
+
+
+def test_sketch_old_mass_rounds_away():
+    h = DecayedSizeHistogram(half_life=10.0)
+    h.observe(10)
+    for _ in range(200):                 # 20 half-lives later
+        h.observe(20)
+    support, _ = h.snapshot()
+    assert 10 not in support.tolist()    # decayed weight rounds to zero
+
+
+def test_sketch_bin_budget_prunes_lightest():
+    h = DecayedSizeHistogram(half_life=50.0, max_bins=64)
+    for s in range(1, 200):
+        h.observe(s)
+    assert len(h.snapshot_weights()[0]) <= 64
+    # most recent (heaviest) sizes survive the prune
+    support = h.snapshot_weights()[0]
+    assert 199 in support.tolist()
+
+
+def test_histogram_distance_bounds():
+    a = (np.asarray([10, 20]), np.asarray([5, 5]))
+    same = histogram_distance(a, a)
+    assert same == 0.0
+    b = (np.asarray([100, 200]), np.asarray([3, 7]))
+    assert histogram_distance(a, b, metric="l1") == pytest.approx(1.0)
+    assert 0.0 < histogram_distance(a, b, metric="emd") <= 1.0
+    # scale invariance: freqs x10 is the same distribution
+    c = (np.asarray([10, 20]), np.asarray([50, 50]))
+    assert histogram_distance(a, c) == 0.0
+
+
+# -- reassign / reconfigure semantics ---------------------------------------
+
+def _page_invariant(alloc: SlabAllocator) -> bool:
+    return alloc.pages_allocated == (sum(c.pages for c in alloc.classes)
+                                     + alloc.free_pages)
+
+
+def test_reassign_conserves_pages_and_evicts_coldest():
+    a = SlabAllocator([1024, 4096])
+    for i in range(1500):                # ~1.5 pages of class-1024 items
+        a.set(str(i), 1000)
+    pages_before = a.pages_allocated
+    evicted = a.reassign(0, 1)
+    st = a.stats()
+    assert st.n_reassigned_pages == 1
+    assert st.migration_evictions == evicted > 0
+    assert a.pages_allocated == pages_before      # conserved
+    assert _page_invariant(a)
+    assert not a.get("0")                 # coldest items were evicted
+    assert a.get("1499")                  # hottest survived
+    # the recipient class got a usable page
+    assert a.classes[1].free_chunks == (1 << 20) // 4096
+
+
+def test_reassign_requires_source_page():
+    a = SlabAllocator([1024, 4096])
+    with pytest.raises(ValueError):
+        a.reassign(0, 1)
+
+
+def test_reconfigure_keeps_surviving_class_and_evicts_victims():
+    a = SlabAllocator([512, 1024, 4096])
+    a.set("keep", 1000)     # class 1024 survives
+    a.set("lose", 400)      # class 512 vanishes
+    report = a.reconfigure([700, 1024, 4096])
+    assert report.kept_classes == (1024, 4096)
+    assert report.evicted_items == 1
+    assert report.evicted_bytes == 400
+    assert a.get("keep") and not a.get("lose")
+    assert _page_invariant(a)
+    # the reclaimed page is reused before any new page is drawn
+    pages_before = a.pages_allocated
+    a.set("new", 600)       # lands in the new 700 class
+    assert a.pages_allocated == pages_before
+    assert a.free_pages == 0
+
+
+def test_reconfigure_page_accounting_under_workload():
+    rng = np.random.default_rng(3)
+    a = SlabAllocator([304, 384, 480, 600, 752, 944, 1 << 20])
+    for i, s in enumerate(rng.integers(100, 900, 5000).tolist()):
+        a.set(str(i), int(s))
+    before = a.pages_allocated
+    a.reconfigure([450, 700, 944, 1 << 20])
+    assert a.pages_allocated == before
+    assert _page_invariant(a)
+    assert a.stats().n_resident + a.stats().migration_evictions == 5000
+
+
+def test_migration_cost_bytes_matches_reconfigure():
+    a = SlabAllocator([512, 1024])
+    a.set("x", 500)
+    a.set("y", 900)
+    predicted = a.migration_cost_bytes([1024, 2048])   # 512 vanishes
+    report = a.reconfigure([1024, 2048])
+    assert predicted == report.evicted_bytes == 500
+
+
+def test_get_delete_after_cross_class_overwrite():
+    a = SlabAllocator([64, 128])
+    a.set("k", 50)           # class 64
+    a.set("k", 100)          # moves to class 128
+    st = a.stats()
+    assert st.n_resident == 1 and st.item_bytes == 100
+    assert a.classes[0].free_chunks > 0    # old chunk freed
+    assert a.delete("k")
+    assert not a.delete("k")
+    assert a.stats().n_resident == 0
+
+
+# -- controller decisions ---------------------------------------------------
+
+def _mk_controller(chunks, **over):
+    cfg = dict(k=4, check_every=500, half_life=1000.0,
+               drift_threshold=0.15, min_items_between_refits=1000,
+               min_rel_improvement=0.02)
+    cfg.update(over)
+    return SlabController(chunks, config=ControllerConfig(**cfg))
+
+
+def test_controller_quiet_under_stationary_traffic():
+    rng = np.random.default_rng(0)
+    sizes = rng.normal(500, 12, 6_000).clip(1).astype(int)
+    support, freqs = size_histogram(sizes[:1000])
+    fit = SlabPolicy().fit(support, freqs, 4, method="dp")
+    ctrl = _mk_controller(fit.chunk_sizes)
+    for s in sizes.tolist():
+        ctrl.observe(int(s))
+        ctrl.maybe_refit()
+    assert ctrl.n_refits == 0
+    assert ctrl.n_checks > 0
+    # sampling noise may occasionally cross the drift gate, but the
+    # improvement hysteresis must dismiss it — never an approved refit
+    assert all(d.reason in ("drift-below-threshold",
+                            "improvement-below-hysteresis")
+               for d in ctrl.decisions)
+
+
+def test_controller_cost_model_blocks_expensive_refit():
+    rng = np.random.default_rng(1)
+    a_sizes = rng.normal(500, 12, 2_000).clip(1).astype(int)
+    b_sizes = rng.normal(2000, 20, 2_000).clip(1).astype(int)
+    support, freqs = size_histogram(a_sizes)
+    fit = SlabPolicy().fit(support, freqs, 4, method="dp")
+    huge = 10**18       # no savings can ever amortize this migration cost
+    ctrl = _mk_controller(fit.chunk_sizes)
+    for s in np.concatenate([a_sizes, b_sizes]).tolist():
+        ctrl.observe(int(s))
+        ctrl.maybe_refit(cost_bytes_fn=lambda c: huge)
+    assert ctrl.n_refits == 0
+    assert any(d.reason == "cost-exceeds-savings" for d in ctrl.decisions)
+
+
+def test_refit_decision_records_savings_and_cost():
+    rng = np.random.default_rng(2)
+    a_sizes = rng.normal(500, 12, 2_000).clip(1).astype(int)
+    b_sizes = rng.normal(2000, 20, 3_000).clip(1).astype(int)
+    support, freqs = size_histogram(a_sizes)
+    fit = SlabPolicy().fit(support, freqs, 4, method="dp")
+    ctrl = _mk_controller(fit.chunk_sizes)
+    for s in np.concatenate([a_sizes, b_sizes]).tolist():
+        ctrl.observe(int(s))
+        ctrl.maybe_refit(cost_bytes_fn=lambda c: 1000.0)
+    assert ctrl.n_refits >= 1
+    approved = [d for d in ctrl.decisions if d.approved]
+    d = approved[0]
+    assert d.predicted_savings > d.predicted_cost == 1000.0
+    assert d.candidate_waste < d.current_waste
+    assert d.chunks is not None and d.drift >= 0.15
+
+
+# -- end-to-end: adaptation beats the static schedules ----------------------
+
+def test_phase_shift_adaptive_beats_static():
+    """Paper operating point A -> B mid-stream: the controller must refit
+    at least once and end with lower cumulative waste than the schedule
+    fit on phase A alone."""
+    a, b = PAPER_WORKLOADS[0], PAPER_WORKLOADS[2]
+    n = 24_000
+    sizes = phase_shift_traffic(a, b, n_items=n, shift_at=0.5, seed=11)
+    support, freqs = size_histogram(sizes[:n // 10])
+    fit = SlabPolicy().fit(support, freqs, 6, method="dp")
+    deployed = schedule_with_default_tail(fit.chunk_sizes)
+
+    def replay(chunks, ctrl=None):
+        alloc = SlabAllocator(chunks)
+        cum = 0
+        for i, s in enumerate(sizes.tolist()):
+            s = int(s)
+            idx = alloc.class_for(s)
+            cum += (int(alloc.chunk_sizes[idx]) - s if idx is not None
+                    else PAGE_SIZE - s)
+            alloc.set(str(i), s)
+            if ctrl is not None:
+                ctrl.observe(s)
+                d = ctrl.maybe_refit(
+                    cost_bytes_fn=lambda c: alloc.migration_cost_bytes(
+                        schedule_with_default_tail(c)))
+                if d is not None and d.approved:
+                    deployed_now = schedule_with_default_tail(d.chunks)
+                    alloc.reconfigure(deployed_now)
+                    ctrl.set_chunks(deployed_now)
+                    assert _page_invariant(alloc)
+        return cum, alloc
+
+    ctrl = SlabController(deployed, config=ControllerConfig(
+        k=6, check_every=1000, half_life=2000.0, drift_threshold=0.12,
+        min_items_between_refits=2000,
+        amortization_windows=8.0, cost_weight=0.1))
+    static_waste, _ = replay(deployed)
+    adaptive_waste, alloc = replay(deployed, ctrl)
+
+    assert ctrl.n_refits >= 1
+    assert adaptive_waste < static_waste
+    assert alloc.stats().n_reassigned_pages > 0
+    assert _page_invariant(alloc)
+
+
+def test_nonstationary_traffic_shapes():
+    a, b = PAPER_WORKLOADS[0], PAPER_WORKLOADS[1]
+    ps = phase_shift_traffic(a, b, n_items=4000, shift_at=0.25, seed=0)
+    assert len(ps) == 4000
+    assert ps[:1000].mean() < ps[1000:].mean()
+    dr = drift_traffic(a, b, n_items=4000, seed=0)
+    assert dr[:500].mean() < dr[-500:].mean()
+    di = diurnal_traffic(a, b, n_items=4000, period=2000, seed=0)
+    assert len(di) == 4000 and di.min() >= 1
+    # peak of the cycle is b-dominated, trough is a-dominated
+    assert di[900:1100].mean() > di[:100].mean()
+
+
+# -- serving layer rides the same loop --------------------------------------
+
+def test_kv_pool_refits_through_shared_controller():
+    from repro.serving import KVSlabPool, default_pow2_classes
+    pool = KVSlabPool(1_000_000, default_pow2_classes())
+    assert not hasattr(pool, "observed_lengths")   # bespoke path is gone
+    assert isinstance(pool.controller, SlabController)
+    rng = np.random.default_rng(0)
+    for i, ln in enumerate(rng.normal(3000, 200, 400).clip(1).astype(int)):
+        pool.alloc(i, int(ln))
+        pool.free(i)
+    assert pool.controller.n_observed == 400
+    new = pool.refit(k=4)
+    assert pool.controller.n_refits == 1
+    assert list(new) == list(pool.chunk_classes)
+    assert all(c % pool.align == 0 for c in new)
+
+
+def test_kv_pool_refit_does_not_leak_freelist_tokens():
+    """Free chunks of classes that vanish in a refit must be re-carved
+    into current class sizes, not stranded forever."""
+    from repro.serving import KVSlabPool
+    pool = KVSlabPool(2048, [512, 1024])
+    pool.alloc(0, 500)
+    pool.alloc(1, 900)
+    pool.free(0)                      # freelist: one 512 range
+    pool.set_classes([256, 1024])     # 512 vanishes -> re-carved as 2x256
+    assert pool._free[256] and not pool._free.get(512)
+    bump = pool._bump
+    a = pool.alloc(2, 200)            # reuses re-carved tokens, not bump
+    assert a is not None and a.start < bump and pool._bump == bump
+    pool.free(1)                      # live 1024 chunk still a valid class
+    assert pool._free[1024]
+    # a chunk freed AFTER its class vanished is re-carved on free()
+    pool2 = KVSlabPool(1024, [512, 1024])
+    pool2.alloc(0, 500)
+    pool2.set_classes([256])
+    pool2.free(0)
+    assert len(pool2._free[256]) == 2
+
+
+def test_batcher_adaptive_mode_applies_controller_decisions():
+    from repro.core import ControllerConfig
+    from repro.serving import ContinuousBatcher, KVSlabPool, Request, \
+        default_pow2_classes
+    cfg = ControllerConfig(page_size=1 << 22, min_chunk=128, align=128,
+                           k=6, check_every=100, half_life=200.0,
+                           drift_threshold=0.1,
+                           min_items_between_refits=100)
+    pool = KVSlabPool(4_000_000, default_pow2_classes(),
+                      controller_config=cfg)
+    batcher = ContinuousBatcher(pool, max_batch=16, adaptive=True)
+    rng = np.random.default_rng(4)
+    # prompt-length phase shift mid-workload: the drift detector's cue
+    means = [1000] * 300 + [3000] * 300
+    reqs = [Request(rid=i,
+                    prompt_len=int(np.clip(rng.normal(m, 60), 16, 4000)),
+                    output_len=8)
+            for i, m in enumerate(means)]
+    res = batcher.run(reqs, steps=10_000)
+    assert res.completed + res.rejected == 600
+    assert res.n_refits >= 1
+    assert batcher.refit_decisions          # decisions were threaded through
+    assert pool.stats().active_requests == 0

@@ -1,9 +1,10 @@
 """Unit + property tests for the waste objective."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (PAGE_SIZE, default_waste_fraction,
                         per_class_waste_exact, size_histogram,

@@ -1,9 +1,10 @@
 """DP global optimum: correctness + the paper's §6.3 convergence claim."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import numpy as np
-import pytest
 
 from repro.core import (dp_optimal, dp_optimal_bruteforce, paper_hillclimb,
                         parallel_hillclimb, sample_multimodal_sizes,

@@ -2,12 +2,13 @@
 
 Shape/dtype sweeps per the kernel contract + hypothesis property runs.
 """
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import size_histogram, waste_exact
 from repro.kernels.ops import slab_decode_attention, waste_eval

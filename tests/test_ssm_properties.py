@@ -4,12 +4,13 @@ Key invariant: the chunked algorithms are exact reformulations — output
 must be invariant to the chunk size (the pure-math analogue of a Pallas
 block-shape sweep) and equal to the sequential recurrence.
 """
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.mamba2 import ssd_chunked, ssd_reference
 from repro.models.xlstm import _mlstm_chunked
