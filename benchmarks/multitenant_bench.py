@@ -1,0 +1,173 @@
+"""Benchmark: cross-tenant page arbitration (the Memshare-style layer).
+
+N tenants with divergent size distributions (paper operating points)
+share one physical page pool, their demand peaking out of phase
+(``multitenant_phased_ops``: raised-cosine arrival intensity offset by
+1/N period per tenant, plus TTL churn so an off-peak tenant's pages
+fill with free chunks). Three memory policies:
+
+* ``static``     — each tenant owns a fixed equal share of the pool
+                   (quota = total/N, never moved). The classic sizing
+                   answer; a peaking tenant evicts while its idle
+                   neighbour holds half-empty pages.
+* ``pooled``     — no quotas, first-come-first-served page grabs. Better
+                   while the pool has slack, but pages stick with
+                   whoever grabbed them first: once the pool is
+                   exhausted, an off-peak tenant's cold, hole-riddled
+                   pages are unreachable to the tenant at peak.
+* ``arbitrated`` — equal quotas plus the :class:`TenantArbiter`: the
+                   pressure signal (eviction payload + page denials)
+                   picks the recipient, the cheapest reclaimable page
+                   picks the donor, the controller's cost model gates
+                   the transfer, and quota + page move donor→recipient.
+
+Every mode runs the same per-tenant *intra*-tenant adaptive controllers
+(the PR-1 loop), so the deltas below isolate the *inter*-tenant layer.
+
+The measurement is the paper's, lifted to the pool level: **memory
+holes** = pool bytes not holding live payload (internal fragmentation
++ page tails + free chunks + idle pages), sampled along the stream.
+``cum_hole_byte_ops`` integrates hole bytes over op time; arbitration
+wins by keeping more live payload resident in the same physical pool
+(fewer pressure evictions at each tenant's peak).
+
+``python benchmarks/multitenant_bench.py`` emits the comparison as
+JSON; ``run()`` returns the CSV rows for ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core import ControllerConfig, PagePool, TenantArbiter
+from repro.core.distribution import PAPER_WORKLOADS
+from repro.core.slab_policy import default_memcached_schedule
+from repro.memcached import SlabAllocator, multitenant_phased_ops
+
+PAGE_SIZE = 1 << 16       # 64 KiB pages: item sizes are 0.5-8 KiB, so a
+#                           page is a meaningful arbitration quantum
+TOTAL_PAGES = 88          # 5.5 MiB: between the aggregate demand trough
+#                           (~4.6 MiB) and peak (~7.4 MiB) of the default
+#                           stream, so tenants genuinely contend
+N_SETS = 30_000
+K = 6
+MODES = ("static", "pooled", "arbitrated")
+
+
+def build_arbiter(mode: str, n_tenants: int, *,
+                  total_pages: int = TOTAL_PAGES,
+                  page_size: int = PAGE_SIZE,
+                  arbitrate_every: int = 1000) -> TenantArbiter:
+    """One shared pool + N tenants under the given memory policy.
+
+    All modes run through the same ``TenantArbiter`` object so the
+    per-tenant refit pipeline is identical; the baselines simply never
+    reach the arbitration cadence.
+    """
+    pool = PagePool(total_pages, page_size=page_size)
+    cfg = ControllerConfig(
+        k=K, page_size=page_size, check_every=2000, half_life=4000.0,
+        drift_threshold=0.12, min_items_between_refits=4000,
+        # TTL-churned cache traffic: victims are mostly expired-soon
+        # items, so a migration byte is cheap next to a recurring
+        # waste byte (same reasoning as adaptive_bench)
+        amortization_windows=8.0, cost_weight=0.1)
+    arb = TenantArbiter(
+        pool, controller_config=cfg,
+        arbitrate_every=(arbitrate_every if mode == "arbitrated"
+                         else 1 << 62),
+        amortization_windows=8.0, cost_weight=0.1)
+    classes = default_memcached_schedule(page_size=page_size)
+    for t in range(n_tenants):
+        name = f"tenant{t}"
+        alloc = SlabAllocator(classes, page_size=page_size,
+                              page_pool=pool, tenant=name)
+        arb.register(name, alloc, floor_pages=total_pages // (4 * n_tenants))
+    if mode in ("static", "arbitrated"):
+        pool.equal_partition()
+    return arb
+
+
+def drive(ops, n_tenants: int, mode: str, *,
+          total_pages: int = TOTAL_PAGES, page_size: int = PAGE_SIZE,
+          sample_every: int = 250) -> Dict:
+    """Replay one multi-tenant op stream under ``mode``."""
+    arb = build_arbiter(mode, n_tenants,
+                        total_pages=total_pages, page_size=page_size)
+    pool_bytes = total_pages * page_size
+    cum_holes = 0
+    samples: List[Dict] = []
+    since_sample = 0
+    for op in ops:
+        if op.op == "set":
+            arb.set(f"tenant{op.tenant}", op.key, op.size)
+        else:
+            arb.delete(f"tenant{op.tenant}", op.key)
+        since_sample += 1
+        if since_sample >= sample_every:
+            since_sample = 0
+            live = sum(t.allocator.stats().item_bytes
+                       for t in arb.tenants.values())
+            holes = pool_bytes - live
+            cum_holes += holes * sample_every
+            samples.append({"op": arb.n_ops,
+                            "hole_frac": holes / pool_bytes})
+    assert arb.pool.conserved
+    per_tenant = arb.stats()
+    return {
+        "cum_hole_byte_ops": int(cum_holes),
+        "mean_hole_frac": (sum(s["hole_frac"] for s in samples)
+                           / max(len(samples), 1)),
+        "final_live_bytes": sum(v["item_bytes"] for v in per_tenant.values()),
+        "evicted_bytes": sum(v["evicted_bytes"] for v in per_tenant.values()),
+        "n_page_denials": sum(v["n_page_denials"]
+                              for v in per_tenant.values()),
+        "n_transfers": arb.n_transfers,
+        "n_refits": sum(v["n_refits"] for v in per_tenant.values()),
+        "per_tenant": per_tenant,
+        "trajectory": samples,
+    }
+
+
+def compare(n_sets: int = N_SETS, *, n_tenants: int = 3,
+            seed: int = 7) -> Dict[str, Dict]:
+    """static vs pooled vs arbitrated on one out-of-phase op stream.
+
+    The live working set scales with the stream (item TTL is a fraction
+    of the period, which is a fraction of the stream), so the pool is
+    scaled with ``n_sets`` to keep the same contention at every size.
+    """
+    workloads = PAPER_WORKLOADS[:n_tenants]
+    total_pages = max(12, TOTAL_PAGES * n_sets // N_SETS)
+    ops = multitenant_phased_ops(workloads, n_sets=n_sets,
+                                 trough_mix=0.5, seed=seed)
+    return {mode: drive(ops, n_tenants, mode, total_pages=total_pages)
+            for mode in MODES}
+
+
+def run(n_sets: int = 20_000) -> List[Tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    res = compare(n_sets)
+    dt = (time.perf_counter() - t0) * 1e6 / (len(MODES) * n_sets)
+    return [(
+        "out_of_phase_3tenant", dt,
+        f"static={res['static']['mean_hole_frac']:.4f};"
+        f"pooled={res['pooled']['mean_hole_frac']:.4f};"
+        f"arbitrated={res['arbitrated']['mean_hole_frac']:.4f};"
+        f"transfers={res['arbitrated']['n_transfers']};"
+        f"evicted_mb_arbitrated="
+        f"{res['arbitrated']['evicted_bytes'] / 2**20:.1f}")]
+
+
+def main(n_sets: int = N_SETS) -> Dict:
+    out: Dict = {"n_sets": n_sets, "page_size": PAGE_SIZE,
+                 "total_pages": TOTAL_PAGES, "k": K,
+                 "modes": compare(n_sets)}
+    for mode in MODES:
+        del out["modes"][mode]["trajectory"][:-1]
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

@@ -13,7 +13,8 @@ import traceback
 def main() -> None:
     from benchmarks import (adaptive_bench, bucketing_bench,
                             convergence_bench, k_sweep, kernel_bench,
-                            kv_pool_bench, paper_tables, sigma_sweep)
+                            kv_pool_bench, multitenant_bench, paper_tables,
+                            sigma_sweep)
     suites = [
         ("paper_tables", lambda: paper_tables.run()),
         ("sigma_sweep", lambda: sigma_sweep.run()),
@@ -21,6 +22,7 @@ def main() -> None:
         ("convergence", lambda: convergence_bench.run()),
         ("kv_pool", lambda: kv_pool_bench.run()),
         ("adaptive", lambda: adaptive_bench.run()),
+        ("multitenant", lambda: multitenant_bench.run()),
         ("bucketing", lambda: bucketing_bench.run()),
         ("kernels", lambda: kernel_bench.run()),
     ]

@@ -9,6 +9,7 @@ Public surface:
     slab_policy  — SlabPolicy / SlabSchedule, the composable API
     observe      — streaming decayed size sketch + drift distances
     controller   — SlabController, the online observe→detect→refit loop
+    arbiter      — PagePool + TenantArbiter, cross-tenant page arbitration
 """
 from repro.core.distribution import (PAGE_SIZE, PAPER_N_ITEMS,
                                      PAPER_WORKLOADS, PaperWorkload,
@@ -29,9 +30,12 @@ from repro.core.slab_policy import (SlabPolicy, SlabSchedule,
 from repro.core.waste import (default_waste_fraction, per_class_waste_exact,
                               utilization_exact, waste_batch_jax, waste_exact,
                               waste_jax)
-from repro.core.observe import DecayedSizeHistogram, histogram_distance
+from repro.core.observe import (DecayedSizeHistogram, StreamingSizeSketch,
+                                histogram_distance)
 from repro.core.controller import (ControllerConfig, RefitDecision,
                                    SlabController)
+from repro.core.arbiter import (PagePool, TenantArbiter, TenantPages,
+                                TransferDecision)
 
 __all__ = [
     "PAGE_SIZE", "PAPER_N_ITEMS", "PAPER_WORKLOADS", "PaperWorkload",
@@ -44,6 +48,7 @@ __all__ = [
     "default_memcached_schedule", "schedule_with_default_tail",
     "default_waste_fraction", "per_class_waste_exact", "utilization_exact",
     "waste_batch_jax", "waste_exact", "waste_jax",
-    "DecayedSizeHistogram", "histogram_distance",
+    "DecayedSizeHistogram", "StreamingSizeSketch", "histogram_distance",
     "ControllerConfig", "RefitDecision", "SlabController",
+    "PagePool", "TenantArbiter", "TenantPages", "TransferDecision",
 ]

@@ -1,0 +1,443 @@
+"""Cross-tenant page arbitration — the Memshare-style layer above the
+per-tenant controllers.
+
+The paper learns one slab schedule from one traffic pattern; a
+production fleet serves N applications with divergent size distributions
+out of ONE physical page pool. PR 1 built the single-tenant loop
+(observe → drift → refit → reconfigure); this module adds the missing
+arbitration layer the ROADMAP names: each tenant keeps its own
+:class:`~repro.core.controller.SlabController` adapting its own
+schedule, while a global :class:`TenantArbiter` redistributes *pages*
+between tenants as their demand peaks move out of phase.
+
+Three pieces:
+
+* :class:`PagePool` — the shared physical pool. Every page is
+  tenant-tagged; per-tenant ``quota`` (None = first-come-first-served)
+  and ``floor`` (pages an arbiter may never drain below) bound what
+  arbitration can do. The conservation invariant —
+  ``free + sum(owned) == total`` — holds after every operation and is
+  checked by :attr:`PagePool.conserved`.
+* :class:`TenantArbiter` — owns the per-tenant controllers and the
+  transfer loop. Every ``arbitrate_every`` operations it scores the
+  best donor → recipient page transfer with the controller's own cost
+  model (see below) and executes approved transfers as a quota move
+  plus a ``SlabAllocator.release_page`` on the donor (memcached
+  ``slabs reassign`` eviction semantics, across tenants instead of
+  across classes).
+* :class:`TransferDecision` — one scored transfer verdict, approved or
+  not, mirroring :class:`~repro.core.controller.RefitDecision`.
+
+Transfer cost model (the controller's model, applied across tenants):
+a page granted to the recipient retains up to one page of payload the
+recipient is currently evicting, window after window —
+``benefit = min(pressure_bytes, page_size) * amortization_windows`` —
+while the donor pays ONCE the payload bytes resident on its cheapest
+reclaimable page, weighted by ``cost_weight`` (the same migration-byte
+: waste-byte exchange rate ``ControllerConfig`` uses). A transfer is
+approved only when ``benefit > cost``, the donor stays at or above its
+floor, and total pages are conserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.controller import ControllerConfig, SlabController
+from repro.core.distribution import PAGE_SIZE
+
+
+# ---------------------------------------------------------------------------
+# PagePool
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TenantPages:
+    """Per-tenant page-ownership record inside a :class:`PagePool`."""
+
+    owned: int = 0               # pages currently held by this tenant
+    quota: Optional[int] = None  # max owned (None: unlimited / FCFS)
+    floor: int = 0               # arbiter may never drop quota below this
+    n_denied: int = 0            # acquire() refusals (pressure signal)
+
+
+class PagePool:
+    """A shared physical page pool with tenant-tagged ownership.
+
+    Pages are handed out one at a time via :meth:`acquire` and returned
+    via :meth:`release`; the pool never forgets who holds what, so the
+    conservation invariant ``free_pages + sum(owned) == total_pages``
+    is maintained by construction and exposed as :attr:`conserved`.
+
+    ``quota`` caps what a tenant may hold (``None`` disables the cap —
+    the pooled, first-come-first-served baseline); ``floor`` is the
+    starvation guard honoured by :meth:`move_quota`.
+    """
+
+    def __init__(self, total_pages: int, *, page_size: int = PAGE_SIZE):
+        if total_pages <= 0:
+            raise ValueError(f"total_pages must be positive: {total_pages}")
+        self.total_pages = int(total_pages)
+        self.page_size = int(page_size)
+        self.free_pages = int(total_pages)
+        self._tenants: Dict[str, TenantPages] = {}
+
+    # -- registration --------------------------------------------------------
+    def register(self, tenant: str, *, quota: Optional[int] = None,
+                 floor: int = 0) -> TenantPages:
+        """Add ``tenant`` (idempotent; later calls may tighten quota/floor)."""
+        rec = self._tenants.get(tenant)
+        if rec is None:
+            rec = TenantPages(quota=quota, floor=floor)
+            self._tenants[tenant] = rec
+        else:
+            if quota is not None:
+                rec.quota = quota
+            if floor:
+                rec.floor = floor
+        return rec
+
+    def equal_partition(self, *, floor: Optional[int] = None) -> None:
+        """Set every registered tenant's quota to an equal share of the
+        pool (remainder pages go to the earliest-registered tenants)."""
+        names = list(self._tenants)
+        if not names:
+            raise ValueError("no tenants registered")
+        share, rem = divmod(self.total_pages, len(names))
+        for i, name in enumerate(names):
+            rec = self._tenants[name]
+            rec.quota = share + (1 if i < rem else 0)
+            if floor is not None:
+                rec.floor = floor
+
+    # -- page movement -------------------------------------------------------
+    def acquire(self, tenant: str) -> bool:
+        """Hand one free page to ``tenant``; False when the pool is empty
+        or the tenant is at quota (counted in ``n_denied``)."""
+        rec = self._tenants[tenant]
+        if self.free_pages <= 0 or (rec.quota is not None
+                                    and rec.owned >= rec.quota):
+            rec.n_denied += 1
+            return False
+        self.free_pages -= 1
+        rec.owned += 1
+        return True
+
+    def release(self, tenant: str) -> None:
+        """``tenant`` returns one owned page to the free pool."""
+        rec = self._tenants[tenant]
+        if rec.owned <= 0:
+            raise ValueError(f"tenant {tenant!r} owns no pages")
+        rec.owned -= 1
+        self.free_pages += 1
+
+    def move_quota(self, donor: str, recipient: str, pages: int = 1) -> None:
+        """Shift ``pages`` of quota donor → recipient (the arbiter's
+        bookkeeping half of a transfer). The donor must be
+        quota-managed and stays at or above its floor — the starvation
+        guard; an unmanaged recipient (``quota=None``) simply keeps its
+        unlimited grab rights and only the donor shrinks."""
+        self.shrink_quota(donor, pages)
+        r = self._tenants[recipient]
+        if r.quota is not None:
+            r.quota += pages
+
+    def shrink_quota(self, tenant: str, pages: int = 1) -> None:
+        """Lower a tenant's quota, refusing to cross its floor."""
+        rec = self._tenants[tenant]
+        if rec.quota is None:
+            raise ValueError(
+                f"tenant {tenant!r} is not quota-managed "
+                "(register with quota= or call equal_partition)")
+        if rec.quota - pages < rec.floor:
+            raise ValueError(
+                f"transfer would drain {tenant!r} below its floor "
+                f"({rec.quota}-{pages} < {rec.floor})")
+        rec.quota -= pages
+
+    # -- views ---------------------------------------------------------------
+    def owned(self, tenant: str) -> int:
+        return self._tenants[tenant].owned
+
+    def quota(self, tenant: str) -> Optional[int]:
+        return self._tenants[tenant].quota
+
+    def tenants(self) -> Dict[str, TenantPages]:
+        return dict(self._tenants)
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(rec.owned for rec in self._tenants.values())
+
+    @property
+    def conserved(self) -> bool:
+        """The invariant every transfer must preserve."""
+        return self.free_pages + self.pages_in_use == self.total_pages
+
+
+# ---------------------------------------------------------------------------
+# TenantArbiter
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TransferDecision:
+    """One scored donor → recipient page-transfer verdict."""
+
+    approved: bool
+    reason: str                  # "transfer" | why it was declined
+    donor: Optional[str]
+    recipient: Optional[str]
+    benefit: float               # amortized payload bytes retained
+    cost: float                  # weighted eviction bytes charged to donor
+    evicted_items: int           # donor items actually evicted (approved)
+    evicted_bytes: int
+    at_op: int                   # arbiter op clock when decided
+
+
+@dataclasses.dataclass
+class _Tenant:
+    name: str
+    allocator: "object"            # SlabAllocator-shaped (duck-typed)
+    controller: SlabController
+    # window baselines for the pressure signal
+    evicted_bytes0: int = 0
+    denials0: int = 0
+    pressure: float = 0.0
+
+
+class TenantArbiter:
+    """Global page arbiter over per-tenant slab controllers.
+
+    Each registered tenant brings a ``SlabAllocator`` attached to the
+    shared :class:`PagePool` and gets its own
+    :class:`~repro.core.controller.SlabController` (intra-tenant
+    schedule adaptation continues exactly as in the single-tenant
+    loop). The arbiter adds the inter-tenant axis: route ``set`` /
+    ``delete`` traffic through :meth:`set` / :meth:`delete` and every
+    ``arbitrate_every`` ops it runs :meth:`arbitrate`, which
+
+    1. measures per-tenant *pressure* — payload bytes lost to capacity
+       evictions plus page-denial mass since the last round,
+    2. picks the highest-pressure tenant as recipient and the tenant
+       with the cheapest reclaimable page as donor,
+    3. scores the transfer with the controller's cost model
+       (``benefit = min(pressure, page_size) * amortization_windows``
+       vs ``cost = cost_weight * donor_release_cost_bytes``), and
+    4. executes approved transfers: quota moves donor → recipient and
+       the donor's cheapest page is reclaimed
+       (:meth:`SlabAllocator.release_page`, memcached ``slabs
+       reassign`` eviction semantics) back into the shared free pool
+       for the recipient to grab on demand.
+
+    Guarantees (tested in ``tests/test_multitenant.py``):
+    * pages are conserved across every transfer (``pool.conserved``),
+    * no transfer is approved when predicted benefit <= predicted cost,
+    * no donor is ever drained below its registered ``floor_pages``.
+    """
+
+    def __init__(self, pool: PagePool, *,
+                 controller_config: Optional[ControllerConfig] = None,
+                 arbitrate_every: int = 5000,
+                 amortization_windows: float = 4.0,
+                 cost_weight: float = 0.25,
+                 max_transfers_per_round: int = 4,
+                 tail_default: bool = True):
+        self.pool = pool
+        self.controller_config = controller_config
+        self.arbitrate_every = int(arbitrate_every)
+        self.amortization_windows = float(amortization_windows)
+        self.cost_weight = float(cost_weight)
+        self.max_transfers_per_round = int(max_transfers_per_round)
+        self.tail_default = tail_default
+        self.tenants: Dict[str, _Tenant] = {}
+        self.decisions: List[TransferDecision] = []
+        self.n_transfers = 0
+        self.n_ops = 0
+        self._since_arbitrate = 0
+
+    # -- registration --------------------------------------------------------
+    def register(self, name: str, allocator, *,
+                 controller: Optional[SlabController] = None,
+                 floor_pages: int = 1,
+                 quota: Optional[int] = None) -> SlabController:
+        """Register one tenant. ``allocator`` must be attached to the
+        arbiter's pool (``SlabAllocator(page_pool=pool, tenant=name)``);
+        a per-tenant controller is created from ``controller_config``
+        when none is supplied. Returns the tenant's controller.
+
+        Only quota-managed tenants can *donate* pages — pass ``quota=``
+        here or call ``pool.equal_partition()`` after registering
+        everyone (unmanaged tenants can still receive)."""
+        if name in self.tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        if getattr(allocator, "page_pool", None) is not self.pool:
+            raise ValueError(
+                f"allocator for {name!r} is not attached to this pool")
+        if getattr(allocator, "tenant", None) != name:
+            raise ValueError(
+                f"allocator tenant tag {allocator.tenant!r} != {name!r}")
+        self.pool.register(name, quota=quota, floor=floor_pages)
+        if controller is None:
+            cfg = self.controller_config or ControllerConfig(
+                page_size=self.pool.page_size)
+            controller = SlabController(allocator.chunk_sizes, config=cfg)
+        self.tenants[name] = _Tenant(name=name, allocator=allocator,
+                                     controller=controller)
+        return controller
+
+    # -- traffic -------------------------------------------------------------
+    def set(self, name: str, key: str, value_size: int) -> bool:
+        """Store one item for ``name``: feeds its allocator + sketch, runs
+        the tenant's own refit pipeline, and the arbitration cadence."""
+        t = self.tenants[name]
+        stored = t.allocator.set(key, value_size)
+        t.controller.observe(int(value_size) + t.allocator.item_overhead)
+        self._maybe_refit_tenant(t)
+        self.n_ops += 1
+        self._since_arbitrate += 1
+        if self._since_arbitrate >= self.arbitrate_every:
+            self.arbitrate()
+        return stored
+
+    def delete(self, name: str, key: str) -> bool:
+        """Delete one item; counts toward the arbitration cadence (TTL
+        churn frees the chunks that make cheap donors)."""
+        deleted = self.tenants[name].allocator.delete(key)
+        self.n_ops += 1
+        self._since_arbitrate += 1
+        if self._since_arbitrate >= self.arbitrate_every:
+            self.arbitrate()
+        return deleted
+
+    def _deploy_schedule(self, chunks: np.ndarray) -> np.ndarray:
+        if not self.tail_default:
+            return np.asarray(chunks, dtype=np.int64)
+        from repro.core.slab_policy import schedule_with_default_tail
+        return schedule_with_default_tail(chunks,
+                                          page_size=self.pool.page_size)
+
+    def _maybe_refit_tenant(self, t: _Tenant) -> None:
+        decision = t.controller.maybe_refit(
+            cost_bytes_fn=lambda c: t.allocator.migration_cost_bytes(
+                self._deploy_schedule(c)))
+        if decision is not None and decision.approved:
+            deployed = self._deploy_schedule(decision.chunks)
+            t.allocator.reconfigure(deployed)
+            t.controller.set_chunks(deployed)
+
+    # -- arbitration ---------------------------------------------------------
+    def _refresh_pressure(self) -> None:
+        page_size = self.pool.page_size
+        for t in self.tenants.values():
+            ev = t.allocator.evicted_bytes - t.evicted_bytes0
+            dn = t.allocator.n_page_denials - t.denials0
+            # evicted payload measures what was lost, denial mass the
+            # capacity shortfall; both terms always count so a tiny
+            # eviction can never zero out a heavily-denied tenant
+            t.pressure = float(ev) + float(dn) * page_size
+
+    def _reset_window(self) -> None:
+        for t in self.tenants.values():
+            t.evicted_bytes0 = t.allocator.evicted_bytes
+            t.denials0 = t.allocator.n_page_denials
+
+    def _donor_release_cost(self, t: _Tenant) -> Optional[int]:
+        """Eviction payload of the donor's cheapest reclaimable page, or
+        None when the tenant has nothing it may give (no page above its
+        floor)."""
+        rec = self.pool._tenants[t.name]
+        if rec.quota is None or rec.quota - 1 < rec.floor:
+            return None         # unmanaged or at floor: may not donate
+        if rec.owned < rec.quota:
+            return 0            # unexercised quota: giving it away is free
+        return t.allocator.page_release_cost_bytes()
+
+    def arbitrate(self) -> List[TransferDecision]:
+        """One arbitration round; returns this round's decisions."""
+        self._since_arbitrate = 0
+        self._refresh_pressure()
+        round_decisions: List[TransferDecision] = []
+        page_size = self.pool.page_size
+        names = sorted(self.tenants)
+        for _ in range(self.max_transfers_per_round):
+            recipient = max(
+                (self.tenants[n] for n in names),
+                key=lambda t: t.pressure)
+            if recipient.pressure <= 0.0:
+                break    # nobody is starved; no decision to record
+            benefit = (min(recipient.pressure, float(page_size))
+                       * self.amortization_windows)
+            # cheapest donor that may give a page (floor respected)
+            donor = None
+            donor_cost: Optional[int] = None
+            for n in names:
+                t = self.tenants[n]
+                if t is recipient:
+                    continue
+                c = self._donor_release_cost(t)
+                if c is None:
+                    continue
+                if donor_cost is None or c < donor_cost or (
+                        c == donor_cost and t.pressure < donor.pressure):
+                    donor, donor_cost = t, c
+            if donor is None:
+                # nobody may donate: every other tenant is unmanaged,
+                # at its floor, or holds nothing — the starvation guard
+                round_decisions.append(self._decide(
+                    False, "no-eligible-donor", None, recipient.name,
+                    benefit, 0.0))
+                break
+            cost = self.cost_weight * float(donor_cost)
+            if benefit <= cost:
+                round_decisions.append(self._decide(
+                    False, "cost-exceeds-benefit", donor.name,
+                    recipient.name, benefit, cost))
+                break
+            # execute: quota follows the page; the donor's cheapest page
+            # goes back to the shared free pool for the recipient to
+            # grab on its next demand
+            self.pool.move_quota(donor.name, recipient.name, 1)
+            evicted_items = evicted_bytes = 0
+            if self.pool.owned(donor.name) > self.pool.quota(donor.name):
+                evicted_items, evicted_bytes = donor.allocator.release_page()
+            self.n_transfers += 1
+            round_decisions.append(self._decide(
+                True, "transfer", donor.name, recipient.name, benefit,
+                cost, evicted_items=evicted_items,
+                evicted_bytes=evicted_bytes))
+            recipient.pressure = max(
+                0.0, recipient.pressure - float(page_size))
+        self._reset_window()
+        return round_decisions
+
+    def _decide(self, approved: bool, reason: str, donor: Optional[str],
+                recipient: Optional[str], benefit: float, cost: float, *,
+                evicted_items: int = 0, evicted_bytes: int = 0
+                ) -> TransferDecision:
+        d = TransferDecision(approved=approved, reason=reason, donor=donor,
+                             recipient=recipient, benefit=benefit, cost=cost,
+                             evicted_items=evicted_items,
+                             evicted_bytes=evicted_bytes, at_op=self.n_ops)
+        self.decisions.append(d)
+        return d
+
+    # -- measurement ---------------------------------------------------------
+    def stats(self) -> Dict[str, Dict]:
+        """Per-tenant snapshot: pages owned/quota plus allocator stats."""
+        out = {}
+        for name, t in self.tenants.items():
+            st = t.allocator.stats()
+            out[name] = {
+                "pages_owned": self.pool.owned(name),
+                "quota": self.pool.quota(name),
+                "n_resident": st.n_resident,
+                "item_bytes": st.item_bytes,
+                "waste": st.waste,
+                "n_evicted": st.n_evicted,
+                "evicted_bytes": st.evicted_bytes,
+                "n_page_denials": st.n_page_denials,
+                "n_refits": t.controller.n_refits,
+            }
+        return out

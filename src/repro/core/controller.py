@@ -130,7 +130,26 @@ def _score_frontier(rows: List[np.ndarray], support: np.ndarray,
 
 
 class SlabController:
-    """Drift-aware refit controller over a live size sketch."""
+    """Drift-aware refit controller over a live size sketch.
+
+    One instance per allocator (or per tenant, under
+    :class:`~repro.core.arbiter.TenantArbiter`): feed every observed
+    size through :meth:`observe`/:meth:`observe_many`, call
+    :meth:`maybe_refit` on the hot path (cheap between checks), and
+    apply ``decision.chunks`` to your storage when a decision comes
+    back approved. The full gate pipeline is described in the module
+    docstring; every verdict is kept in ``self.decisions``.
+
+    Attributes:
+        chunks:    the schedule the controller currently believes in
+                   (consumers re-sync via :meth:`set_chunks` after
+                   quantizing/tailing the deployed schedule).
+        sketch:    the live :class:`DecayedSizeHistogram`.
+        reference: fitting-time ``(support, weights)`` histogram the
+                   drift detector compares against (None until the
+                   first check adopts one).
+        n_checks / n_refits / last_drift: loop telemetry.
+    """
 
     def __init__(self, chunk_sizes, *,
                  config: Optional[ControllerConfig] = None,
@@ -178,10 +197,12 @@ class SlabController:
 
     # -- observe -------------------------------------------------------------
     def observe(self, size: int) -> None:
+        """Feed one observed item size into the live sketch. O(1)."""
         self.sketch.observe(size)
         self._since_check += 1
 
     def observe_many(self, sizes) -> None:
+        """Feed a batch of sizes (one flat array) into the live sketch."""
         sizes = np.asarray(sizes).ravel()
         self.sketch.observe_many(sizes)
         self._since_check += len(sizes)

@@ -137,6 +137,11 @@ class DecayedSizeHistogram:
         self._total = 0.0
 
 
+# Public alias: the docs call this the "streaming size sketch" — the
+# name says what it is for, DecayedSizeHistogram says how it works.
+StreamingSizeSketch = DecayedSizeHistogram
+
+
 def _aligned(a: Tuple[np.ndarray, np.ndarray],
              b: Tuple[np.ndarray, np.ndarray]
              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

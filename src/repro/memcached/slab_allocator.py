@@ -24,6 +24,15 @@ conserved across both (``pages_allocated`` never changes), and the costs
 the controller's model charges — ``migration_evictions`` and
 ``n_reassigned_pages`` — are tracked in stats.
 
+Multi-tenancy (the arbitration layer, PR 2): instead of a private
+``mem_limit``, an allocator can draw pages from a shared
+:class:`repro.core.arbiter.PagePool` (``page_pool=`` + ``tenant=``).
+Every page it holds is then tenant-tagged in the pool, ``release_page``
+gives the cheapest-to-reclaim page back (the cross-tenant analogue of
+``slabs reassign``), and ``page_release_cost_bytes`` prices that release
+for the arbiter's cost model. ``evicted_bytes`` / ``n_page_denials``
+are the pressure signals the arbiter reads.
+
 A key → class index makes ``get``/``delete`` O(1) instead of scanning
 every class's LRU; the adaptive benchmarks replay millions of ops.
 """
@@ -31,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
+from itertools import islice
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -52,6 +62,9 @@ class SlabStats:
     per_class_waste: Dict[int, int]
     n_reassigned_pages: int = 0   # pages moved between classes (live reconfig)
     migration_evictions: int = 0  # items evicted to reclaim victim pages
+    evicted_bytes: int = 0        # payload bytes lost to pressure evictions
+    n_page_denials: int = 0       # page grabs refused (mem_limit / pool)
+    tenant: str = "default"       # pool ownership tag (multi-tenant mode)
 
     @property
     def waste_fraction(self) -> float:
@@ -84,26 +97,51 @@ class _SlabClass:
 
 
 class SlabAllocator:
-    """Slab allocator with per-class LRU eviction, memcached semantics."""
+    """Slab allocator with per-class LRU eviction, memcached semantics.
+
+    Memory comes either from an unbounded/`mem_limit`-bounded private
+    pool (single-tenant, the paper's experiment shape) or from a shared
+    tenant-tagged :class:`~repro.core.arbiter.PagePool`
+    (``page_pool=`` + ``tenant=``, the multi-tenant mode the
+    ``TenantArbiter`` drives). Live reconfiguration is page-conserving:
+    ``reassign`` moves pages between classes, ``reconfigure`` retargets
+    the whole schedule, ``release_page`` surrenders a page across
+    tenants. ``stats()`` carries the paper's waste metric plus the
+    pressure/migration counters the controller and arbiter consume.
+    See ``docs/api.md`` for worked examples.
+    """
 
     def __init__(self, chunk_sizes: Sequence[int], *,
                  mem_limit: Optional[int] = None,
                  page_size: int = PAGE_SIZE,
-                 item_overhead: int = 0):
+                 item_overhead: int = 0,
+                 page_pool=None,
+                 tenant: str = "default"):
         chunk_sizes = sorted(int(c) for c in chunk_sizes)
         if not chunk_sizes:
             raise ValueError("need at least one slab class")
         if chunk_sizes[0] <= 0 or chunk_sizes[-1] > page_size:
             raise ValueError(f"chunk sizes must be in (0, {page_size}]")
+        if page_pool is not None:
+            if mem_limit is not None:
+                raise ValueError("page_pool and mem_limit are exclusive")
+            if page_pool.page_size != page_size:
+                raise ValueError(
+                    f"pool page_size {page_pool.page_size} != {page_size}")
+            page_pool.register(tenant)
         self.page_size = page_size
         self.item_overhead = item_overhead
         self.chunk_sizes = np.asarray(chunk_sizes, dtype=np.int64)
         self.classes: List[_SlabClass] = [_SlabClass(c) for c in chunk_sizes]
         self.mem_limit = mem_limit
-        self.pages_allocated = 0
+        self.page_pool = page_pool
+        self.tenant = tenant
+        self.pages_allocated = 0       # pool mode: pages currently owned
         self.free_pages = 0            # reclaimed pages awaiting re-carving
         self.n_rejected = 0
         self.n_evicted = 0
+        self.evicted_bytes = 0
+        self.n_page_denials = 0
         self.n_reassigned_pages = 0
         self.migration_evictions = 0
         self._total_set = 0
@@ -120,9 +158,15 @@ class SlabAllocator:
     def _grab_page(self, cls: _SlabClass) -> bool:
         if self.free_pages:
             self.free_pages -= 1
+        elif self.page_pool is not None:
+            if not self.page_pool.acquire(self.tenant):
+                self.n_page_denials += 1
+                return False
+            self.pages_allocated += 1
         elif (self.mem_limit is not None
                 and (self.pages_allocated + 1) * self.page_size
                 > self.mem_limit):
+            self.n_page_denials += 1
             return False
         else:
             self.pages_allocated += 1
@@ -148,9 +192,10 @@ class SlabAllocator:
             if not cls.lru:                     # nothing to evict
                 self.n_rejected += 1
                 return False
-            victim, _ = cls.lru.popitem(last=False)  # evict class LRU head
+            victim, vbytes = cls.lru.popitem(last=False)  # evict LRU head
             del self._key_class[victim]
             self.n_evicted += 1
+            self.evicted_bytes += vbytes
             cls.free_chunks += 1
         cls.free_chunks -= 1
         cls.lru[key] = total
@@ -187,22 +232,80 @@ class SlabAllocator:
         s_cls, d_cls = self.classes[src], self.classes[dst]
         if s_cls.pages == 0:
             raise ValueError(f"class {s_cls.chunk_size} has no pages")
-        per_page = self.page_size // s_cls.chunk_size
-        evicted = 0
-        # The simulator does not track page membership; the coldest page
-        # is modelled as the LRU-oldest items beyond the free chunks.
-        while s_cls.free_chunks < per_page:
-            victim, _ = s_cls.lru.popitem(last=False)
-            del self._key_class[victim]
-            s_cls.free_chunks += 1
-            evicted += 1
-        s_cls.free_chunks -= per_page
-        s_cls.pages -= 1
+        evicted, _ = self._reclaim_coldest_page(s_cls)
         d_cls.pages += 1
         d_cls.free_chunks += self.page_size // d_cls.chunk_size
+        return evicted
+
+    def _reclaim_coldest_page(self, cls: _SlabClass) -> Tuple[int, int]:
+        """Reclaim one page from ``cls``: evict its LRU-oldest residents
+        until a full page of chunks is free, then un-carve that page.
+        (The simulator does not track page membership; the coldest page
+        is modelled as the LRU-oldest items beyond the free chunks.)
+        Returns ``(evicted_items, payload_bytes)``.
+        """
+        per_page = self.page_size // cls.chunk_size
+        evicted = ebytes = 0
+        while cls.free_chunks < per_page:
+            victim, vbytes = cls.lru.popitem(last=False)
+            del self._key_class[victim]
+            cls.free_chunks += 1
+            evicted += 1
+            ebytes += vbytes
+        cls.free_chunks -= per_page
+        cls.pages -= 1
         self.n_reassigned_pages += 1
         self.migration_evictions += evicted
-        return evicted
+        return evicted, ebytes
+
+    # -- cross-tenant page surrender (the arbiter's execution primitive) -----
+    def _release_cost(self, cls: _SlabClass) -> int:
+        """Payload bytes evicted if ``cls``'s coldest page is reclaimed
+        now (its LRU-oldest residents beyond the free chunks)."""
+        per_page = self.page_size // cls.chunk_size
+        needed = per_page - cls.free_chunks
+        if needed <= 0:
+            return 0
+        return sum(islice(cls.lru.values(), needed))
+
+    def _cheapest_release_class(self) -> Optional[_SlabClass]:
+        """The class whose coldest page is cheapest to reclaim (None
+        when no class holds a page)."""
+        candidates = [c for c in self.classes if c.pages]
+        if not candidates:
+            return None
+        return min(candidates, key=self._release_cost)
+
+    def page_release_cost_bytes(self) -> Optional[int]:
+        """Predicted eviction payload of :meth:`release_page` right now —
+        the donor-side term of the arbiter's transfer cost model. 0 when
+        a parked free page can be surrendered without evicting; None
+        when the allocator holds no page at all."""
+        if self.free_pages:
+            return 0
+        cls = self._cheapest_release_class()
+        return None if cls is None else self._release_cost(cls)
+
+    def release_page(self) -> Tuple[int, int]:
+        """Surrender one owned page (to the shared pool when attached).
+
+        Parked free pages go first (no evictions); otherwise the class
+        whose coldest page is cheapest to reclaim loses that page with
+        ``slabs reassign`` eviction semantics. Returns
+        ``(evicted_items, evicted_bytes)``.
+        """
+        evicted = ebytes = 0
+        if self.free_pages:
+            self.free_pages -= 1
+        else:
+            cls = self._cheapest_release_class()
+            if cls is None:
+                raise ValueError("no page to release")
+            evicted, ebytes = self._reclaim_coldest_page(cls)
+        self.pages_allocated -= 1
+        if self.page_pool is not None:
+            self.page_pool.release(self.tenant)
+        return evicted, ebytes
 
     def migration_cost_bytes(self, new_chunk_sizes: Sequence[int]) -> int:
         """Predicted eviction bytes of reconfiguring to ``new_chunk_sizes``
@@ -279,7 +382,10 @@ class SlabAllocator:
             waste=allocated - item_bytes, page_tail_waste=tail,
             per_class_resident=per_resident, per_class_waste=per_waste,
             n_reassigned_pages=self.n_reassigned_pages,
-            migration_evictions=self.migration_evictions)
+            migration_evictions=self.migration_evictions,
+            evicted_bytes=self.evicted_bytes,
+            n_page_denials=self.n_page_denials,
+            tenant=self.tenant)
 
 
 def run_workload(chunk_sizes: Sequence[int], sizes: np.ndarray, *,

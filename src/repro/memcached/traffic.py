@@ -12,10 +12,20 @@ adaptation wins or loses:
   moments from one operating point to another (organic growth),
 * ``diurnal_traffic``     — a periodic mixture of two operating points
   (day/night traffic mix).
+
+Multi-tenant (what the arbiter serves): ``multitenant_phased_ops``
+interleaves N tenants' op streams over one shared pool, each tenant's
+arrival intensity a raised cosine shifted out of phase with the others
+(tenants peak at different times — the setting where cross-tenant page
+arbitration has something to win), with TTL-style deletes so an
+off-peak tenant's pages accumulate free chunks (the holes arbitration
+reclaims).
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+import heapq
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -97,3 +107,81 @@ def diurnal_traffic(a: PaperWorkload, b: PaperWorkload, *,
     sizes_b = sample_lognormal_sizes(rng, n_items, b.mu, b.sigma,
                                      max_size=PAGE_SIZE)
     return np.where(from_b, sizes_b, sizes_a)
+
+
+# -- multi-tenant workloads (what the arbiter serves) ------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TenantOp:
+    """One operation of an interleaved multi-tenant stream."""
+
+    tenant: int          # index into the workload list
+    op: str              # "set" | "delete"
+    key: str
+    size: int            # item payload bytes (0 for deletes)
+
+
+def multitenant_phased_ops(workloads: Sequence[PaperWorkload], *,
+                           n_sets: int = PAPER_N_ITEMS,
+                           period: int = 0,
+                           lifetime: int = 0,
+                           base_rate: float = 0.1,
+                           trough_mix: float = 0.0,
+                           seed: int = 0) -> List[TenantOp]:
+    """Interleaved op streams for N tenants peaking out of phase.
+
+    Tenant ``t``'s arrival intensity at set ``i`` is
+    ``base_rate + (1 - base_rate) * 0.5 * (1 - cos(2*pi*(i/period -
+    t/N)))`` — raised cosines offset by ``1/N`` of a period, so exactly
+    one tenant is near peak at any time. Each stored item is deleted
+    ``~lifetime`` sets later (uniform 0.5x-1.5x jitter) — cache-TTL
+    churn, so a tenant past its peak holds pages full of free chunks.
+
+    ``trough_mix > 0`` additionally makes each tenant's *size
+    distribution* non-stationary: at its deepest trough a fraction
+    ``trough_mix`` of its items is drawn from the NEXT tenant's
+    operating point (fading to zero at its peak) — per-tenant drift the
+    intra-tenant controllers must chase while the arbiter moves pages.
+
+    Returns ``n_sets`` set ops with their deletes interleaved in arrival
+    order (total length < 2 * n_sets; items whose TTL survives the
+    stream are never deleted). ``period`` defaults to half the stream,
+    ``lifetime`` to a third of the period.
+    """
+    n_t = len(workloads)
+    if n_t < 2:
+        raise ValueError("need at least two tenants")
+    period = period or max(2, n_sets // 2)
+    lifetime = lifetime or max(1, period // 3)
+    rng = np.random.default_rng(seed)
+    sizes = [sample_lognormal_sizes(rng, n_sets, w.mu, w.sigma,
+                                    max_size=PAGE_SIZE) for w in workloads]
+    alt_sizes = [sample_lognormal_sizes(
+        rng, n_sets, workloads[(t + 1) % n_t].mu,
+        workloads[(t + 1) % n_t].sigma, max_size=PAGE_SIZE)
+        for t in range(n_t)]
+    step = np.arange(n_sets)[:, None]
+    phase = np.arange(n_t)[None, :] / n_t
+    cosarg = 2.0 * np.pi * (step / period - phase)
+    intensity = base_rate + (1.0 - base_rate) * 0.5 * (1.0 - np.cos(cosarg))
+    intensity /= intensity.sum(axis=1, keepdims=True)
+    picks = (rng.random(n_sets)[:, None]
+             > np.cumsum(intensity, axis=1)).sum(axis=1)
+    troughness = 0.5 * (1.0 + np.cos(cosarg))   # 1 at trough, 0 at peak
+    use_alt = rng.random(n_sets)
+    ttls = rng.uniform(0.5, 1.5, n_sets) * lifetime
+    ops: List[TenantOp] = []
+    due: List[Tuple[int, int, int, str]] = []   # (expiry, seq, tenant, key)
+    counters = [0] * n_t
+    for i in range(n_sets):
+        while due and due[0][0] <= i:
+            _, _, dt, dkey = heapq.heappop(due)
+            ops.append(TenantOp(dt, "delete", dkey, 0))
+        tn = int(picks[i])
+        key = f"t{tn}:{counters[tn]}"
+        pool = (alt_sizes
+                if use_alt[i] < trough_mix * troughness[i, tn] else sizes)
+        ops.append(TenantOp(tn, "set", key, int(pool[tn][counters[tn]])))
+        counters[tn] += 1
+        heapq.heappush(due, (i + int(ttls[i]), i, tn, key))
+    return ops

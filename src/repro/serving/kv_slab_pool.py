@@ -73,10 +73,31 @@ class Allocation:
     start: int          # pool token offset (ALIGN-multiple)
     chunk: int          # slab class size (tokens)
     length: int         # true KV length
+    tenant: str = "default"   # serving stream this allocation belongs to
+
+
+@dataclasses.dataclass
+class TenantTokens:
+    """Per-tenant accounting inside a shared :class:`KVSlabPool`."""
+
+    quota_tokens: Optional[int] = None   # cap on allocated tokens (None: ∞)
+    allocated_tokens: int = 0            # chunk tokens of live allocations
+    used_tokens: int = 0                 # true KV tokens of live allocations
+    active_requests: int = 0
+    n_failed: int = 0                    # allocs refused (pool or quota)
 
 
 class KVSlabPool:
-    """Contiguous KV pool with slab-class allocation."""
+    """Contiguous KV pool with slab-class allocation.
+
+    One token space, per-class freelists + bump pointer, chunk classes
+    learned online through the shared ``SlabController``. Several
+    serving streams may share the pool as *tenants*
+    (:meth:`register_tenant` / ``alloc(..., tenant=)``): token
+    accounting and failures are tracked per stream, an optional
+    ``quota_tokens`` caps any one stream's share of HBM, and the
+    learned classes come from the merged traffic of all streams.
+    """
 
     def __init__(self, pool_tokens: int, chunk_classes, *,
                  align: int = ALIGN,
@@ -88,6 +109,8 @@ class KVSlabPool:
         self._free: Dict[int, List[int]] = defaultdict(list)
         self._live: Dict[int, Allocation] = {}
         self.n_failed = 0
+        self._tenants: Dict[str, TenantTokens] = {}
+        self.register_tenant("default")
         if controller_config is None:
             # half_life=inf: undecayed sketch == the legacy all-history
             # histogram, so `refit()` behaves exactly as it used to.
@@ -135,13 +158,45 @@ class KVSlabPool:
                 return c
         return None
 
+    # -- tenancy ---------------------------------------------------------------
+    def register_tenant(self, name: str, *,
+                        quota_tokens: Optional[int] = None) -> TenantTokens:
+        """Register one serving stream as a tenant of this pool
+        (idempotent; a later call may set/adjust the token quota). All
+        tenants share the pool's token space, freelists, and learned
+        classes — the controller's sketch sees the merged traffic —
+        while allocated/used/failure accounting is kept per tenant and
+        ``quota_tokens`` caps any one stream's share of HBM."""
+        rec = self._tenants.get(name)
+        if rec is None:
+            rec = TenantTokens(quota_tokens=quota_tokens)
+            self._tenants[name] = rec
+        elif quota_tokens is not None:
+            rec.quota_tokens = quota_tokens
+        return rec
+
     # -- alloc/free ------------------------------------------------------------
-    def alloc(self, request_id: int, length: int) -> Optional[Allocation]:
+    def alloc(self, request_id: int, length: int, *,
+              tenant: str = "default") -> Optional[Allocation]:
+        rec = self._tenants.get(tenant)
+        if rec is None:
+            # strict: a typo'd tenant name must not silently bypass a
+            # registered tenant's quota (PagePool.acquire is equally
+            # strict) — and checked first, so the error path leaves no
+            # phantom observation in the controller's sketch
+            raise KeyError(f"tenant {tenant!r} not registered "
+                           "(call register_tenant first)")
         al = self.align
         self.controller.observe((int(length) + al - 1) // al * al)
         chunk = self.class_for(length)
         if chunk is None:
             self.n_failed += 1
+            rec.n_failed += 1
+            return None
+        if (rec.quota_tokens is not None
+                and rec.allocated_tokens + chunk > rec.quota_tokens):
+            self.n_failed += 1
+            rec.n_failed += 1
             return None
         if self._free[chunk]:
             start = self._free[chunk].pop()
@@ -150,9 +205,13 @@ class KVSlabPool:
             self._bump += chunk
         else:
             self.n_failed += 1
+            rec.n_failed += 1
             return None
-        a = Allocation(request_id, start, chunk, length)
+        a = Allocation(request_id, start, chunk, length, tenant)
         self._live[request_id] = a
+        rec.allocated_tokens += chunk
+        rec.used_tokens += length
+        rec.active_requests += 1
         return a
 
     def extend(self, request_id: int, new_length: int
@@ -162,13 +221,18 @@ class KVSlabPool:
         caller's — it shows up in the scheduler's accounting)."""
         a = self._live[request_id]
         if new_length <= a.chunk:
+            self._tenants[a.tenant].used_tokens += new_length - a.length
             a.length = new_length
             return a
         self.free(request_id)
-        return self.alloc(request_id, new_length)
+        return self.alloc(request_id, new_length, tenant=a.tenant)
 
     def free(self, request_id: int) -> None:
         a = self._live.pop(request_id)
+        rec = self._tenants[a.tenant]
+        rec.allocated_tokens -= a.chunk
+        rec.used_tokens -= a.length
+        rec.active_requests -= 1
         if a.chunk in self.chunk_classes:
             self._free[a.chunk].append(a.start)
         else:   # class vanished in a refit while this request was live
@@ -221,6 +285,10 @@ class KVSlabPool:
             used_tokens=used,
             free_tokens=self.pool_tokens - self._bump + free_listed,
             n_failed=self.n_failed)
+
+    def stats_by_tenant(self) -> Dict[str, TenantTokens]:
+        """Live per-tenant accounting (see :class:`TenantTokens`)."""
+        return dict(self._tenants)
 
     def kernel_args(self, request_ids) -> Tuple[np.ndarray, np.ndarray]:
         """(starts, lens) int32 arrays for slab_decode_attention."""

@@ -52,12 +52,23 @@ class ContinuousBatcher:
         hysteresis / cost-model pipeline each step; refits happen only
         when the controller approves one. Decisions land in
         ``self.refit_decisions``.
+
+    Multi-tenant serving: several batchers (one per serving stream) may
+    share ONE ``KVSlabPool``; each registers under its ``tenant`` name
+    so the pool keeps per-stream token accounting (and optionally a
+    quota). Request ids must be unique across all batchers of a shared
+    pool. The pool's learned classes come from the merged traffic of
+    all streams — the arbitration analogue of the memcached side.
     """
 
     def __init__(self, pool: KVSlabPool, *, max_batch: int = 64,
                  refit_every: Optional[int] = None,
-                 adaptive: bool = False):
+                 adaptive: bool = False,
+                 tenant: str = "default",
+                 quota_tokens: Optional[int] = None):
         self.pool = pool
+        self.tenant = tenant
+        pool.register_tenant(tenant, quota_tokens=quota_tokens)
         self.max_batch = max_batch
         self.refit_every = refit_every
         self.adaptive = adaptive
@@ -77,7 +88,7 @@ class ContinuousBatcher:
         while self.queue and len(self.active) < self.max_batch:
             req = self.queue[0]
             # reserve capacity for the whole expected context
-            a = self.pool.alloc(req.rid, req.kv_len)
+            a = self.pool.alloc(req.rid, req.kv_len, tenant=self.tenant)
             if a is None:
                 self.rejected += 1
                 self.queue.popleft()

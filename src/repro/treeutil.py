@@ -1,0 +1,35 @@
+"""Pytree path helpers shared by sharding rules and checkpointing.
+
+``jax.tree_util.keystr(..., simple=True, separator=...)`` only exists in
+jax >= 0.5; this repo pins an older wheel. ``simple_keystr`` reproduces
+the simple form (bare key names joined by a separator, no brackets or
+quoting) on every jax version, delegating to the native implementation
+when it is available.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+
+try:  # jax >= 0.5: keystr grew simple/separator kwargs
+    jax.tree_util.keystr((), simple=True, separator="/")
+    _NATIVE_SIMPLE = True
+except TypeError:  # pragma: no cover - depends on installed jax
+    _NATIVE_SIMPLE = False
+
+
+def _entry_name(entry: Any) -> str:
+    """Bare name of one KeyPath entry (DictKey.key, SequenceKey.idx,
+    GetAttrKey.name, FlattenedIndexKey.key)."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def simple_keystr(path: Tuple[Any, ...], *, separator: str = "/") -> str:
+    """``keystr(path, simple=True, separator=separator)`` on any jax."""
+    if _NATIVE_SIMPLE:
+        return jax.tree_util.keystr(path, simple=True, separator=separator)
+    return separator.join(_entry_name(e) for e in path)

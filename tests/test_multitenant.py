@@ -1,0 +1,380 @@
+"""Multi-tenant arbitration: PagePool conservation, transfer cost gate,
+starvation floor, pool-mode allocator semantics, KV pool tenancy, and
+the end-to-end arbitration win."""
+import numpy as np
+import pytest
+
+from repro.core import ControllerConfig, PagePool, TenantArbiter
+from repro.core.distribution import PAPER_WORKLOADS
+from repro.memcached import SlabAllocator, multitenant_phased_ops
+from repro.serving import ContinuousBatcher, KVSlabPool, default_pow2_classes
+
+PAGE = 4096
+
+
+def make_arbiter(n_tenants=2, total_pages=16, *, floor=1,
+                 arbitrate_every=10**9, **arb_kw):
+    """Arbiter + registered pool-mode allocators (manual arbitrate())."""
+    pool = PagePool(total_pages, page_size=PAGE)
+    cfg = ControllerConfig(page_size=PAGE, check_every=10**9, min_chunk=48)
+    arb = TenantArbiter(pool, controller_config=cfg,
+                        arbitrate_every=arbitrate_every, **arb_kw)
+    allocs = {}
+    for t in range(n_tenants):
+        name = f"t{t}"
+        allocs[name] = SlabAllocator([64, 256, 1024], page_size=PAGE,
+                                     page_pool=pool, tenant=name)
+        arb.register(name, allocs[name], floor_pages=floor)
+    pool.equal_partition()
+    return arb, pool, allocs
+
+
+# -- PagePool ---------------------------------------------------------------
+
+def test_pool_conservation_through_acquire_release():
+    pool = PagePool(8, page_size=PAGE)
+    pool.register("a")
+    pool.register("b")
+    assert pool.conserved
+    for _ in range(5):
+        assert pool.acquire("a")
+    assert pool.acquire("b")
+    assert pool.conserved
+    assert pool.owned("a") == 5 and pool.owned("b") == 1
+    pool.release("a")
+    assert pool.conserved
+    assert pool.free_pages == 3
+
+
+def test_pool_quota_denial_counted():
+    pool = PagePool(8, page_size=PAGE)
+    pool.register("a", quota=2)
+    assert pool.acquire("a") and pool.acquire("a")
+    assert not pool.acquire("a")          # at quota, pool still has pages
+    assert pool.tenants()["a"].n_denied == 1
+    assert pool.conserved
+
+
+def test_pool_exhaustion_denies():
+    pool = PagePool(2, page_size=PAGE)
+    pool.register("a")
+    assert pool.acquire("a") and pool.acquire("a")
+    assert not pool.acquire("a")
+    assert pool.free_pages == 0 and pool.conserved
+
+
+def test_move_quota_respects_floor():
+    pool = PagePool(8, page_size=PAGE)
+    pool.register("a", quota=4, floor=3)
+    pool.register("b", quota=4)
+    pool.move_quota("a", "b", 1)          # 4 -> 3: allowed
+    with pytest.raises(ValueError, match="floor"):
+        pool.move_quota("a", "b", 1)      # 3 -> 2: below floor
+    assert pool.quota("a") == 3 and pool.quota("b") == 5
+
+
+def test_release_without_pages_raises():
+    pool = PagePool(4, page_size=PAGE)
+    pool.register("a")
+    with pytest.raises(ValueError):
+        pool.release("a")
+
+
+# -- pool-mode SlabAllocator -------------------------------------------------
+
+def test_allocator_pool_mode_tracks_ownership():
+    pool = PagePool(4, page_size=PAGE)
+    a = SlabAllocator([64, 512], page_size=PAGE, page_pool=pool, tenant="a")
+    for i in range(100):
+        a.set(f"k{i}", 400)
+    assert a.pages_allocated == pool.owned("a") > 0
+    assert pool.conserved
+
+
+def test_allocator_pool_denial_evicts_in_class():
+    pool = PagePool(1, page_size=PAGE)
+    a = SlabAllocator([512], page_size=PAGE, page_pool=pool, tenant="a")
+    per_page = PAGE // 512
+    for i in range(per_page + 3):         # 3 sets beyond capacity
+        assert a.set(f"k{i}", 500)
+    assert a.n_evicted == 3
+    assert a.evicted_bytes == 3 * 500
+    assert a.n_page_denials >= 3
+    assert pool.owned("a") == 1 and pool.conserved
+
+
+def test_allocator_pool_and_mem_limit_exclusive():
+    pool = PagePool(4, page_size=PAGE)
+    with pytest.raises(ValueError, match="exclusive"):
+        SlabAllocator([64], page_size=PAGE, page_pool=pool,
+                      mem_limit=1 << 20)
+
+
+def test_release_page_prefers_parked_free_pages():
+    pool = PagePool(4, page_size=PAGE)
+    a = SlabAllocator([64, 512], page_size=PAGE, page_pool=pool, tenant="a")
+    for i in range(10):
+        a.set(f"k{i}", 500)
+    a.reconfigure([64, 600])              # 512-class pages parked free
+    assert a.free_pages > 0
+    owned0 = pool.owned("a")
+    evicted, ebytes = a.release_page()
+    assert (evicted, ebytes) == (0, 0)    # parked page: free to give
+    assert pool.owned("a") == owned0 - 1
+    assert pool.conserved
+
+
+def test_release_page_evicts_coldest_and_charges_bytes():
+    pool = PagePool(2, page_size=PAGE)
+    a = SlabAllocator([512], page_size=PAGE, page_pool=pool, tenant="a")
+    per_page = PAGE // 512
+    for i in range(per_page):
+        a.set(f"k{i}", 500)
+    predicted = a.page_release_cost_bytes()
+    assert predicted == per_page * 500    # full page of residents
+    evicted, ebytes = a.release_page()
+    assert evicted == per_page and ebytes == predicted
+    assert a.pages_allocated == 0 and pool.owned("a") == 0
+    assert pool.conserved
+    # the evicted keys are really gone
+    assert not a.get("k0")
+
+
+def test_page_release_cost_picks_cheapest_class():
+    pool = PagePool(4, page_size=PAGE)
+    a = SlabAllocator([512, 1024], page_size=PAGE, page_pool=pool,
+                      tenant="a")
+    for i in range(PAGE // 512):          # full 512 page
+        a.set(f"s{i}", 500)
+    a.set("b0", 1000)                     # nearly-empty 1024 page
+    assert a.page_release_cost_bytes() == 1000
+    evicted, ebytes = a.release_page()
+    assert (evicted, ebytes) == (1, 1000)
+    assert a.get("s0")                    # the full page survived
+
+
+# -- TenantArbiter invariants ------------------------------------------------
+
+def fill(alloc, n, size, prefix="k"):
+    for i in range(n):
+        alloc.set(f"{prefix}{i}", size)
+
+
+def test_arbiter_pages_conserved_across_transfers():
+    arb, pool, allocs = make_arbiter(n_tenants=3, total_pages=18,
+                                     cost_weight=0.1)
+    fill(allocs["t0"], 50, 200, "a")          # t0 holds pages, then idles
+    for i in range(50):
+        allocs["t0"].delete(f"a{i}")
+    fill(allocs["t1"], 400, 200, "b")         # t1 under pressure
+    total_before = pool.total_pages
+    decisions = arb.arbitrate()
+    assert any(d.approved for d in decisions)
+    assert pool.conserved
+    assert pool.total_pages == total_before
+    assert sum(pool.owned(n) for n in ("t0", "t1", "t2")) \
+        + pool.free_pages == total_before
+
+
+def test_arbiter_rejects_when_benefit_below_cost():
+    # amortization ~0 makes any benefit tiny; donors hold full hot pages
+    arb, pool, allocs = make_arbiter(n_tenants=2, total_pages=4,
+                                     amortization_windows=1e-6,
+                                     cost_weight=1.0)
+    fill(allocs["t0"], 100, 900, "a")         # donor pages fully resident
+    fill(allocs["t1"], 400, 900, "b")         # recipient pressured
+    decisions = arb.arbitrate()
+    assert arb.n_transfers == 0
+    assert any(d.reason == "cost-exceeds-benefit" for d in decisions)
+    for d in decisions:
+        if d.benefit <= d.cost:
+            assert not d.approved
+    assert pool.conserved
+
+
+def test_arbiter_never_drains_donor_below_floor():
+    arb, pool, allocs = make_arbiter(n_tenants=2, total_pages=8, floor=2,
+                                     cost_weight=0.0)
+    fill(allocs["t0"], 20, 200, "a")
+    for i in range(20):
+        allocs["t0"].delete(f"a{i}")          # t0: cheap donor
+    for round_ in range(6):                   # many rounds of starvation
+        fill(allocs["t1"], 300, 900, f"b{round_}_")
+        arb.arbitrate()
+    assert pool.quota("t0") >= 2
+    assert pool.owned("t0") >= 0
+    assert pool.quota("t0") + pool.quota("t1") == pool.total_pages
+    assert pool.conserved
+    # t1 really received the transferable surplus
+    assert pool.quota("t1") == pool.total_pages - 2
+
+
+def test_arbiter_mixed_quota_recipient_unmanaged():
+    # recipient without a quota must not crash arbitration; the managed
+    # donor shrinks and the freed page lands in the shared pool
+    pool = PagePool(8, page_size=PAGE)
+    cfg = ControllerConfig(page_size=PAGE, check_every=10**9, min_chunk=48)
+    arb = TenantArbiter(pool, controller_config=cfg,
+                        arbitrate_every=10**9, cost_weight=0.0)
+    a0 = SlabAllocator([64, 256, 1024], page_size=PAGE,
+                       page_pool=pool, tenant="managed")
+    a1 = SlabAllocator([64, 256, 1024], page_size=PAGE,
+                       page_pool=pool, tenant="wild")
+    arb.register("managed", a0, floor_pages=1, quota=8)
+    arb.register("wild", a1, floor_pages=1)          # quota=None
+    fill(a1, 400, 900, "w")                          # wild starved
+    decisions = arb.arbitrate()
+    assert any(d.approved and d.donor == "managed" for d in decisions)
+    assert pool.quota("wild") is None
+    assert pool.quota("managed") < 8
+    assert pool.conserved
+
+
+def test_arbiter_all_unmanaged_declines_cleanly():
+    arb, pool, allocs = make_arbiter(n_tenants=2, total_pages=4)
+    for rec in pool.tenants().values():              # strip quotas
+        rec.quota = None
+    fill(allocs["t1"], 200, 900, "b")
+    decisions = arb.arbitrate()                      # must not raise
+    assert arb.n_transfers == 0
+    assert any(d.reason == "no-eligible-donor" for d in decisions)
+
+
+def test_arbiter_no_pressure_no_decisions():
+    arb, pool, allocs = make_arbiter(n_tenants=2, total_pages=8)
+    fill(allocs["t0"], 5, 200)
+    assert arb.arbitrate() == []
+    assert arb.n_transfers == 0
+
+
+def test_arbiter_register_validates_pool_attachment():
+    arb, pool, _ = make_arbiter(n_tenants=2)
+    stray = SlabAllocator([64], page_size=PAGE)
+    with pytest.raises(ValueError, match="not attached"):
+        arb.register("stray", stray)
+    other = SlabAllocator([64], page_size=PAGE, page_pool=pool,
+                          tenant="othername")
+    with pytest.raises(ValueError, match="tenant tag"):
+        arb.register("mismatch", other)
+
+
+# -- multi-tenant traffic ----------------------------------------------------
+
+def test_multitenant_ops_shape_and_phases():
+    ops = multitenant_phased_ops(PAPER_WORKLOADS[:3], n_sets=6000, seed=3)
+    sets = [o for o in ops if o.op == "set"]
+    dels = [o for o in ops if o.op == "delete"]
+    assert len(sets) == 6000
+    assert 0 < len(dels) < len(sets)
+    assert all(o.size > 0 for o in sets)
+    assert all(o.size == 0 for o in dels)
+    # every delete refers to a previously-set key of the same tenant
+    seen = set()
+    for o in ops:
+        if o.op == "set":
+            assert (o.tenant, o.key) not in seen
+            seen.add((o.tenant, o.key))
+        else:
+            assert (o.tenant, o.key) in seen
+    # out-of-phase: each third of the stream has a different lead tenant
+    third = len(sets) // 3
+    leads = []
+    for part in range(3):
+        seg = sets[part * third:(part + 1) * third]
+        counts = np.bincount([o.tenant for o in seg], minlength=3)
+        leads.append(int(np.argmax(counts)))
+    assert len(set(leads)) > 1
+
+
+def test_multitenant_trough_mix_shifts_sizes():
+    stat = multitenant_phased_ops(PAPER_WORKLOADS[:2], n_sets=4000,
+                                  trough_mix=0.0, seed=3)
+    mixed = multitenant_phased_ops(PAPER_WORKLOADS[:2], n_sets=4000,
+                                   trough_mix=1.0, seed=3)
+    mean = {o: np.mean([x.size for x in ops if x.op == "set"
+                        and x.tenant == 0])
+            for o, ops in (("stat", stat), ("mixed", mixed))}
+    # tenant 0's trough items come from workload 1 (4x larger mu)
+    assert mean["mixed"] > mean["stat"] * 1.2
+
+
+# -- end-to-end: arbitration beats both baselines ----------------------------
+
+def test_arbitrated_beats_static_and_pooled():
+    from benchmarks import multitenant_bench as mb
+    res = mb.compare(10_000)
+    arb = res["arbitrated"]["cum_hole_byte_ops"]
+    assert arb < res["static"]["cum_hole_byte_ops"]
+    assert arb < res["pooled"]["cum_hole_byte_ops"]
+    assert res["arbitrated"]["n_transfers"] > 0
+
+
+# -- KV pool tenancy ---------------------------------------------------------
+
+def test_kv_pool_tenant_accounting_roundtrip():
+    pool = KVSlabPool(1 << 16, default_pow2_classes(max_chunk=1 << 13))
+    pool.register_tenant("a")
+    pool.register_tenant("b")
+    pool.alloc(1, 1000, tenant="a")
+    pool.alloc(2, 3000, tenant="b")
+    st = pool.stats_by_tenant()
+    assert st["a"].active_requests == 1 and st["b"].active_requests == 1
+    assert st["a"].used_tokens == 1000
+    assert st["a"].allocated_tokens >= 1000
+    pool.extend(1, 1010)                      # within-chunk growth
+    assert pool.stats_by_tenant()["a"].used_tokens == 1010
+    pool.free(1)
+    pool.free(2)
+    st = pool.stats_by_tenant()
+    for name in ("a", "b"):
+        assert st[name].active_requests == 0
+        assert st[name].allocated_tokens == 0
+        assert st[name].used_tokens == 0
+
+
+def test_kv_pool_tenant_quota_enforced():
+    pool = KVSlabPool(1 << 16, default_pow2_classes(max_chunk=1 << 13))
+    pool.register_tenant("capped", quota_tokens=2048)
+    a = pool.alloc(1, 2000, tenant="capped")
+    assert a is not None
+    assert pool.alloc(2, 2000, tenant="capped") is None   # over quota
+    assert pool.stats_by_tenant()["capped"].n_failed == 1
+    pool.register_tenant("free")
+    assert pool.alloc(3, 2000, tenant="free") is not None  # others fine
+    with pytest.raises(KeyError, match="not registered"):
+        pool.alloc(4, 100, tenant="typo")   # typos never bypass quotas
+
+
+def test_kv_extend_overflow_keeps_tenant():
+    pool = KVSlabPool(1 << 16, default_pow2_classes(max_chunk=1 << 13))
+    pool.register_tenant("a")
+    a = pool.alloc(1, 100, tenant="a")
+    bigger = pool.extend(1, a.chunk + 1)      # class overflow realloc
+    assert bigger is not None and bigger.tenant == "a"
+    st = pool.stats_by_tenant()["a"]
+    assert st.active_requests == 1
+    assert st.used_tokens == a.chunk + 1
+
+
+def test_two_batchers_share_one_pool_as_tenants():
+    from repro.serving.scheduler import Request
+    rng = np.random.default_rng(0)
+    pool = KVSlabPool(1 << 15, default_pow2_classes(max_chunk=1 << 12))
+    b1 = ContinuousBatcher(pool, max_batch=4, tenant="chat")
+    b2 = ContinuousBatcher(pool, max_batch=4, tenant="batch",
+                           quota_tokens=1 << 13)
+    for i in range(8):
+        b1.submit(Request(rid=i, prompt_len=int(rng.integers(100, 800)),
+                          output_len=8))
+        b2.submit(Request(rid=1000 + i,
+                          prompt_len=int(rng.integers(100, 800)),
+                          output_len=8))
+    for t in range(200):
+        b1.step(t)
+        b2.step(t)
+        if not (b1.active or b1.queue or b2.active or b2.queue):
+            break
+    st = pool.stats_by_tenant()
+    assert b1.completed > 0 and b2.completed > 0
+    assert st["chat"].active_requests == 0
+    assert st["batch"].allocated_tokens == 0
