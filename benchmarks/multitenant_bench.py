@@ -31,11 +31,24 @@ holes** = pool bytes not holding live payload (internal fragmentation
 wins by keeping more live payload resident in the same physical pool
 (fewer pressure evictions at each tenant's peak).
 
-``python benchmarks/multitenant_bench.py`` emits the comparison as
-JSON; ``run()`` returns the CSV rows for ``benchmarks/run.py``.
+A second axis (``--policy``): the same arbitrated stack under each
+eviction policy (``coldest`` / ``segmented`` / ``ranked``, see
+``repro.memcached.eviction``) on ``zipfian_rereference`` traffic —
+Zipf-skewed re-references over a fixed key universe with read-through
+refills, where the *choice* of eviction victim and the honesty of the
+predicted migration cost are both measurable. The cost-aware policies
+win twice: refits/transfers the wholesale model vetoed get approved
+(lower hole fraction), and the victims they pick are re-referenced
+less (fewer refill misses, fewer migration evictions downstream).
+
+``python benchmarks/multitenant_bench.py`` emits the mode comparison as
+JSON; ``--policy ranked`` (or ``all``) runs the eviction-policy axis
+against the ``coldest`` baseline; ``--quick`` is the CI smoke size.
+``run()`` returns the CSV rows for ``benchmarks/run.py``.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 from typing import Dict, List, Sequence, Tuple
@@ -43,7 +56,9 @@ from typing import Dict, List, Sequence, Tuple
 from repro.core import ControllerConfig, PagePool, TenantArbiter
 from repro.core.distribution import PAPER_WORKLOADS
 from repro.core.slab_policy import default_memcached_schedule
-from repro.memcached import SlabAllocator, multitenant_phased_ops
+from repro.memcached import (SlabAllocator, make_policy,
+                             multitenant_phased_ops,
+                             zipfian_rereference_ops)
 
 PAGE_SIZE = 1 << 16       # 64 KiB pages: item sizes are 0.5-8 KiB, so a
 #                           page is a meaningful arbitration quantum
@@ -53,26 +68,33 @@ TOTAL_PAGES = 88          # 5.5 MiB: between the aggregate demand trough
 N_SETS = 30_000
 K = 6
 MODES = ("static", "pooled", "arbitrated")
+POLICIES = ("coldest", "segmented", "ranked")
 
 
 def build_arbiter(mode: str, n_tenants: int, *,
                   total_pages: int = TOTAL_PAGES,
                   page_size: int = PAGE_SIZE,
-                  arbitrate_every: int = 1000) -> TenantArbiter:
+                  arbitrate_every: int = 1000,
+                  policy: str = "coldest",
+                  check_every: int = 2000,
+                  cost_weight: float = 0.1) -> TenantArbiter:
     """One shared pool + N tenants under the given memory policy.
 
     All modes run through the same ``TenantArbiter`` object so the
     per-tenant refit pipeline is identical; the baselines simply never
-    reach the arbitration cadence.
+    reach the arbitration cadence. ``policy`` picks the per-tenant
+    eviction policy (``repro.memcached.eviction``) — it changes victim
+    selection AND the predicted costs the refit/transfer gates charge.
     """
     pool = PagePool(total_pages, page_size=page_size)
     cfg = ControllerConfig(
-        k=K, page_size=page_size, check_every=2000, half_life=4000.0,
-        drift_threshold=0.12, min_items_between_refits=4000,
+        k=K, page_size=page_size, check_every=check_every,
+        half_life=2.0 * check_every,
+        drift_threshold=0.12, min_items_between_refits=2 * check_every,
         # TTL-churned cache traffic: victims are mostly expired-soon
         # items, so a migration byte is cheap next to a recurring
         # waste byte (same reasoning as adaptive_bench)
-        amortization_windows=8.0, cost_weight=0.1)
+        amortization_windows=8.0, cost_weight=cost_weight)
     arb = TenantArbiter(
         pool, controller_config=cfg,
         arbitrate_every=(arbitrate_every if mode == "arbitrated"
@@ -82,7 +104,8 @@ def build_arbiter(mode: str, n_tenants: int, *,
     for t in range(n_tenants):
         name = f"tenant{t}"
         alloc = SlabAllocator(classes, page_size=page_size,
-                              page_pool=pool, tenant=name)
+                              page_pool=pool, tenant=name,
+                              eviction_policy=make_policy(policy))
         arb.register(name, alloc, floor_pages=total_pages // (4 * n_tenants))
     if mode in ("static", "arbitrated"):
         pool.equal_partition()
@@ -91,24 +114,45 @@ def build_arbiter(mode: str, n_tenants: int, *,
 
 def drive(ops, n_tenants: int, mode: str, *,
           total_pages: int = TOTAL_PAGES, page_size: int = PAGE_SIZE,
-          sample_every: int = 250) -> Dict:
-    """Replay one multi-tenant op stream under ``mode``."""
-    arb = build_arbiter(mode, n_tenants,
-                        total_pages=total_pages, page_size=page_size)
+          sample_every: int = 250, policy: str = "coldest",
+          check_every: int = 2000, cost_weight: float = 0.1,
+          liveness_window: int = 0) -> Dict:
+    """Replay one multi-tenant op stream under ``mode``. Gets are
+    read-through: a miss is refilled with a set of the key's payload —
+    the loop that makes a wrongly-chosen eviction victim cost bytes.
+
+    ``liveness_window > 0`` measures holes against *referenced*
+    payload (``SlabAllocator.referenced_bytes``): a resident byte
+    nobody touched for that many ops is counted as a hole. Re-reference
+    traffic needs this — under raw residency a policy can look good by
+    hoarding dead bytes a refill stream would anyway restore. The raw
+    measure is still reported as ``mean_raw_hole_frac``."""
+    arb = build_arbiter(mode, n_tenants, total_pages=total_pages,
+                        page_size=page_size, policy=policy,
+                        check_every=check_every, cost_weight=cost_weight)
     pool_bytes = total_pages * page_size
     cum_holes = 0
+    raw_hole_fracs: List[float] = []
     samples: List[Dict] = []
     since_sample = 0
     for op in ops:
+        name = f"tenant{op.tenant}"
         if op.op == "set":
-            arb.set(f"tenant{op.tenant}", op.key, op.size)
+            arb.set(name, op.key, op.size)
+        elif op.op == "get":
+            if not arb.get(name, op.key):
+                arb.set(name, op.key, op.size)     # read-through refill
         else:
-            arb.delete(f"tenant{op.tenant}", op.key)
+            arb.delete(name, op.key)
         since_sample += 1
         if since_sample >= sample_every:
             since_sample = 0
-            live = sum(t.allocator.stats().item_bytes
-                       for t in arb.tenants.values())
+            raw = sum(t.allocator.stats().item_bytes
+                      for t in arb.tenants.values())
+            raw_hole_fracs.append((pool_bytes - raw) / pool_bytes)
+            live = (sum(t.allocator.referenced_bytes(liveness_window)
+                        for t in arb.tenants.values())
+                    if liveness_window else raw)
             holes = pool_bytes - live
             cum_holes += holes * sample_every
             samples.append({"op": arb.n_ops,
@@ -125,6 +169,14 @@ def drive(ops, n_tenants: int, mode: str, *,
                               for v in per_tenant.values()),
         "n_transfers": arb.n_transfers,
         "n_refits": sum(v["n_refits"] for v in per_tenant.values()),
+        "mean_raw_hole_frac": (sum(raw_hole_fracs)
+                               / max(len(raw_hole_fracs), 1)),
+        "migration_evictions": sum(v["migration_evictions"]
+                                   for v in per_tenant.values()),
+        "reused_after_evict": sum(v["reused_after_evict"]
+                                  for v in per_tenant.values()),
+        "evicted_hot_bytes": sum(v["evicted_hot_bytes"]
+                                 for v in per_tenant.values()),
         "per_tenant": per_tenant,
         "trajectory": samples,
     }
@@ -146,11 +198,42 @@ def compare(n_sets: int = N_SETS, *, n_tenants: int = 3,
             for mode in MODES}
 
 
+def compare_policies(n_ops: int = N_SETS, *, n_tenants: int = 3,
+                     policies: Sequence[str] = POLICIES,
+                     traffic: str = "zipfian_rereference",
+                     seed: int = 7) -> Dict[str, Dict]:
+    """The eviction-policy axis: the full arbitrated stack under each
+    policy, same op stream — the deltas isolate victim selection and
+    cost-model honesty. The pool is tighter than the mode comparison's
+    (contention from the first quarter, not the last) and holes are
+    measured against referenced payload (see :func:`drive`)."""
+    workloads = PAPER_WORKLOADS[:n_tenants]
+    total_pages = max(12, (TOTAL_PAGES * n_ops // N_SETS) * 4 // 11)
+    if traffic == "zipfian_rereference":
+        ops = zipfian_rereference_ops(workloads, n_ops=n_ops,
+                                      shift_at=0.4, seed=seed)
+    elif traffic == "phased":
+        ops = multitenant_phased_ops(workloads, n_sets=n_ops,
+                                     trough_mix=0.5, seed=seed)
+    else:
+        raise ValueError(f"unknown traffic {traffic!r}")
+    # cost_weight=1.0: a migration byte priced like a waste byte. The
+    # wholesale (coldest) model needs that weight hand-discounted to
+    # ever refit; the cost-aware policies discover the discount
+    # themselves by charging only likely-re-referenced bytes — the
+    # honesty this axis measures.
+    return {p: drive(ops, n_tenants, "arbitrated",
+                     total_pages=total_pages, policy=p,
+                     check_every=max(300, n_ops // 40), cost_weight=1.0,
+                     liveness_window=2000)
+            for p in policies}
+
+
 def run(n_sets: int = 20_000) -> List[Tuple[str, float, str]]:
     t0 = time.perf_counter()
     res = compare(n_sets)
     dt = (time.perf_counter() - t0) * 1e6 / (len(MODES) * n_sets)
-    return [(
+    rows = [(
         "out_of_phase_3tenant", dt,
         f"static={res['static']['mean_hole_frac']:.4f};"
         f"pooled={res['pooled']['mean_hole_frac']:.4f};"
@@ -158,6 +241,16 @@ def run(n_sets: int = 20_000) -> List[Tuple[str, float, str]]:
         f"transfers={res['arbitrated']['n_transfers']};"
         f"evicted_mb_arbitrated="
         f"{res['arbitrated']['evicted_bytes'] / 2**20:.1f}")]
+    t0 = time.perf_counter()
+    pol = compare_policies(n_sets, policies=("coldest", "ranked"))
+    dt = (time.perf_counter() - t0) * 1e6 / (2 * n_sets)
+    rows.append((
+        "zipfian_rereference_policy_axis", dt,
+        f"coldest={pol['coldest']['mean_hole_frac']:.4f};"
+        f"ranked={pol['ranked']['mean_hole_frac']:.4f};"
+        f"migr_evict_coldest={pol['coldest']['migration_evictions']};"
+        f"migr_evict_ranked={pol['ranked']['migration_evictions']}"))
+    return rows
 
 
 def main(n_sets: int = N_SETS) -> Dict:
@@ -169,5 +262,47 @@ def main(n_sets: int = N_SETS) -> Dict:
     return out
 
 
+def policy_main(n_ops: int, policy: str, traffic: str) -> Dict:
+    """The ``--policy`` entry point: the requested policy (or all)
+    against the ``coldest`` baseline, arbitrated mode, same stream."""
+    policies = POLICIES if policy == "all" else tuple(
+        dict.fromkeys(("coldest", policy)))
+    res = compare_policies(n_ops, policies=policies, traffic=traffic)
+    for cfg in res.values():
+        del cfg["trajectory"][:-1]
+    base = res["coldest"]
+    summary = {
+        p: {"mean_hole_frac": round(r["mean_hole_frac"], 4),
+            "migration_evictions": r["migration_evictions"],
+            "reused_after_evict": r["reused_after_evict"],
+            "beats_coldest": bool(
+                r["mean_hole_frac"] < base["mean_hole_frac"]
+                and r["migration_evictions"] <= base["migration_evictions"])}
+        for p, r in res.items() if p != "coldest"}
+    return {"n_ops": n_ops, "traffic": traffic, "k": K,
+            "summary": summary, "policies": res}
+
+
 if __name__ == "__main__":
-    print(json.dumps(main(), indent=2))
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--policy", choices=POLICIES + ("all",), default=None,
+                    help="run the eviction-policy axis (vs the coldest "
+                         "baseline) instead of the mode comparison")
+    ap.add_argument("--traffic", default="zipfian_rereference",
+                    choices=("zipfian_rereference", "phased"),
+                    help="op stream for the policy axis")
+    ap.add_argument("--n-sets", type=int, default=N_SETS)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke size (covers both axes)")
+    args = ap.parse_args()
+    if args.quick:
+        n = min(args.n_sets, 4000)
+        out = {"modes": main(n)["modes"],
+               "policy_axis": policy_main(n, "ranked",
+                                          args.traffic)["summary"]}
+        print(json.dumps(out, indent=2, default=str))
+    elif args.policy is not None:
+        print(json.dumps(policy_main(args.n_sets, args.policy,
+                                     args.traffic), indent=2))
+    else:
+        print(json.dumps(main(args.n_sets), indent=2))

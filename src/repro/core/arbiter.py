@@ -301,6 +301,18 @@ class TenantArbiter:
             self.arbitrate()
         return stored
 
+    def get(self, name: str, key: str) -> bool:
+        """Look up one item (touch-on-get feeds the tenant's eviction
+        policy — re-referenced items gain rank, so donor pages are
+        carved from the residents the traffic stopped asking for);
+        counts toward the arbitration cadence."""
+        hit = self.tenants[name].allocator.get(key)
+        self.n_ops += 1
+        self._since_arbitrate += 1
+        if self._since_arbitrate >= self.arbitrate_every:
+            self.arbitrate()
+        return hit
+
     def delete(self, name: str, key: str) -> bool:
         """Delete one item; counts toward the arbitration cadence (TTL
         churn frees the chunks that make cheap donors)."""
@@ -343,10 +355,15 @@ class TenantArbiter:
             t.evicted_bytes0 = t.allocator.evicted_bytes
             t.denials0 = t.allocator.n_page_denials
 
-    def _donor_release_cost(self, t: _Tenant) -> Optional[int]:
-        """Eviction payload of the donor's cheapest reclaimable page, or
+    def _donor_release_cost(self, t: _Tenant) -> Optional[float]:
+        """Predicted cost of the donor's cheapest reclaimable page, or
         None when the tenant has nothing it may give (no page above its
-        floor)."""
+        floor). The number comes from the tenant allocator's eviction
+        policy (``page_release_cost_bytes`` →
+        ``EvictionPolicy.page_reclaim_cost_bytes``): under cost-aware
+        policies a page full of never-re-referenced residents prices
+        near zero, so reclaimed pages come from the least-valuable
+        residents fleet-wide — not merely the fewest-bytes page."""
         rec = self.pool._tenants[t.name]
         if rec.quota is None or rec.quota - 1 < rec.floor:
             return None         # unmanaged or at floor: may not donate
@@ -439,5 +456,9 @@ class TenantArbiter:
                 "evicted_bytes": st.evicted_bytes,
                 "n_page_denials": st.n_page_denials,
                 "n_refits": t.controller.n_refits,
+                "migration_evictions": st.migration_evictions,
+                "evicted_hot_bytes": st.evicted_hot_bytes,
+                "reused_after_evict": st.reused_after_evict,
+                "eviction_policy": st.eviction_policy,
             }
         return out

@@ -33,6 +33,17 @@ gives the cheapest-to-reclaim page back (the cross-tenant analogue of
 for the arbiter's cost model. ``evicted_bytes`` / ``n_page_denials``
 are the pressure signals the arbiter reads.
 
+Eviction is a pluggable contract (``repro.memcached.eviction``): the
+allocator tracks per-item accesses (touch-on-get / touch-on-overwrite),
+delegates every victim choice to its :class:`EvictionPolicy`
+(``eviction_policy=`` at construction, :meth:`set_policy` live), and
+prices future evictions through the policy — ``migration_cost_bytes``
+and ``page_release_cost_bytes`` report the policy's *predicted* cost,
+not wholesale payload loss, so cost-aware policies approve more refits.
+``evicted_hot_bytes`` (payload evicted despite a recent access) and
+``reused_after_evict`` (evicted keys the traffic came back for) measure
+how often the chosen victims were mistakes.
+
 A key → class index makes ``get``/``delete`` O(1) instead of scanning
 every class's LRU; the adaptive benchmarks replay millions of ops.
 """
@@ -40,12 +51,12 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from itertools import islice
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.distribution import PAGE_SIZE
+from repro.memcached.eviction import ColdestLRU, EvictionPolicy
 
 
 @dataclasses.dataclass
@@ -65,6 +76,9 @@ class SlabStats:
     evicted_bytes: int = 0        # payload bytes lost to pressure evictions
     n_page_denials: int = 0       # page grabs refused (mem_limit / pool)
     tenant: str = "default"       # pool ownership tag (multi-tenant mode)
+    evicted_hot_bytes: int = 0    # evicted payload accessed < hot_window ago
+    reused_after_evict: int = 0   # evicted keys the traffic asked for again
+    eviction_policy: str = "coldest"   # the active policy's registry name
 
     @property
     def waste_fraction(self) -> float:
@@ -116,7 +130,10 @@ class SlabAllocator:
                  page_size: int = PAGE_SIZE,
                  item_overhead: int = 0,
                  page_pool=None,
-                 tenant: str = "default"):
+                 tenant: str = "default",
+                 eviction_policy: Optional[EvictionPolicy] = None,
+                 hot_window: int = 1000,
+                 reuse_track_max: int = 100_000):
         chunk_sizes = sorted(int(c) for c in chunk_sizes)
         if not chunk_sizes:
             raise ValueError("need at least one slab class")
@@ -146,6 +163,17 @@ class SlabAllocator:
         self.migration_evictions = 0
         self._total_set = 0
         self._key_class: Dict[str, _SlabClass] = {}  # O(1) get/delete index
+        # -- eviction policy + per-item access tracking ----------------------
+        self.policy: EvictionPolicy = eviction_policy or ColdestLRU()
+        self.hot_window = int(hot_window)        # ops: "recently accessed"
+        self.reuse_track_max = int(reuse_track_max)
+        self.op_clock = 0                        # set/get/delete event clock
+        self.evicted_hot_bytes = 0
+        self.reused_after_evict = 0
+        self._last_access: Dict[str, int] = {}   # key -> op_clock of touch
+        self._evicted_keys: OrderedDict[str, None] = OrderedDict()  # FIFO
+        for cls in self.classes:
+            self.policy.watch(cls)
 
     # -- class selection ---------------------------------------------------
     def class_for(self, total_size: int) -> Optional[int]:
@@ -174,42 +202,90 @@ class SlabAllocator:
         cls.free_chunks += self.page_size // cls.chunk_size
         return True
 
+    # -- eviction bookkeeping ------------------------------------------------
+    def set_policy(self, policy: EvictionPolicy) -> None:
+        """Swap the eviction policy live. Per-class policy state is
+        rebuilt from the current residents (LRU order preserved);
+        counters and access history carry over."""
+        self.policy = policy
+        for cls in self.classes:
+            policy.watch(cls)
+
+    def _note_reuse(self, key: str) -> None:
+        """The traffic asked for a previously-evicted key — the ground
+        truth the predicted eviction costs are judged against."""
+        if key in self._evicted_keys:
+            del self._evicted_keys[key]
+            self.reused_after_evict += 1
+
+    def _track_eviction(self, key: str, vbytes: int) -> None:
+        last = self._last_access.pop(key, None)
+        if last is not None and self.op_clock - last <= self.hot_window:
+            self.evicted_hot_bytes += vbytes
+        self._evicted_keys[key] = None
+        if len(self._evicted_keys) > self.reuse_track_max:
+            self._evicted_keys.popitem(last=False)
+
+    def _evict_item(self, cls: _SlabClass, key: str, *,
+                    migration: bool) -> int:
+        """Evict one resident of ``cls`` (chosen by the policy), doing
+        all index/counter/policy bookkeeping. Returns payload bytes."""
+        vbytes = cls.lru.pop(key)
+        del self._key_class[key]
+        cls.free_chunks += 1
+        self._track_eviction(key, vbytes)
+        self.policy.on_remove(cls, key)
+        if migration:
+            self.migration_evictions += 1
+        else:
+            self.n_evicted += 1
+            self.evicted_bytes += vbytes
+        return vbytes
+
     def set(self, key: str, value_size: int) -> bool:
         """Store an item; returns False when rejected (too large)."""
         total = value_size + self.item_overhead
         self._total_set += 1
+        self.op_clock += 1
         idx = self.class_for(total)
         if idx is None:
             self.n_rejected += 1
             return False
+        self._note_reuse(key)
         cls = self.classes[idx]
         prev = self._key_class.get(key)
         if prev is cls:                         # overwrite in place
             cls.lru.move_to_end(key)
             cls.lru[key] = total
+            self._last_access[key] = self.op_clock
+            self.policy.on_access(cls, key)
             return True
         if cls.free_chunks == 0 and not self._grab_page(cls):
             if not cls.lru:                     # nothing to evict
                 self.n_rejected += 1
                 return False
-            victim, vbytes = cls.lru.popitem(last=False)  # evict LRU head
-            del self._key_class[victim]
-            self.n_evicted += 1
-            self.evicted_bytes += vbytes
-            cls.free_chunks += 1
+            self._evict_item(cls, self.policy.select_victim(cls),
+                             migration=False)
         cls.free_chunks -= 1
         cls.lru[key] = total
         self._key_class[key] = cls
+        self._last_access[key] = self.op_clock
         if prev is not None:   # size moved the key to a new class
             del prev.lru[key]
             prev.free_chunks += 1
+            self.policy.on_remove(prev, key)
+        self.policy.on_insert(cls, key, total)
         return True
 
     def get(self, key: str) -> bool:
+        self.op_clock += 1
         cls = self._key_class.get(key)
         if cls is None:
-            return False
+            self._note_reuse(key)    # a miss on an evicted key: the
+            return False             # eviction was a realized mistake
         cls.lru.move_to_end(key)
+        self._last_access[key] = self.op_clock
+        self.policy.on_access(cls, key)
         return True
 
     def delete(self, key: str) -> bool:
@@ -218,14 +294,18 @@ class SlabAllocator:
             return False
         del cls.lru[key]
         cls.free_chunks += 1
+        self._last_access.pop(key, None)
+        self.policy.on_remove(cls, key)
         return True
 
     # -- live reconfiguration ------------------------------------------------
     def reassign(self, src: int, dst: int) -> int:
         """Move one page from class ``src`` to class ``dst`` (class indexes),
         with memcached ``slabs reassign`` semantics: reclaim the victim
-        class's coldest page by evicting its resident items, then re-carve
-        the page into the recipient's chunk size. Returns evicted items.
+        class's cheapest page (victims chosen by the eviction policy;
+        LRU-coldest under the default ``ColdestLRU``) by evicting its
+        resident items, then re-carve the page into the recipient's
+        chunk size. Returns evicted items.
         """
         if src == dst:
             raise ValueError("src and dst must differ")
@@ -238,35 +318,38 @@ class SlabAllocator:
         return evicted
 
     def _reclaim_coldest_page(self, cls: _SlabClass) -> Tuple[int, int]:
-        """Reclaim one page from ``cls``: evict its LRU-oldest residents
-        until a full page of chunks is free, then un-carve that page.
-        (The simulator does not track page membership; the coldest page
-        is modelled as the LRU-oldest items beyond the free chunks.)
-        Returns ``(evicted_items, payload_bytes)``.
+        """Reclaim one page from ``cls``: evict the policy's page
+        victims until a full page of chunks is free, then un-carve that
+        page. (The simulator does not track page membership; "the
+        cheapest page" is modelled as the cheapest items beyond the
+        free chunks — LRU-oldest under ``ColdestLRU``, lowest-ranked
+        under ``RankedPageEviction``.) Returns
+        ``(evicted_items, payload_bytes)``.
         """
         per_page = self.page_size // cls.chunk_size
+        needed = per_page - cls.free_chunks
         evicted = ebytes = 0
-        while cls.free_chunks < per_page:
-            victim, vbytes = cls.lru.popitem(last=False)
-            del self._key_class[victim]
-            cls.free_chunks += 1
-            evicted += 1
-            ebytes += vbytes
+        if needed > 0:
+            for victim in self.policy.page_victims(cls, needed):
+                ebytes += self._evict_item(cls, victim, migration=True)
+                evicted += 1
         cls.free_chunks -= per_page
         cls.pages -= 1
         self.n_reassigned_pages += 1
-        self.migration_evictions += evicted
         return evicted, ebytes
 
     # -- cross-tenant page surrender (the arbiter's execution primitive) -----
-    def _release_cost(self, cls: _SlabClass) -> int:
-        """Payload bytes evicted if ``cls``'s coldest page is reclaimed
-        now (its LRU-oldest residents beyond the free chunks)."""
+    def _release_cost(self, cls: _SlabClass) -> float:
+        """Predicted payload cost if ``cls``'s cheapest page is
+        reclaimed now — the eviction policy's
+        ``page_reclaim_cost_bytes`` over the residents beyond the free
+        chunks (raw bytes under ``ColdestLRU``; re-reference-weighted
+        under the cost-aware policies)."""
         per_page = self.page_size // cls.chunk_size
         needed = per_page - cls.free_chunks
         if needed <= 0:
             return 0
-        return sum(islice(cls.lru.values(), needed))
+        return self.policy.page_reclaim_cost_bytes(cls, needed)
 
     def _cheapest_release_class(self) -> Optional[_SlabClass]:
         """The class whose coldest page is cheapest to reclaim (None
@@ -276,9 +359,11 @@ class SlabAllocator:
             return None
         return min(candidates, key=self._release_cost)
 
-    def page_release_cost_bytes(self) -> Optional[int]:
-        """Predicted eviction payload of :meth:`release_page` right now —
-        the donor-side term of the arbiter's transfer cost model. 0 when
+    def page_release_cost_bytes(self) -> Optional[float]:
+        """Predicted eviction cost of :meth:`release_page` right now —
+        the donor-side term of the arbiter's transfer cost model, priced
+        by the eviction policy (exact payload bytes under ``ColdestLRU``,
+        re-reference-weighted under the cost-aware policies). 0 when
         a parked free page can be surrendered without evicting; None
         when the allocator holds no page at all."""
         if self.free_pages:
@@ -307,13 +392,17 @@ class SlabAllocator:
             self.page_pool.release(self.tenant)
         return evicted, ebytes
 
-    def migration_cost_bytes(self, new_chunk_sizes: Sequence[int]) -> int:
-        """Predicted eviction bytes of reconfiguring to ``new_chunk_sizes``
-        (resident payload of classes that would vanish) — the quantity the
-        controller's cost model charges against predicted savings."""
+    def migration_cost_bytes(self, new_chunk_sizes: Sequence[int]) -> float:
+        """Predicted eviction cost of reconfiguring to
+        ``new_chunk_sizes`` — the quantity the controller's cost model
+        charges against predicted savings. The eviction policy prices
+        each vanishing class (``class_teardown_cost_bytes``): under
+        ``ColdestLRU`` this is the full resident payload (wholesale
+        loss, the conservative legacy model); cost-aware policies
+        charge only the bytes likely to be re-referenced."""
         new = {int(c) for c in new_chunk_sizes}
-        return sum(cls.resident_bytes for cls in self.classes
-                   if cls.chunk_size not in new)
+        return sum(self.policy.class_teardown_cost_bytes(cls)
+                   for cls in self.classes if cls.chunk_size not in new)
 
     def reconfigure(self, new_chunk_sizes: Sequence[int]
                     ) -> ReconfigureReport:
@@ -343,9 +432,11 @@ class SlabAllocator:
         for victim in by_size.values():
             evicted_items += len(victim.lru)
             evicted_bytes += victim.resident_bytes
-            for key in victim.lru:
+            for key, vbytes in victim.lru.items():
                 del self._key_class[key]
+                self._track_eviction(key, vbytes)
             victim.lru.clear()
+            self.policy.forget(victim)
             reassigned += victim.pages
             self.free_pages += victim.pages
         self.classes = classes
@@ -358,6 +449,20 @@ class SlabAllocator:
             new_classes=tuple(new_sizes))
 
     # -- measurement ---------------------------------------------------------
+    def referenced_bytes(self, window: int) -> int:
+        """Payload bytes of residents touched (set/get) within the last
+        ``window`` ops of this allocator's clock — the *useful* half of
+        resident payload under re-reference traffic. Resident bytes
+        nobody references again are memory holes in every sense that
+        matters to an operator; the eviction-policy benchmarks measure
+        holes against this instead of raw residency, so a policy cannot
+        look good by hoarding dead bytes."""
+        cut = self.op_clock - int(window)
+        la = self._last_access
+        return sum(size for cls in self.classes
+                   for key, size in cls.lru.items()
+                   if la.get(key, cut) > cut)
+
     def stats(self) -> SlabStats:
         item_bytes = 0
         allocated = 0
@@ -385,7 +490,10 @@ class SlabAllocator:
             migration_evictions=self.migration_evictions,
             evicted_bytes=self.evicted_bytes,
             n_page_denials=self.n_page_denials,
-            tenant=self.tenant)
+            tenant=self.tenant,
+            evicted_hot_bytes=self.evicted_hot_bytes,
+            reused_after_evict=self.reused_after_evict,
+            eviction_policy=self.policy.name)
 
 
 def run_workload(chunk_sizes: Sequence[int], sizes: np.ndarray, *,

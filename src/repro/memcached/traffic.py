@@ -20,12 +20,22 @@ arrival intensity a raised cosine shifted out of phase with the others
 arbitration has something to win), with TTL-style deletes so an
 off-peak tenant's pages accumulate free chunks (the holes arbitration
 reclaims).
+
+Re-reference skew (what the eviction policies serve):
+``zipfian_rereference_ops`` draws get/set traffic over a fixed key
+universe with Zipf-distributed popularity — a small hot set is
+re-referenced constantly while a long tail of one-hit wonders streams
+through. Under this skew the *choice* of eviction victim is
+measurable: evicting a hot resident forces a read-through refill
+(``reused_after_evict``), while evicting tail keys is free — exactly
+the asymmetry the cost-aware policies in ``repro.memcached.eviction``
+exploit.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -116,9 +126,11 @@ class TenantOp:
     """One operation of an interleaved multi-tenant stream."""
 
     tenant: int          # index into the workload list
-    op: str              # "set" | "delete"
+    op: str              # "set" | "delete" | "get"
     key: str
-    size: int            # item payload bytes (0 for deletes)
+    size: int            # item payload bytes (0 for deletes; for gets,
+    #                      the key's payload — the read-through refill
+    #                      size a driver stores on a miss)
 
 
 def multitenant_phased_ops(workloads: Sequence[PaperWorkload], *,
@@ -184,4 +196,94 @@ def multitenant_phased_ops(workloads: Sequence[PaperWorkload], *,
         ops.append(TenantOp(tn, "set", key, int(pool[tn][counters[tn]])))
         counters[tn] += 1
         heapq.heappush(due, (i + int(ttls[i]), i, tn, key))
+    return ops
+
+
+# -- re-reference-skewed workloads (what the eviction policies serve) --------
+
+def zipfian_rereference_ops(workloads: Sequence[PaperWorkload], *,
+                            n_ops: int = PAPER_N_ITEMS,
+                            universe: int = 0,
+                            get_frac: float = 0.7,
+                            zipf_s: float = 1.1,
+                            shift_at: float = 0.5,
+                            head_frac: float = 0.05,
+                            alt_workloads: Optional[
+                                Sequence[PaperWorkload]] = None,
+                            period: int = 0,
+                            base_rate: float = 0.1,
+                            seed: int = 0) -> List[TenantOp]:
+    """Zipf-skewed get/set traffic over a fixed key universe, with a
+    mid-stream tail shift.
+
+    Each tenant owns ``universe`` keys; key ``j`` is drawn with
+    probability proportional to ``1 / (j+1)**zipf_s`` (rank-1 keys are
+    re-referenced constantly, the tail is one-hit wonders). Every op is
+    a ``get`` with probability ``get_frac``, else a ``set``; both
+    sample the same Zipf popularity, and a key's payload size is fixed
+    at its first draw from the tenant's operating point. Gets carry
+    that size so a driver can model a read-through cache (miss =>
+    refill ``set``) — the loop that makes a wrongly-chosen eviction
+    victim cost real bytes.
+
+    At ``shift_at`` of the stream the *tail* changes identity: keys
+    below the Zipf head (the top ``head_frac`` of ranks) are replaced
+    by fresh keys whose sizes come from ``alt_workloads`` (defaults to
+    the workload list rotated by one; pass explicitly for a single
+    tenant). The hot head keeps its keys and sizes throughout. This is
+    the scenario cost-aware eviction is about: after the shift the
+    cache is full of stale phase-one tail items that will never be
+    re-referenced — a wholesale cost model prices them at full payload
+    and vetoes the refit toward the new tail sizes, while a rank-based
+    model knows they are dead. ``shift_at=0`` disables the shift.
+
+    With more than one workload, tenants' arrival intensities are the
+    same out-of-phase raised cosines as ``multitenant_phased_ops``
+    (``period`` defaults to half the stream), so the arbiter has pages
+    to move while the policies pick victims. ``universe`` defaults to
+    ``n_ops // (4 * n_tenants)`` — several times a constrained pool's
+    capacity, so eviction is continuous.
+    """
+    n_t = len(workloads)
+    if n_t < 1:
+        raise ValueError("need at least one workload")
+    if not 0.0 <= get_frac <= 1.0:
+        raise ValueError(f"get_frac must be in [0, 1], got {get_frac}")
+    universe = universe or max(64, n_ops // max(1, 4 * n_t))
+    rng = np.random.default_rng(seed)
+    probs = np.arange(1, universe + 1, dtype=np.float64) ** -zipf_s
+    probs /= probs.sum()
+    sizes = [sample_lognormal_sizes(rng, universe, w.mu, w.sigma,
+                                    max_size=PAGE_SIZE) for w in workloads]
+    if alt_workloads is None and n_t > 1:
+        alt_workloads = [workloads[(t + 1) % n_t] for t in range(n_t)]
+    alt_sizes = (None if alt_workloads is None else
+                 [sample_lognormal_sizes(rng, universe, w.mu, w.sigma,
+                                         max_size=PAGE_SIZE)
+                  for w in alt_workloads])
+    if n_t > 1:
+        period = period or max(2, n_ops // 2)
+        step = np.arange(n_ops)[:, None]
+        phase = np.arange(n_t)[None, :] / n_t
+        cosarg = 2.0 * np.pi * (step / period - phase)
+        intensity = (base_rate
+                     + (1.0 - base_rate) * 0.5 * (1.0 - np.cos(cosarg)))
+        intensity /= intensity.sum(axis=1, keepdims=True)
+        picks = (rng.random(n_ops)[:, None]
+                 > np.cumsum(intensity, axis=1)).sum(axis=1)
+    else:
+        picks = np.zeros(n_ops, dtype=np.int64)
+    key_idx = rng.choice(universe, size=n_ops, p=probs)
+    is_get = rng.random(n_ops) < get_frac
+    head_cut = max(1, int(head_frac * universe))
+    shift_op = int(shift_at * n_ops) if (shift_at and alt_sizes is not None
+                                         ) else n_ops
+    ops: List[TenantOp] = []
+    for i, (t, j, g) in enumerate(zip(picks, key_idx, is_get)):
+        t, j = int(t), int(j)
+        if i >= shift_op and j >= head_cut:     # post-shift tail key
+            key, size = f"t{t}:b{j}", int(alt_sizes[t][j])
+        else:
+            key, size = f"t{t}:z{j}", int(sizes[t][j])
+        ops.append(TenantOp(t, "get" if g else "set", key, size))
     return ops

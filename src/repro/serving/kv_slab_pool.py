@@ -23,18 +23,27 @@ Implementation notes:
     sizes previously entered" loop): every ``alloc`` feeds the
     controller's decayed sketch, ``refit()`` fits unconditionally through
     it, and ``maybe_refit()`` runs its full drift/hysteresis/cost
-    decision pipeline — the same path the memcached simulator uses.
+    decision pipeline — the same path the memcached simulator uses;
+  * finished sequences can be *retained* (``finish(rid, retain=True)``)
+    instead of freed — their token chunks stay resident as a prefix
+    cache, ranked by the same pluggable
+    :class:`~repro.memcached.eviction.EvictionPolicy` contract the
+    memcached layer uses (``eviction_policy=``). Under pool pressure,
+    ``alloc`` reclaims the retained chunk whose sequence is least
+    likely to be re-referenced (``reuse``d) — Memshare's rank-based
+    victim selection, with KV token pages as the page unit.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
+from collections import OrderedDict, defaultdict
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import ControllerConfig, SlabController, SlabPolicy
 from repro.core.controller import RefitDecision
+from repro.memcached.eviction import ColdestLRU, EvictionPolicy
 
 ALIGN = 128  # tokens; matches the Pallas kernel's BLOCK_T
 
@@ -53,6 +62,10 @@ class PoolStats:
     used_tokens: int           # sum of true KV lengths
     free_tokens: int
     n_failed: int
+    n_retained: int = 0            # finished sequences kept as prefix cache
+    retained_tokens: int = 0       # chunk tokens held by retained sequences
+    n_retained_reused: int = 0     # retained sequences re-activated
+    n_retained_evicted: int = 0    # retained chunks reclaimed under pressure
 
     @property
     def waste_tokens(self) -> int:
@@ -74,6 +87,19 @@ class Allocation:
     chunk: int          # slab class size (tokens)
     length: int         # true KV length
     tenant: str = "default"   # serving stream this allocation belongs to
+
+
+class _RetainedClass:
+    """Slab-class view over the retained (finished-sequence) chunks of
+    one size, duck-typed for the ``EvictionPolicy`` contract:
+    ``lru`` maps request key -> chunk tokens, least recently
+    retained/touched first."""
+
+    __slots__ = ("chunk_size", "lru")
+
+    def __init__(self, chunk_size: int):
+        self.chunk_size = chunk_size
+        self.lru: OrderedDict[str, int] = OrderedDict()
 
 
 @dataclasses.dataclass
@@ -101,7 +127,8 @@ class KVSlabPool:
 
     def __init__(self, pool_tokens: int, chunk_classes, *,
                  align: int = ALIGN,
-                 controller_config: Optional[ControllerConfig] = None):
+                 controller_config: Optional[ControllerConfig] = None,
+                 eviction_policy: Optional[EvictionPolicy] = None):
         self.pool_tokens = int(pool_tokens)
         self.align = align
         self.set_classes(chunk_classes)
@@ -111,6 +138,12 @@ class KVSlabPool:
         self.n_failed = 0
         self._tenants: Dict[str, TenantTokens] = {}
         self.register_tenant("default")
+        # finished-sequence prefix cache, ranked by the eviction policy
+        self.eviction_policy: EvictionPolicy = eviction_policy or ColdestLRU()
+        self._retained: Dict[int, Allocation] = {}
+        self._retained_cls: Dict[int, _RetainedClass] = {}
+        self.n_retained_reused = 0
+        self.n_retained_evicted = 0
         if controller_config is None:
             # half_life=inf: undecayed sketch == the legacy all-history
             # histogram, so `refit()` behaves exactly as it used to.
@@ -186,6 +219,8 @@ class KVSlabPool:
             # phantom observation in the controller's sketch
             raise KeyError(f"tenant {tenant!r} not registered "
                            "(call register_tenant first)")
+        if request_id in self._retained:    # id reuse while a stale
+            self._drop_retained(request_id)   # retained chunk exists
         al = self.align
         self.controller.observe((int(length) + al - 1) // al * al)
         chunk = self.class_for(length)
@@ -204,9 +239,11 @@ class KVSlabPool:
             start = self._bump
             self._bump += chunk
         else:
-            self.n_failed += 1
-            rec.n_failed += 1
-            return None
+            start = self._reclaim_retained(chunk)
+            if start is None:
+                self.n_failed += 1
+                rec.n_failed += 1
+                return None
         a = Allocation(request_id, start, chunk, length, tenant)
         self._live[request_id] = a
         rec.allocated_tokens += chunk
@@ -240,6 +277,114 @@ class KVSlabPool:
 
     def allocation(self, request_id: int) -> Allocation:
         return self._live[request_id]
+
+    # -- finished-sequence prefix cache (policy-ranked token pages) ----------
+    def _drop_retained(self, request_id: int) -> None:
+        """Discard a retained entry, returning its token range to the
+        freelist (id collision: a new allocation or retention reuses
+        the request id while the old retained chunk still exists)."""
+        a = self._retained.pop(request_id)
+        holder = self._retained_cls[a.chunk]
+        del holder.lru[str(request_id)]
+        self.eviction_policy.on_remove(holder, str(request_id))
+        if a.chunk in self.chunk_classes:
+            self._free[a.chunk].append(a.start)
+        else:
+            self._carve_range(a.chunk, a.start)
+
+    def finish(self, request_id: int, *, retain: bool = True) -> bool:
+        """Finish a sequence. ``retain=True`` keeps its KV chunk
+        resident as a prefix-cache entry — it leaves the tenant's live
+        accounting but stays out of the freelist, evictable under pool
+        pressure by the eviction policy's rank. ``retain=False`` frees
+        immediately. Returns whether the chunk was retained."""
+        if not retain:
+            self.free(request_id)
+            return False
+        if request_id in self._retained:    # stale entry under the same
+            self._drop_retained(request_id)   # id: recycle, don't leak
+        a = self._live.pop(request_id)
+        rec = self._tenants[a.tenant]
+        rec.allocated_tokens -= a.chunk
+        rec.used_tokens -= a.length
+        rec.active_requests -= 1
+        self._retained[request_id] = a
+        holder = self._retained_cls.get(a.chunk)
+        if holder is None:
+            holder = self._retained_cls[a.chunk] = _RetainedClass(a.chunk)
+        holder.lru[str(request_id)] = a.chunk
+        self.eviction_policy.on_insert(holder, str(request_id), a.chunk)
+        return True
+
+    def touch_retained(self, request_id: int) -> bool:
+        """Mark a retained sequence re-referenced (a prefix-hit probe)
+        without re-activating it; False when it is not retained."""
+        a = self._retained.get(request_id)
+        if a is None:
+            return False
+        holder = self._retained_cls[a.chunk]
+        holder.lru.move_to_end(str(request_id))
+        self.eviction_policy.on_access(holder, str(request_id))
+        return True
+
+    def reuse(self, request_id: int, *,
+              tenant: str = "default") -> Optional[Allocation]:
+        """Re-activate a retained sequence (prefix-cache hit): its chunk
+        moves back to live accounting under ``tenant``. Returns ``None``
+        when the chunk was already evicted, or when the tenant's quota
+        has no room (both count as failures) — the caller re-allocates
+        and recomputes the prefix."""
+        rec = self._tenants.get(tenant)
+        if rec is None:
+            raise KeyError(f"tenant {tenant!r} not registered "
+                           "(call register_tenant first)")
+        a = self._retained.get(request_id)
+        if a is None:
+            return None
+        if (rec.quota_tokens is not None
+                and rec.allocated_tokens + a.chunk > rec.quota_tokens):
+            self.n_failed += 1
+            rec.n_failed += 1
+            return None
+        del self._retained[request_id]
+        holder = self._retained_cls[a.chunk]
+        del holder.lru[str(request_id)]
+        self.eviction_policy.on_remove(holder, str(request_id))
+        a.tenant = tenant
+        self._live[request_id] = a
+        rec.allocated_tokens += a.chunk
+        rec.used_tokens += a.length
+        rec.active_requests += 1
+        self.n_retained_reused += 1
+        return a
+
+    def _reclaim_retained(self, chunk: int) -> Optional[int]:
+        """Evict the retained sequence least likely to be reused whose
+        chunk can hold ``chunk`` tokens (Memshare's rank-based victim
+        selection on token pages); returns the start of a range of
+        ``chunk`` tokens, or ``None`` when nothing evictable fits. A
+        larger victim's remainder is carved back into the freelist."""
+        pol = self.eviction_policy
+        best = None                     # (weight, holder, key)
+        for holder in self._retained_cls.values():
+            if holder.chunk_size < chunk or not holder.lru:
+                continue
+            key = pol.select_victim(holder)
+            w = pol.rereference_weight(holder, key)
+            if (best is None or w < best[0]
+                    or (w == best[0]
+                        and holder.chunk_size < best[1].chunk_size)):
+                best = (w, holder, key)
+        if best is None:
+            return None
+        _, holder, key = best
+        a = self._retained.pop(int(key))
+        del holder.lru[key]
+        pol.on_remove(holder, key)
+        self.n_retained_evicted += 1
+        if a.chunk > chunk:
+            self._carve_range(a.chunk - chunk, a.start + chunk)
+        return a.start
 
     # -- learning -------------------------------------------------------------
     def refit(self, k: Optional[int] = None, *, method: str = "dp",
@@ -284,7 +429,11 @@ class KVSlabPool:
             allocated_tokens=allocated,
             used_tokens=used,
             free_tokens=self.pool_tokens - self._bump + free_listed,
-            n_failed=self.n_failed)
+            n_failed=self.n_failed,
+            n_retained=len(self._retained),
+            retained_tokens=sum(a.chunk for a in self._retained.values()),
+            n_retained_reused=self.n_retained_reused,
+            n_retained_evicted=self.n_retained_evicted)
 
     def stats_by_tenant(self) -> Dict[str, TenantTokens]:
         """Live per-tenant accounting (see :class:`TenantTokens`)."""

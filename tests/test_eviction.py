@@ -1,0 +1,451 @@
+"""Eviction-policy contract tests: segment promotion/demotion
+invariants, rank ordering, predicted-vs-realized cost agreement,
+allocator access-tracking edge cases, the KV retained-chunk mapping,
+and the end-to-end refit-approval win over ColdestLRU."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import ControllerConfig, SlabController
+from repro.core.distribution import PAPER_WORKLOADS
+from repro.memcached import (ColdestLRU, RankedPageEviction, SegmentedLRU,
+                             SlabAllocator, make_policy,
+                             zipfian_rereference_ops)
+from repro.serving import KVSlabPool
+
+PAGE = 4096
+
+
+def seg_state(policy, cls):
+    return policy._segs[id(cls)]
+
+
+# -- registry ----------------------------------------------------------------
+
+def test_make_policy_registry():
+    assert isinstance(make_policy("coldest"), ColdestLRU)
+    assert isinstance(make_policy("segmented"), SegmentedLRU)
+    assert isinstance(make_policy("ranked"), RankedPageEviction)
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+# -- ColdestLRU: the extracted legacy behaviour ------------------------------
+
+def test_coldest_is_bitcompatible_with_legacy_lru():
+    a = SlabAllocator([1024], mem_limit=PAGE, page_size=PAGE)  # 4 chunks
+    for i in range(6):
+        a.set(str(i), 1000)
+    st = a.stats()
+    assert st.n_evicted == 2
+    assert not a.get("0") and not a.get("1")     # LRU head evicted first
+    assert a.get("5")
+
+
+def test_coldest_costs_are_wholesale():
+    a = SlabAllocator([64, 512], page_size=PAGE)
+    for i in range(4):
+        a.set(f"k{i}", 500)
+    # predicted teardown == full resident payload == realized eviction
+    assert a.migration_cost_bytes([64]) == 2000
+    report = a.reconfigure([64])
+    assert report.evicted_bytes == 2000
+
+
+# -- SegmentedLRU invariants -------------------------------------------------
+
+def test_segmented_caps_hold_after_every_event():
+    pol = SegmentedLRU(hot_max=0.32, warm_max=0.32)
+    a = SlabAllocator([256], page_size=PAGE, eviction_policy=pol)
+    rng = np.random.default_rng(0)
+    for i in range(200):
+        a.set(f"k{i}", 200)
+        if rng.random() < 0.5:
+            a.get(f"k{rng.integers(0, i + 1)}")
+        cls = a.classes[0]
+        hot, warm, cold = seg_state(pol, cls)
+        n = len(cls.lru)
+        assert len(hot) <= math.ceil(0.32 * n)
+        assert len(warm) <= math.ceil(0.32 * n)
+        assert len(hot) + len(warm) + len(cold) == n
+
+
+def test_segmented_promotion_and_demotion_flow():
+    pol = SegmentedLRU(hot_max=0.32, warm_max=0.32)
+    a = SlabAllocator([256], page_size=PAGE, eviction_policy=pol)
+    for i in range(50):
+        a.set(f"k{i}", 200)
+    cls = a.classes[0]
+    hot, warm, cold = seg_state(pol, cls)
+    assert "k0" in cold          # early inserts crawled out of HOT
+    a.get("k0")                  # re-reference promotes COLD -> WARM
+    assert "k0" in warm and "k0" not in cold
+    assert "k49" in hot          # newest insert still HOT
+
+
+def test_segmented_victims_come_from_cold_first():
+    pol = SegmentedLRU()
+    a = SlabAllocator([256], page_size=PAGE, eviction_policy=pol)
+    for i in range(50):
+        a.set(f"k{i}", 200)
+    cls = a.classes[0]
+    hot, warm, cold = seg_state(pol, cls)
+    victim = pol.select_victim(cls)
+    assert victim in cold
+    n = len(cold)
+    victims = pol.page_victims(cls, n + 2)
+    assert set(victims[:n]) == set(cold)          # all of COLD before WARM/HOT
+
+
+def test_segmented_cost_weights_by_segment():
+    pol = SegmentedLRU(w_hot=1.0, w_warm=0.5, w_cold=0.05)
+    a = SlabAllocator([256], page_size=PAGE, eviction_policy=pol)
+    for i in range(50):
+        a.set(f"k{i}", 200)
+    cls = a.classes[0]
+    raw = sum(cls.lru.values())
+    cost = pol.class_teardown_cost_bytes(cls)
+    assert 0 < cost < raw        # cheaper than wholesale, never free
+
+
+# -- RankedPageEviction ordering ---------------------------------------------
+
+def test_rank_ordering_follows_rereference_frequency():
+    pol = RankedPageEviction(half_life=1000.0)
+    a = SlabAllocator([256], page_size=PAGE, eviction_policy=pol)
+    for i in range(20):
+        a.set(f"k{i}", 200)
+    for _ in range(5):
+        a.get("k3")              # k3 is hot
+    a.get("k7")                  # k7 is warm-ish
+    cls = a.classes[0]
+    assert pol.score(cls, "k3") > pol.score(cls, "k7")
+    assert pol.score(cls, "k7") > pol.score(cls, "k0")
+    victims = pol.page_victims(cls, 19)
+    assert "k3" not in victims               # hottest survives
+    order = {k: i for i, k in enumerate(victims)}
+    assert order["k0"] < order["k7"]         # colder evicted earlier
+
+
+def test_ranked_capacity_eviction_spares_hot_lru_head():
+    # k0 sits at the LRU head position-wise but is re-referenced often;
+    # plain LRU would evict it, the ranked scan must not.
+    pol = RankedPageEviction(half_life=500.0, scan_width=8)
+    a = SlabAllocator([1024], mem_limit=PAGE, page_size=PAGE,
+                      eviction_policy=pol)   # 4 chunks
+    for i in range(4):
+        a.set(f"k{i}", 1000)
+    for _ in range(5):
+        a.get("k0")              # k0 is by far the hottest...
+    for j in (1, 2, 3):
+        a.get(f"k{j}")           # ...but ends up LRU-oldest positionally
+    a.set("k4", 1000)            # forces one eviction
+    assert a.get("k0")           # hot head survived (LRU would evict it)
+    assert not a.get("k1")       # the low-score candidate went instead
+    assert a.stats().n_evicted == 1
+
+
+def test_ranked_page_cost_charges_only_likely_rereferenced_bytes():
+    pol = RankedPageEviction()
+    a = SlabAllocator([256], page_size=PAGE, eviction_policy=pol)
+    for i in range(30):
+        a.set(f"k{i}", 200)
+    cls = a.classes[0]
+    raw = sum(cls.lru[k] for k in pol.page_victims(cls, 10))
+    predicted = pol.page_reclaim_cost_bytes(cls, 10)
+    assert 0 < predicted < raw
+
+
+# -- cost-model agreement (predicted vs realized) ----------------------------
+
+@pytest.mark.parametrize("name", ["coldest", "segmented", "ranked"])
+def test_page_release_prediction_bounds_realized_bytes(name):
+    a = SlabAllocator([512], page_size=PAGE,
+                      eviction_policy=make_policy(name))
+    for i in range(16):          # two full pages
+        a.set(f"k{i}", 500)
+    predicted = a.page_release_cost_bytes()
+    _, realized = a.release_page()
+    assert predicted <= realized + 1e-9      # never over-charges
+    if name == "coldest":
+        assert predicted == realized         # wholesale model is exact
+
+
+@pytest.mark.parametrize("name", ["coldest", "segmented", "ranked"])
+def test_migration_cost_prediction_bounds_reconfigure(name):
+    a = SlabAllocator([64, 512], page_size=PAGE,
+                      eviction_policy=make_policy(name))
+    for i in range(6):
+        a.set(f"k{i}", 500)
+    predicted = a.migration_cost_bytes([64, 600])
+    report = a.reconfigure([64, 600])
+    assert predicted <= report.evicted_bytes + 1e-9
+    if name == "coldest":
+        assert predicted == report.evicted_bytes
+
+
+def test_reassign_victims_follow_policy_rank():
+    pol = RankedPageEviction(half_life=500.0)
+    a = SlabAllocator([512, 1024], page_size=PAGE, eviction_policy=pol)
+    for i in range(8):           # one page of the 512 class
+        a.set(f"k{i}", 500)
+    for _ in range(4):
+        for i in range(4):       # first half is hot
+            a.get(f"k{i}")
+    a.reassign(src=0, dst=1)     # reclaims one page = 8 chunks... all evicted
+    # all residents evicted (class had exactly one page) — but a partial
+    # reclaim must have preferred the cold half: check via page_victims
+    b = SlabAllocator([512, 1024], page_size=PAGE,
+                      eviction_policy=RankedPageEviction(half_life=500.0))
+    for i in range(10):          # two pages, 8 + 2
+        b.set(f"k{i}", 500)
+    for _ in range(4):
+        for i in range(6):
+            b.get(f"k{i}")
+    victims = b.policy.page_victims(b.classes[0], 4)
+    assert set(victims) <= {f"k{i}" for i in range(6, 10)} | {"k4", "k5"}
+    assert "k0" not in victims and "k1" not in victims
+
+
+# -- allocator access-tracking edge cases ------------------------------------
+
+def test_touch_on_get_missing_key_is_noop():
+    a = SlabAllocator([256], page_size=PAGE)
+    assert not a.get("ghost")
+    assert a.op_clock == 1               # clock ticks, no state appears
+    assert a.stats().reused_after_evict == 0
+    assert "ghost" not in a._last_access
+
+
+def test_reused_after_evict_counts_get_and_set_once():
+    a = SlabAllocator([1024], mem_limit=PAGE, page_size=PAGE)  # 4 chunks
+    for i in range(5):
+        a.set(str(i), 1000)              # evicts "0"
+    assert a.stats().n_evicted == 1
+    assert not a.get("0")                # miss on evicted key: one reuse
+    assert a.stats().reused_after_evict == 1
+    assert not a.get("0")                # second miss does not double-count
+    assert a.stats().reused_after_evict == 1
+    a.set("1", 1000)                     # overwrite of a RESIDENT key: no
+    assert a.stats().reused_after_evict == 1   # reuse (never evicted)
+
+
+def test_refill_set_of_evicted_key_counts_reuse():
+    a = SlabAllocator([1024], mem_limit=PAGE, page_size=PAGE)
+    for i in range(5):
+        a.set(str(i), 1000)
+    a.set("0", 1000)                     # read-through refill
+    assert a.stats().reused_after_evict == 1
+
+
+def test_evicted_hot_bytes_tracks_recent_access():
+    # cold eviction: the victim's last touch is > hot_window ops old
+    a = SlabAllocator([1024], mem_limit=PAGE, page_size=PAGE,
+                      hot_window=2)
+    for i in range(4):
+        a.set(str(i), 1000)
+    a.set("4", 1000)                     # evicts "0", touched 4 ops ago
+    assert a.stats().evicted_hot_bytes == 0
+    # hot eviction: same flow, window generous enough to cover it
+    b = SlabAllocator([1024], mem_limit=PAGE, page_size=PAGE,
+                      hot_window=100)
+    for i in range(4):
+        b.set(str(i), 1000)
+    b.set("4", 1000)
+    assert b.stats().evicted_hot_bytes == 1000
+
+
+def test_policy_swap_mid_run_rebuilds_state_and_keeps_counters():
+    a = SlabAllocator([1024], mem_limit=PAGE, page_size=PAGE)
+    for i in range(5):
+        a.set(str(i), 1000)              # one eviction under coldest
+    evicted_before = a.stats().n_evicted
+    pol = SegmentedLRU()
+    a.set_policy(pol)
+    assert a.stats().eviction_policy == "segmented"
+    assert a.stats().n_evicted == evicted_before     # counters carry over
+    hot, warm, cold = seg_state(pol, a.classes[0])
+    assert len(hot) + len(warm) + len(cold) == len(a.classes[0].lru)
+    a.set("9", 1000)                     # eviction flows through new policy
+    assert a.stats().n_evicted == evicted_before + 1
+
+
+def test_access_state_consistent_across_reconfigure():
+    a = SlabAllocator([64, 512], page_size=PAGE,
+                      eviction_policy=RankedPageEviction())
+    for i in range(4):
+        a.set(f"k{i}", 500)
+    a.get("k0")
+    before = a.stats()
+    report = a.reconfigure([64, 600])    # 512 vanishes, evicts everything
+    st = a.stats()
+    # cumulative counters persist across reconfigure...
+    assert st.migration_evictions == before.migration_evictions + 4
+    # ...while per-item access state of evicted keys is dropped
+    assert all(f"k{i}" not in a._last_access for i in range(4))
+    assert report.evicted_items == 4
+    # and evicted keys are tracked for reuse detection
+    assert not a.get("k0")
+    assert a.stats().reused_after_evict == 1
+
+
+def test_referenced_bytes_window():
+    a = SlabAllocator([1024], page_size=PAGE)
+    a.set("a", 1000)
+    a.set("b", 1000)
+    for _ in range(10):
+        a.get("b")
+    assert a.referenced_bytes(5) == 1000          # only "b" is recent
+    assert a.referenced_bytes(10**9) == 2000      # everything, eventually
+
+
+# -- KV pool: the policy on finished-sequence token pages --------------------
+
+def test_kv_finish_retain_and_reuse_roundtrip():
+    kv = KVSlabPool(1024, [128, 256, 512])
+    kv.alloc(1, 500)
+    assert kv.finish(1, retain=True)
+    st = kv.stats()
+    assert st.n_retained == 1 and st.retained_tokens == 512
+    assert st.active_requests == 0
+    back = kv.reuse(1)
+    assert back is not None and back.chunk == 512
+    assert kv.stats().n_retained == 0
+    assert kv.stats().n_retained_reused == 1
+
+
+def test_kv_pressure_evicts_least_valuable_retained():
+    kv = KVSlabPool(1024, [128, 256, 512],
+                    eviction_policy=make_policy("ranked"))
+    kv.alloc(1, 500)
+    kv.alloc(2, 250)
+    kv.alloc(3, 250)                     # pool now full (512+256+256)
+    kv.finish(1)
+    kv.finish(2)
+    kv.touch_retained(2)                 # 2 looks reusable, 1 does not
+    a4 = kv.alloc(4, 400)                # needs 512: must evict retained 1
+    assert a4 is not None
+    assert kv.reuse(1) is None           # 1 was the victim
+    assert kv.reuse(2) is not None       # 2 survived
+    assert kv.stats().n_retained_evicted == 1
+
+
+def test_kv_retained_larger_chunk_carves_remainder():
+    kv = KVSlabPool(512, [128, 512])
+    kv.alloc(1, 500)
+    kv.finish(1)                         # 512 retained, pool exhausted
+    a2 = kv.alloc(2, 100)                # 128 carved out of the 512 victim
+    assert a2 is not None and a2.chunk == 128
+    assert kv.stats().n_retained_evicted == 1
+    assert kv.alloc(3, 100) is not None  # remainder reached the freelist
+
+
+def test_kv_retained_id_collision_recycles_old_chunk():
+    # finish -> alloc (same id) -> finish must not leak the first chunk
+    kv = KVSlabPool(1024, [512])
+    kv.alloc(1, 500)
+    kv.finish(1)
+    kv.alloc(1, 500)                     # id reuse: stale retained entry
+    kv.finish(1)
+    st = kv.stats()
+    assert st.n_retained == 1 and st.retained_tokens == 512
+    assert st.free_tokens == 512         # first range back in the freelist
+    assert kv.alloc(2, 500) is not None  # and actually reachable
+
+
+def test_kv_finish_no_retain_frees():
+    kv = KVSlabPool(1024, [512])
+    kv.alloc(1, 500)
+    assert not kv.finish(1, retain=False)
+    assert kv.stats().n_retained == 0
+    assert kv.alloc(2, 500) is not None  # chunk went back to the freelist
+
+
+# -- zipfian re-reference traffic --------------------------------------------
+
+def test_zipfian_ops_shape_and_skew():
+    ops = zipfian_rereference_ops(PAPER_WORKLOADS[:2], n_ops=5000, seed=1)
+    assert len(ops) == 5000
+    assert {o.op for o in ops} <= {"get", "set"}
+    gets = [o for o in ops if o.op == "get"]
+    assert 0.6 < len(gets) / len(ops) < 0.8      # get_frac=0.7
+    # zipf head: rank-0 keys dominate re-references
+    from collections import Counter
+    top = Counter(o.key for o in gets).most_common(1)[0]
+    assert top[0].endswith(":z0") and top[1] > len(gets) / 50
+    # gets carry the refill payload
+    assert all(o.size > 0 for o in gets)
+
+
+def test_zipfian_tail_shift_changes_identity_not_head():
+    ops = zipfian_rereference_ops(PAPER_WORKLOADS[:1], n_ops=4000,
+                                  alt_workloads=[PAPER_WORKLOADS[2]],
+                                  shift_at=0.5, head_frac=0.05, seed=1)
+    first, second = ops[:2000], ops[2000:]
+    assert not any(o.key.split(":")[1].startswith("b") for o in first)
+    assert any(o.key.split(":")[1].startswith("b") for o in second)
+    # head keys (low zipf ranks) keep their identity after the shift
+    head_keys = {o.key for o in second if o.key.endswith(":z0")}
+    assert head_keys                     # rank-0 still referenced as z0
+
+
+def test_zipfian_single_workload_no_alt_never_shifts():
+    ops = zipfian_rereference_ops(PAPER_WORKLOADS[:1], n_ops=2000, seed=1)
+    assert not any(":b" in o.key for o in ops)
+
+
+# -- end-to-end: refit-approval win over ColdestLRU --------------------------
+
+def test_e2e_honest_cost_model_approves_refit_coldest_vetoes():
+    """The ISSUE's scenario, compact: phase one fills the cache with
+    items the traffic then stops referencing; phase two switches to a
+    small size the current schedule wastes heavily on. The wholesale
+    model charges the full stale payload and vetoes the refit; the
+    ranked model prices the dead residents near zero, approves the same
+    refit, and ends with less insert-charged waste. (The full-scale
+    version of this comparison is `adaptive_bench.py --policy ranked`.)
+    """
+    page = 1 << 20
+    results = {}
+    for name in ("coldest", "ranked"):
+        policy = (make_policy("ranked", half_life=300.0)
+                  if name == "ranked" else make_policy(name))
+        alloc = SlabAllocator([1024, 2048], page_size=page,
+                              eviction_policy=policy)
+        ctl = SlabController([1024, 2048], config=ControllerConfig(
+            k=2, page_size=page, check_every=400, half_life=400.0,
+            drift_threshold=0.12, min_items_between_refits=400,
+            amortization_windows=4.0, cost_weight=1.0))
+        waste = stored = 0
+        key = 0
+
+        def store(size, alloc=alloc, ctl=ctl):
+            nonlocal waste, stored, key
+            cs = alloc.chunk_sizes
+            idx = int(np.searchsorted(cs, size, side="left"))
+            waste += int(cs[idx]) - size if idx < len(cs) else page - size
+            stored += size
+            alloc.set(f"k{key}", size)
+            key += 1
+            ctl.observe(size)
+            d = ctl.maybe_refit(
+                cost_bytes_fn=lambda c: alloc.migration_cost_bytes(c))
+            if d is not None and d.approved:
+                alloc.reconfigure(d.chunks)
+                ctl.set_chunks(alloc.chunk_sizes)
+
+        for _ in range(5000):            # phase 1: 700-byte residents of
+            store(700)                   # the 1024 class, then never
+        #                                  referenced again (stale tail)
+        for _ in range(1200):            # phase 2: 1100-byte items forced
+            store(1100)                  # into 2048 (heavy recurring waste
+        #                                  until a refit drops the 1024s)
+        results[name] = (ctl.n_refits, waste / stored,
+                         [d.reason for d in ctl.decisions])
+
+    coldest_refits, coldest_waste, coldest_reasons = results["coldest"]
+    ranked_refits, ranked_waste, _ = results["ranked"]
+    assert ranked_refits > coldest_refits          # the approval win
+    assert "cost-exceeds-savings" in coldest_reasons
+    assert ranked_waste < coldest_waste            # and it paid off
