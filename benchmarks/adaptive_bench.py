@@ -45,7 +45,8 @@ import numpy as np
 
 from repro.core import (PAGE_SIZE, ControllerConfig, SlabController,
                         SlabPolicy, default_memcached_schedule,
-                        schedule_with_default_tail, size_histogram)
+                        schedule_with_default_tail, size_histogram,
+                        uncovered_charge)
 from repro.core.distribution import PAPER_WORKLOADS
 from repro.memcached import (SlabAllocator, diurnal_traffic, drift_traffic,
                              make_policy, phase_shift_traffic,
@@ -58,11 +59,13 @@ POLICIES = ("coldest", "segmented", "ranked")
 
 def charge_waste(chunk_sizes, size: int, page_size: int) -> int:
     """The insert-charging rule every driver here shares: chunk - item
-    for storable sizes, a full page for unstorable ones (the same rule
-    the optimizers score with)."""
+    for storable sizes, ceil(size/page) whole pages for unstorable ones
+    (the same rule the optimizers score with — never negative, even for
+    items larger than a page)."""
     idx = int(np.searchsorted(chunk_sizes, size, side="left"))
-    return (int(chunk_sizes[idx]) - size if idx < len(chunk_sizes)
-            else page_size - size)
+    if idx < len(chunk_sizes):
+        return int(chunk_sizes[idx]) - size
+    return int(uncovered_charge(size, page_size=page_size))
 
 
 def _controller(chunks, n_items: int) -> SlabController:
@@ -317,10 +320,18 @@ if __name__ == "__main__":
     ap.add_argument("--policy", choices=POLICIES + ("all",), default=None,
                     help="run the eviction-policy axis instead of the "
                          "default/static/adaptive comparison")
+    ap.add_argument("--device-observe", action="store_true",
+                    help="host vs device observe path: same refit "
+                         "decisions, host syncs counted per refit window")
     ap.add_argument("--n-items", type=int, default=120_000)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke size (covers both axes)")
     args = ap.parse_args()
+    if args.device_observe:
+        from observe_bench import sync_axis
+        n = min(args.n_items, 20_000) if args.quick else args.n_items
+        print(json.dumps(sync_axis(n), indent=2))
+        raise SystemExit(0)
     if args.quick:
         n = min(args.n_items, 6000)
         full = main(n)

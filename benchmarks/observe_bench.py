@@ -1,0 +1,132 @@
+"""Benchmark: host-dict vs device-sketch observation.
+
+The observe half of the paper's loop, measured two ways:
+
+* **throughput** — items/second of ``DecayedSizeHistogram.observe_many``
+  (the host python-dict sketch, one dict update per item) vs
+  ``DeviceSizeSketch.observe_many`` (one Pallas ``sketch_update`` launch
+  per batch), on the same batched size stream;
+* **sync traffic** — a phase-shifted traffic replay through two
+  ``SlabController``s (host sketch vs ``device=True``), counting
+  device↔host sketch materializations (``n_host_syncs``) per refit
+  window and checking the two paths reach the SAME refit decisions.
+  The host path materializes the sketch at every drift check; the
+  device path only when the drift gate has already passed and a refit
+  is actually evaluated.
+
+``python benchmarks/observe_bench.py`` emits JSON;
+``--quick`` is the CI smoke size.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import (ControllerConfig, DecayedSizeHistogram,
+                        DeviceSizeSketch, SlabController, SlabPolicy,
+                        schedule_with_default_tail, size_histogram)
+from repro.core.distribution import PAPER_WORKLOADS
+from repro.memcached import phase_shift_traffic
+
+K = 6
+BATCH = 512
+
+
+def observe_throughput(n_items: int, *, batch: int = BATCH,
+                       half_life: float = 4000.0,
+                       num_buckets: int = 1 << 12) -> Dict:
+    """items/s of the host dict vs the device sketch on one stream."""
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(64, num_buckets - 1, n_items).astype(np.int64)
+    batches = [sizes[i:i + batch] for i in range(0, n_items, batch)]
+
+    host = DecayedSizeHistogram(half_life=half_life)
+    t0 = time.perf_counter()
+    for b in batches:
+        host.observe_many(b)
+    host_s = time.perf_counter() - t0
+
+    device = DeviceSizeSketch(half_life=half_life, num_buckets=num_buckets)
+    device.observe_many(batches[0])          # warmup: compile the launch
+    device.reset()
+    t0 = time.perf_counter()
+    for b in batches:
+        device.observe_many(b)
+    device.weights_device.block_until_ready()
+    device_s = time.perf_counter() - t0
+
+    return {
+        "n_items": n_items,
+        "batch": batch,
+        "host_items_per_s": round(n_items / host_s),
+        "device_items_per_s": round(n_items / device_s),
+        "device_speedup": round(host_s / device_s, 2),
+    }
+
+
+def sync_axis(n_items: int, *, batch: int = BATCH) -> Dict:
+    """Same refit decisions, far fewer host syncs: the fused device path
+    vs the host path on phase-shifted traffic."""
+    a, b = PAPER_WORKLOADS[0], PAPER_WORKLOADS[2]
+    sizes = phase_shift_traffic(a, b, n_items=n_items, shift_at=0.5,
+                                seed=11)
+    support, freqs = size_histogram(sizes[:max(1, n_items // 10)])
+    fit = SlabPolicy().fit(support, freqs, K, method="dp")
+    deployed = schedule_with_default_tail(fit.chunk_sizes)
+    cadence = max(250, n_items // 60)
+    common = dict(k=K, check_every=cadence, half_life=2.0 * cadence,
+                  drift_threshold=0.12,
+                  min_items_between_refits=4 * cadence,
+                  amortization_windows=8.0, cost_weight=0.1)
+
+    out: Dict[str, Dict] = {}
+    decisions = {}
+    for name, config in (
+            ("host", ControllerConfig(**common)),
+            ("device", ControllerConfig(**common, device=True,
+                                        device_buckets=1 << 12))):
+        ctl = SlabController(deployed, config=config)
+        t0 = time.perf_counter()
+        for i in range(0, len(sizes), batch):
+            ctl.observe_many(sizes[i:i + batch])
+            ctl.maybe_refit()
+        dt = time.perf_counter() - t0
+        decisions[name] = [(d.approved, d.reason) for d in ctl.decisions]
+        out[name] = {
+            "n_checks": ctl.n_checks,
+            "n_refits": ctl.n_refits,
+            "host_syncs": ctl.sketch.n_host_syncs,
+            "syncs_per_refit_window": round(
+                ctl.sketch.n_host_syncs / max(ctl.n_refits, 1), 2),
+            "wall_s": round(dt, 3),
+        }
+    out["decisions_match"] = decisions["host"] == decisions["device"]
+    out["sync_ratio"] = round(out["host"]["host_syncs"]
+                              / max(out["device"]["host_syncs"], 1), 1)
+    if not out["decisions_match"]:
+        # enforced, not just reported: CI's bench-smoke run must go red
+        # when the device path stops reproducing the host decisions
+        raise SystemExit(
+            f"host/device refit decisions diverged: {decisions}")
+    return out
+
+
+def main(n_items: int) -> Dict:
+    return {
+        "observe_throughput": observe_throughput(n_items),
+        "syncs": sync_axis(n_items),
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--n-items", type=int, default=200_000)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke size")
+    args = ap.parse_args()
+    n = min(args.n_items, 20_000) if args.quick else args.n_items
+    print(json.dumps(main(n), indent=2))

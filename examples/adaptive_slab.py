@@ -24,8 +24,9 @@ import numpy as np
 
 from repro.core import (ControllerConfig, SlabController, SlabPolicy,
                         default_memcached_schedule,
-                        schedule_with_default_tail, size_histogram)
-from repro.core.distribution import PAGE_SIZE, PAPER_WORKLOADS
+                        schedule_with_default_tail, size_histogram,
+                        uncovered_charge)
+from repro.core.distribution import PAPER_WORKLOADS
 from repro.memcached import SlabAllocator, phase_shift_traffic
 
 
@@ -36,7 +37,7 @@ def replay(sizes, chunks, controller=None):
         s = int(s)
         idx = alloc.class_for(s)
         cum_waste += (int(alloc.chunk_sizes[idx]) - s if idx is not None
-                      else PAGE_SIZE - s)
+                      else int(uncovered_charge(s)))
         cum_bytes += s
         alloc.set(str(i), s)
         if controller is None:

@@ -28,10 +28,11 @@ from repro.core.slab_policy import (SlabPolicy, SlabSchedule,
                                     default_memcached_schedule,
                                     schedule_with_default_tail)
 from repro.core.waste import (default_waste_fraction, per_class_waste_exact,
-                              utilization_exact, waste_batch_jax, waste_exact,
-                              waste_jax)
-from repro.core.observe import (DecayedSizeHistogram, StreamingSizeSketch,
-                                histogram_distance)
+                              uncovered_charge, utilization_exact,
+                              waste_batch_jax, waste_exact, waste_jax)
+from repro.core.observe import (DecayedSizeHistogram, DeviceSizeSketch,
+                                StreamingSizeSketch, histogram_distance,
+                                histogram_distance_device)
 from repro.core.controller import (ControllerConfig, RefitDecision,
                                    SlabController)
 from repro.core.arbiter import (PagePool, TenantArbiter, TenantPages,
@@ -46,9 +47,10 @@ __all__ = [
     "parallel_hillclimb", "anneal",
     "SlabPolicy", "SlabSchedule", "covering_default_classes",
     "default_memcached_schedule", "schedule_with_default_tail",
-    "default_waste_fraction", "per_class_waste_exact", "utilization_exact",
-    "waste_batch_jax", "waste_exact", "waste_jax",
-    "DecayedSizeHistogram", "StreamingSizeSketch", "histogram_distance",
+    "default_waste_fraction", "per_class_waste_exact", "uncovered_charge",
+    "utilization_exact", "waste_batch_jax", "waste_exact", "waste_jax",
+    "DecayedSizeHistogram", "DeviceSizeSketch", "StreamingSizeSketch",
+    "histogram_distance", "histogram_distance_device",
     "ControllerConfig", "RefitDecision", "SlabController",
     "PagePool", "TenantArbiter", "TenantPages", "TransferDecision",
 ]

@@ -43,7 +43,9 @@ from typing import Callable, List, Optional, Tuple
 import numpy as np
 
 from repro.core.distribution import PAGE_SIZE
-from repro.core.observe import DecayedSizeHistogram, histogram_distance
+from repro.core.observe import (DecayedSizeHistogram, DeviceSizeSketch,
+                                histogram_distance,
+                                histogram_distance_device)
 
 
 @dataclasses.dataclass
@@ -75,6 +77,14 @@ class ControllerConfig:
     min_chunk: int = 48
     align: int = 1                       # chunk quantization grid (tokens/B)
     max_bins: int = 1 << 14              # sketch bin budget
+    # Device-resident observe path: the sketch is a DeviceSizeSketch
+    # (dense decayed bucket histogram updated by the Pallas sketch_update
+    # kernel, one launch per observe_many batch) and the drift gate runs
+    # on device via histogram_distance_device — the sketch is only
+    # materialized on host when a refit is actually being evaluated.
+    device: bool = False                 # device-resident observe sketch
+    device_buckets: int = 1 << 13        # dense bucket count
+    device_bucket_width: int = 1         # bucket grid (serving: align)
 
 
 @dataclasses.dataclass
@@ -145,9 +155,10 @@ class SlabController:
                    (consumers re-sync via :meth:`set_chunks` after
                    quantizing/tailing the deployed schedule).
         sketch:    the live :class:`DecayedSizeHistogram`.
-        reference: fitting-time ``(support, weights)`` histogram the
-                   drift detector compares against (None until the
-                   first check adopts one).
+        reference: fitting-time histogram the drift detector compares
+                   against (None until the first check adopts one) — a
+                   ``(support, weights)`` pair on the host path, a dense
+                   device weight vector when ``config.device`` is set.
         n_checks / n_refits / last_drift: loop telemetry.
     """
 
@@ -164,8 +175,15 @@ class SlabController:
             half_life = 2.0 * self.config.check_every
         if not np.isfinite(half_life):
             half_life = None        # undecayed: full-history histogram
-        self.sketch = DecayedSizeHistogram(half_life=half_life,
-                                           max_bins=self.config.max_bins)
+        self._device = bool(self.config.device)
+        if self._device:
+            self.sketch = DeviceSizeSketch(
+                half_life=half_life,
+                num_buckets=self.config.device_buckets,
+                bucket_width=self.config.device_bucket_width)
+        else:
+            self.sketch = DecayedSizeHistogram(
+                half_life=half_life, max_bins=self.config.max_bins)
         self._policy = policy
         # Fitting-time histogram the drift detector compares against.
         # None until the first check (or refit) establishes one.
@@ -201,17 +219,40 @@ class SlabController:
         self.sketch.observe(size)
         self._since_check += 1
 
-    def observe_many(self, sizes) -> None:
-        """Feed a batch of sizes (one flat array) into the live sketch."""
-        sizes = np.asarray(sizes).ravel()
-        self.sketch.observe_many(sizes)
-        self._since_check += len(sizes)
+    def observe_many(self, sizes, weights=None) -> None:
+        """Feed a batch of sizes (one flat array) into the live sketch.
+
+        On the device path ``sizes`` may be a device array straight out
+        of a serve step — it is bucketed and folded into the resident
+        sketch in one kernel launch, with no host round-trip.
+        """
+        if self._device:
+            before = self.sketch.n_observed
+            self.sketch.observe_many(sizes, weights)
+            self._since_check += self.sketch.n_observed - before
+        else:
+            sizes = np.asarray(sizes).ravel()
+            self.sketch.observe_many(sizes, weights)
+            self._since_check += len(sizes)
 
     # -- detect + decide -----------------------------------------------------
+    def _reference_now(self):
+        """The live sketch in reference form: a dense device weight
+        vector on the device path, a host (support, weights) pair
+        otherwise."""
+        if self._device:
+            return self.sketch.weights_device
+        return self.sketch.snapshot_weights()
+
     def drift(self) -> float:
         """Distance of the live sketch from the fitting-time reference."""
         if self.reference is None:
             return 0.0
+        if self._device:
+            self.sketch.n_scalar_syncs += 1
+            return float(histogram_distance_device(
+                self.reference, self.sketch.weights_device,
+                metric=self.config.drift_metric))
         return histogram_distance(self.reference,
                                   self.sketch.snapshot_weights(),
                                   metric=self.config.drift_metric)
@@ -228,16 +269,30 @@ class SlabController:
             return None
         self._since_check = 0
         self.n_checks += 1
-        live = self.sketch.snapshot_weights()
-        if live[0].size == 0:
-            return None
-        if self.reference is None:
-            # First check: adopt the live sketch as the reference the
-            # initial schedule is presumed fit to.
-            self.reference = live
-            return None
-        drift = histogram_distance(self.reference, live,
-                                   metric=self.config.drift_metric)
+        if self._device:
+            # Fused device path: the sketch was updated on device by
+            # observe_many; the drift gate compares two resident weight
+            # vectors on device too. Only the one gate scalar crosses to
+            # host here — the sketch is materialized solely inside
+            # _evaluate_refit, i.e. when the drift+cooldown gates have
+            # already passed.
+            if self.sketch.n_observed == 0:
+                return None
+            if self.reference is None:
+                self.reference = self.sketch.weights_device
+                return None
+            drift = self.drift()
+        else:
+            live = self.sketch.snapshot_weights()
+            if live[0].size == 0:
+                return None
+            if self.reference is None:
+                # First check: adopt the live sketch as the reference the
+                # initial schedule is presumed fit to.
+                self.reference = live
+                return None
+            drift = histogram_distance(self.reference, live,
+                                       metric=self.config.drift_metric)
         self.last_drift = drift
         if drift < self.config.drift_threshold:
             return self._decide(False, "drift-below-threshold", drift)
@@ -278,7 +333,7 @@ class SlabController:
             # re-anchor the reference so steady-state traffic that merely
             # *settled* far from the old fitting histogram stops
             # triggering a full candidate evaluation every check.
-            self.reference = self.sketch.snapshot_weights()
+            self.reference = self._reference_now()
             return self._decide(False, "improvement-below-hysteresis", drift,
                                 chunks=winner, w_cur=w_cur, w_new=w_new)
         # Savings accrue over future traffic (amortization_windows sketch
@@ -291,7 +346,7 @@ class SlabController:
                                 chunks=winner, w_cur=w_cur, w_new=w_new,
                                 savings=savings, cost=cost)
         self.chunks = winner
-        self.reference = self.sketch.snapshot_weights()
+        self.reference = self._reference_now()
         self._last_refit_at = self.n_observed
         self.n_refits += 1
         return self._decide(True, "refit", drift, chunks=winner,
@@ -327,7 +382,7 @@ class SlabController:
         sched = pol.fit(support, freqs, k or cfg.k or len(self.chunks),
                         method=method or cfg.method, baseline=self.chunks)
         self.chunks = _quantize_up(sched.chunk_sizes, cfg.align)
-        self.reference = self.sketch.snapshot_weights()
+        self.reference = self._reference_now()
         self._last_refit_at = self.n_observed
         self.n_refits += 1
         return self.chunks

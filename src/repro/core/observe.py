@@ -14,6 +14,17 @@ pruned, or snapshotted). `snapshot()` returns the same `(support, freqs)`
 int64 pair as `repro.core.distribution.size_histogram`, so every consumer
 of the offline histogram works unchanged on the live sketch.
 
+`DeviceSizeSketch` is the device-resident sibling: a dense
+exponentially-decayed bucket histogram living in accelerator memory,
+updated one whole batch of sizes per Pallas ``sketch_update`` launch
+(see ``repro.kernels.sketch_update``). Its ``observe_many``/``snapshot``
+API matches the host sketch, but nothing crosses the device→host
+boundary until ``snapshot()``/``snapshot_weights()`` is actually called
+— both classes count those materializations in ``n_host_syncs`` so the
+benchmarks can compare sync traffic. ``histogram_distance_device`` is
+the matching on-device drift metric over two dense weight vectors, so
+the controller's drift gate runs without materializing the sketch.
+
 `histogram_distance` is the drift signal: normalized L1 (total variation)
 or earth-mover's distance between two histograms over their shared
 support, both in [0, 1]. The controller compares the live sketch against
@@ -51,6 +62,7 @@ class DecayedSizeHistogram:
         self._t = 0                          # observation clock
         self.n_observed = 0                  # lifetime count (undecayed)
         self._total = 0.0                    # decayed total weight
+        self.n_host_syncs = 0                # snapshot materializations
 
     # -- updates -----------------------------------------------------------
     def observe(self, size: int, weight: float = 1.0) -> None:
@@ -60,19 +72,34 @@ class DecayedSizeHistogram:
             raise ValueError(f"size must be non-negative, got {s}")
         self._t += 1
         self.n_observed += 1
-        self._total = self._total * self._decay + weight
         w = self._w.get(s)
         if w is not None:
+            self._total = self._total * self._decay + weight
             self._w[s] = w * self._decay ** (self._t - self._last[s]) + weight
         else:
             if len(self._w) >= self.max_bins:
+                # _prune syncs the kept bins to the (already stepped)
+                # clock and rebuilds _total from them, so only the new
+                # item's weight remains to be added.
                 self._prune()
+                self._total += weight
+            else:
+                self._total = self._total * self._decay + weight
             self._w[s] = weight
         self._last[s] = self._t
 
-    def observe_many(self, sizes) -> None:
-        for s in np.asarray(sizes).ravel().tolist():
-            self.observe(int(s))
+    def observe_many(self, sizes, weights=None) -> None:
+        """Record a batch of sizes, optionally with per-item weights
+        (scalar or array-like broadcast against ``sizes``)."""
+        sizes = np.asarray(sizes).ravel()
+        if weights is None:
+            for s in sizes.tolist():
+                self.observe(int(s))
+            return
+        w = np.broadcast_to(np.asarray(weights, dtype=np.float64),
+                            sizes.shape).ravel()
+        for s, wi in zip(sizes.tolist(), w.tolist()):
+            self.observe(int(s), wi)
 
     # -- views -------------------------------------------------------------
     @property
@@ -92,14 +119,13 @@ class DecayedSizeHistogram:
         synced = self._synced_weights()
         keep = sorted(synced, key=synced.__getitem__, reverse=True)
         keep = keep[:max(1, int(self.max_bins * 0.9))]
-        kept = set(keep)
         t = self._t
-        self._w = {s: synced[s] for s in keep}
-        self._last = {s: t for s in keep}
-        for s in list(kept):
-            if self._w[s] <= 0.0:
-                del self._w[s]
-                del self._last[s]
+        self._w = {s: synced[s] for s in keep if synced[s] > 0.0}
+        self._last = {s: t for s in self._w}
+        # Dropped bins take their decayed mass with them: recompute the
+        # running total from the kept (synced) bins so effective_count
+        # never overstates the live mass after a prune.
+        self._total = float(sum(self._w.values()))
 
     def snapshot(self) -> Tuple[np.ndarray, np.ndarray]:
         """``(support, freqs)`` int64, compatible with ``size_histogram``.
@@ -109,6 +135,7 @@ class DecayedSizeHistogram:
         current traffic). With decay disabled this is bit-exact with
         ``size_histogram`` over every observed size.
         """
+        self.n_host_syncs += 1
         synced = self._synced_weights()
         if not synced:
             return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
@@ -120,6 +147,7 @@ class DecayedSizeHistogram:
     def snapshot_weights(self) -> Tuple[np.ndarray, np.ndarray]:
         """Float-weight variant of :meth:`snapshot` (no rounding) — the
         drift metric uses this to avoid quantization noise."""
+        self.n_host_syncs += 1
         synced = self._synced_weights()
         if not synced:
             return (np.zeros(0, dtype=np.int64),
@@ -135,11 +163,183 @@ class DecayedSizeHistogram:
         self._t = 0
         self.n_observed = 0
         self._total = 0.0
+        self.n_host_syncs = 0
 
 
 # Public alias: the docs call this the "streaming size sketch" — the
 # name says what it is for, DecayedSizeHistogram says how it works.
 StreamingSizeSketch = DecayedSizeHistogram
+
+
+class DeviceSizeSketch:
+    """Device-resident exponentially-decayed size histogram.
+
+    The same observe/snapshot contract as :class:`DecayedSizeHistogram`,
+    but the state is a dense ``(num_buckets,)`` float32 weight vector in
+    accelerator memory, updated one whole batch per Pallas
+    ``sketch_update`` launch. Sizes are bucketed on a fixed grid: size
+    ``s`` lands in bucket ``ceil(s / bucket_width) - 1``, whose
+    representative size is ``(bucket + 1) * bucket_width`` — the bucket's
+    inclusive upper edge, so the representative always covers the item
+    (the direction slab fitting needs). With ``bucket_width=1`` and
+    sizes in ``[1, num_buckets]`` the sketch is bit-comparable to the
+    host dict (size 0, which the host records verbatim, coarsens into
+    the first bucket's representative here); serving uses
+    ``bucket_width=align`` so ALIGN-quantized lengths map exactly. Sizes beyond the grid clamp into the top bucket (size
+    the grid to the workload).
+
+    Nothing crosses the device→host boundary until ``snapshot()`` /
+    ``snapshot_weights()`` is called; those materializations are counted
+    in ``n_host_syncs`` (scalar readbacks like ``effective_count`` and
+    the controller's drift gate count in ``n_scalar_syncs``). The drift
+    metric consumes :attr:`weights_device` directly via
+    :func:`histogram_distance_device`, keeping the whole
+    observe → drift loop on device.
+    """
+
+    def __init__(self, *, half_life: Optional[float] = None,
+                 num_buckets: int = 1 << 13, bucket_width: int = 1,
+                 interpret: Optional[bool] = None):
+        if half_life is not None and half_life <= 0:
+            raise ValueError(f"half_life must be positive, got {half_life}")
+        if num_buckets < 2:
+            raise ValueError("num_buckets must be >= 2")
+        if bucket_width < 1:
+            raise ValueError("bucket_width must be >= 1")
+        import jax.numpy as jnp   # deferred: host sketch stays jax-free
+        self._jnp = jnp
+        self.half_life = half_life
+        self.num_buckets = num_buckets
+        self.bucket_width = bucket_width
+        self._decay = 0.5 ** (1.0 / half_life) if half_life else 1.0
+        self._interpret = interpret
+        self._use_ref = False       # latched once the Pallas path fails
+        self._weights = jnp.zeros(num_buckets, dtype=jnp.float32)
+        self.n_observed = 0                  # lifetime count (undecayed)
+        self.n_host_syncs = 0                # full materializations
+        self.n_scalar_syncs = 0              # few-byte scalar readbacks
+
+    # -- updates -----------------------------------------------------------
+    def bucket_of(self, sizes):
+        """Bucket ids for an array of sizes (device-side, no transfer).
+
+        Size 0 coarsens into the first bucket (representative
+        ``bucket_width``) exactly like any other in-bucket size rounds
+        up to its representative. Negative sizes map to -1, which the
+        scatter ignores: the host sketch raises on them, but raising
+        here would need a device→host readback, so invalid items are
+        dropped instead — validate upstream. (They still tick the decay
+        clock and ``n_observed``, like any batch item.)
+        """
+        jnp = self._jnp
+        s = jnp.asarray(sizes).ravel().astype(jnp.int32)
+        idx = -(-s // jnp.int32(self.bucket_width)) - 1
+        return jnp.where(s < 0, -1,
+                         jnp.clip(idx, 0, self.num_buckets - 1))
+
+    def observe(self, size: int, weight: float = 1.0) -> None:
+        """Record one size (a one-element batch; prefer observe_many)."""
+        self.observe_many([int(size)], [float(weight)])
+
+    def observe_many(self, sizes, weights=None) -> None:
+        """Record a batch of sizes in ONE kernel launch.
+
+        ``sizes`` may be a host array or a device array straight out of
+        a serve step — either way nothing is pulled back to host. Each
+        item i of an n-item batch is folded in with ``decay**(n-1-i)``,
+        matching n sequential host observations exactly.
+        """
+        jnp = self._jnp
+        idx = self.bucket_of(sizes)
+        n = int(idx.shape[0])
+        if n == 0:
+            return
+        w = (jnp.ones(n, dtype=jnp.float32) if weights is None
+             else jnp.broadcast_to(
+                 jnp.asarray(weights, dtype=jnp.float32), (n,)))
+        if self._decay != 1.0:
+            w = w * jnp.power(jnp.float32(self._decay),
+                              jnp.arange(n - 1, -1, -1, dtype=jnp.float32))
+        # Pad the batch to the kernel's block size HERE, outside the jit
+        # boundary: serving batch lengths vary nearly every step, and
+        # each distinct traced shape would recompile the launch. Padding
+        # ids are -1 (no bucket matches) with zero weight, and
+        # decay_total stays decay**n of the REAL batch length.
+        from repro.kernels.sketch_update import BLOCK_N
+        pad = (-n) % BLOCK_N
+        if pad:
+            idx = jnp.pad(idx, (0, pad), constant_values=-1)
+            w = jnp.pad(w, (0, pad))
+        if not self._use_ref:
+            try:
+                from repro.kernels.ops import sketch_update
+                self._weights = sketch_update(self._weights, idx, w,
+                                              self._decay ** n,
+                                              interpret=self._interpret)
+                self.n_observed += n
+                return
+            except Exception as e:  # pragma: no cover - pallas unavailable
+                # Latched: don't re-pay a doomed trace per batch (a
+                # kernel *bug* still surfaces through the dedicated
+                # kernel-vs-oracle tests, which call the launch
+                # directly) — but say so once, or a production run would
+                # silently measure the fallback while reporting itself
+                # as the kernel path.
+                import warnings
+                warnings.warn(
+                    "DeviceSizeSketch: Pallas sketch_update launch "
+                    f"failed ({e!r}); latching the jnp fallback for "
+                    "this sketch", RuntimeWarning)
+                self._use_ref = True
+        from repro.kernels.sketch_update import sketch_update_ref
+        self._weights = sketch_update_ref(self._weights, idx, w,
+                                          self._decay ** n)
+        self.n_observed += n
+
+    # -- views -------------------------------------------------------------
+    @property
+    def weights_device(self):
+        """The dense per-bucket weight vector (device array, no sync)."""
+        return self._weights
+
+    @property
+    def support_device(self):
+        """Representative sizes of every bucket (device array)."""
+        jnp = self._jnp
+        return ((jnp.arange(self.num_buckets, dtype=jnp.int32) + 1)
+                * jnp.int32(self.bucket_width))
+
+    @property
+    def effective_count(self) -> float:
+        """Decayed total mass (scalar readback, not a materialization)."""
+        self.n_scalar_syncs += 1
+        return float(self._jnp.sum(self._weights))
+
+    def snapshot(self) -> Tuple[np.ndarray, np.ndarray]:
+        """``(support, freqs)`` int64 — THE device→host sync point."""
+        self.n_host_syncs += 1
+        w = np.asarray(self._weights)
+        freqs = np.rint(w).astype(np.int64)
+        keep = freqs > 0
+        support = (np.nonzero(keep)[0].astype(np.int64) + 1) \
+            * self.bucket_width
+        return support, freqs[keep]
+
+    def snapshot_weights(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Float-weight variant of :meth:`snapshot` (no rounding)."""
+        self.n_host_syncs += 1
+        w = np.asarray(self._weights, dtype=np.float64)
+        keep = w > 0.0
+        support = (np.nonzero(keep)[0].astype(np.int64) + 1) \
+            * self.bucket_width
+        return support, w[keep]
+
+    def reset(self) -> None:
+        self._weights = self._jnp.zeros(self.num_buckets,
+                                        dtype=self._jnp.float32)
+        self.n_observed = 0
+        self.n_host_syncs = 0
+        self.n_scalar_syncs = 0
 
 
 def _aligned(a: Tuple[np.ndarray, np.ndarray],
@@ -155,6 +355,57 @@ def _aligned(a: Tuple[np.ndarray, np.ndarray],
     pa[np.searchsorted(support, sa)] = np.asarray(fa, dtype=np.float64)
     pb[np.searchsorted(support, sb)] = np.asarray(fb, dtype=np.float64)
     return support, pa, pb
+
+
+def _histogram_distance_device_jit(metric: str):
+    """Build the jitted dense-histogram distance for one metric."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def dist(wa, wb):
+        wa = wa.astype(jnp.float32)
+        wb = wb.astype(jnp.float32)
+        ta = jnp.sum(wa)
+        tb = jnp.sum(wb)
+        pa = wa / jnp.maximum(ta, 1e-30)
+        pb = wb / jnp.maximum(tb, 1e-30)
+        if metric == "l1":
+            d = 0.5 * jnp.sum(jnp.abs(pa - pb))
+        else:
+            # emd on a uniform bucket grid: the bucket width cancels, and
+            # the host metric's span is the occupied extent (empty edge
+            # buckets contribute zero cdf gap, so only the denominator
+            # needs the occupied first/last bucket).
+            occupied = (wa > 0) | (wb > 0)
+            first = jnp.argmax(occupied)
+            last = wa.shape[0] - 1 - jnp.argmax(occupied[::-1])
+            cdf_gap = jnp.abs(jnp.cumsum(pa - pb))[:-1]
+            d = jnp.sum(cdf_gap) / jnp.maximum(last - first, 1)
+        # empty-vs-empty is 0, empty-vs-mass is 1 (host semantics)
+        both = (ta > 0) & (tb > 0)
+        return jnp.where(both, d, jnp.where(ta == tb, 0.0, 1.0))
+
+    return dist
+
+
+_DEVICE_DISTANCE = {}
+
+
+def histogram_distance_device(wa, wb, *, metric: str = "l1"):
+    """On-device drift: distance in [0, 1] between two DENSE per-bucket
+    weight vectors on the same grid (e.g. two
+    :attr:`DeviceSizeSketch.weights_device` states). Returns a 0-d
+    device array — nothing is materialized on host until the caller
+    reads the scalar. Same semantics as :func:`histogram_distance` over
+    the bucket-representative support.
+    """
+    if metric not in ("l1", "emd"):
+        raise ValueError(f"unknown metric {metric!r}")
+    fn = _DEVICE_DISTANCE.get(metric)
+    if fn is None:
+        fn = _DEVICE_DISTANCE[metric] = _histogram_distance_device_jit(metric)
+    return fn(wa, wb)
 
 
 def histogram_distance(a, b, *, metric: str = "l1") -> float:

@@ -3,10 +3,14 @@
 An item of size ``s`` is stored in the smallest chunk ``c_j >= s``; the
 memory hole is ``c_j - s``. Items larger than the largest chunk cannot be
 stored at all in Memcached; the optimizer must be discouraged from
-uncovering them, so they are charged as if they consumed a full page
-(``page_size - s`` extra bytes) — any covering configuration is strictly
-better, which keeps the top class above the observed maximum, matching
-Memcached's real constraint.
+uncovering them, so they are charged as if they consumed whole pages:
+``ceil(s / page_size) * page_size - s`` extra bytes (at least one page).
+For ``s <= page_size`` this is the classic full-page charge
+``page_size - s``; for larger items the charge stays non-negative, so a
+schedule that covers nothing can never score better than one that covers
+everything. Any covering configuration is strictly better, which keeps
+the top class above the observed maximum, matching Memcached's real
+constraint.
 
 Two implementations:
 
@@ -30,6 +34,14 @@ import numpy as np
 from repro.core.distribution import PAGE_SIZE
 
 
+def uncovered_charge(support, *, page_size: int = PAGE_SIZE) -> np.ndarray:
+    """Waste charged to sizes no chunk covers: ``ceil(s/page)`` whole
+    pages (at least one) minus the item bytes — always >= 0."""
+    support = np.asarray(support, dtype=np.int64)
+    pages = np.maximum(-(-support // page_size), 1)
+    return pages * page_size - support
+
+
 def waste_exact(chunks, support, freqs, *, page_size: int = PAGE_SIZE) -> int:
     """Exact total waste in bytes (numpy int64)."""
     chunks = np.sort(np.asarray(chunks, dtype=np.int64))
@@ -38,7 +50,8 @@ def waste_exact(chunks, support, freqs, *, page_size: int = PAGE_SIZE) -> int:
     idx = np.searchsorted(chunks, support, side="left")
     storable = idx < chunks.shape[0]
     assigned = chunks[np.minimum(idx, chunks.shape[0] - 1)]
-    per_size = np.where(storable, assigned - support, page_size - support)
+    per_size = np.where(storable, assigned - support,
+                        uncovered_charge(support, page_size=page_size))
     return int(np.sum(per_size * freqs))
 
 
@@ -50,8 +63,9 @@ def utilization_exact(chunks, support, freqs, *,
     freqs = np.asarray(freqs, dtype=np.int64)
     idx = np.searchsorted(chunks, support, side="left")
     storable = idx < chunks.shape[0]
+    pages = np.maximum(-(-support // page_size), 1)
     assigned = np.where(storable, chunks[np.minimum(idx, len(chunks) - 1)],
-                        page_size)
+                        pages * page_size)
     alloc = int(np.sum(assigned * freqs))
     used = int(np.sum(np.where(storable, support, 0) * freqs))
     return used / max(alloc, 1)
@@ -66,7 +80,8 @@ def per_class_waste_exact(chunks, support, freqs, *,
     idx = np.searchsorted(chunks, support, side="left")
     storable = idx < chunks.shape[0]
     assigned = chunks[np.minimum(idx, len(chunks) - 1)]
-    per_size = np.where(storable, assigned - support, page_size - support)
+    per_size = np.where(storable, assigned - support,
+                        uncovered_charge(support, page_size=page_size))
     out = np.zeros(len(chunks) + 1, dtype=np.int64)
     np.add.at(out, np.where(storable, idx, len(chunks)), per_size * freqs)
     return out
@@ -81,8 +96,9 @@ def waste_jax(chunks, support, freqs, *, page_size: int = PAGE_SIZE):
     idx = jnp.searchsorted(chunks, support, side="left")
     storable = idx < k
     assigned = chunks[jnp.minimum(idx, k - 1)]
+    pages = jnp.maximum(-(-support // jnp.int32(page_size)), 1)
     per_size = jnp.where(storable, assigned - support,
-                         jnp.int32(page_size) - support)
+                         pages * jnp.int32(page_size) - support)
     return jnp.sum(per_size.astype(jnp.float32) * freqs.astype(jnp.float32))
 
 

@@ -10,12 +10,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.distribution import PAGE_SIZE
+from repro.kernels.sketch_update import sketch_update_pallas
 from repro.kernels.slab_attention import slab_decode_attention_pallas
 from repro.kernels.waste_eval import waste_eval_pallas
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def sketch_update(state, bucket_idx, weights, decay_total, *,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """(BINS,) decayed histogram state + (N,) bucketed batch -> new state."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return sketch_update_pallas(jnp.asarray(state), jnp.asarray(bucket_idx),
+                                jnp.asarray(weights), decay_total,
+                                interpret=interpret)
 
 
 def waste_eval(chunk_batch, support, freqs, *, page_size: int = PAGE_SIZE,

@@ -11,16 +11,18 @@ def waste_eval_ref(chunk_batch, support, freqs, *,
     """(B, K) schedules x (S,) histogram -> (B,) float32 waste.
 
     Independent restatement of repro.core.waste semantics: each size goes
-    to its smallest covering chunk; uncovered sizes are charged a full
-    page. Rows of ``chunk_batch`` need not be sorted.
+    to its smallest covering chunk; uncovered sizes are charged
+    ``ceil(s / page_size)`` whole pages (never a negative amount). Rows
+    of ``chunk_batch`` need not be sorted.
     """
     chunks = jnp.sort(chunk_batch.astype(jnp.float32), axis=1)  # (B, K)
     s = support.astype(jnp.float32)[None, None, :]              # (1,1,S)
     c = chunks[:, :, None]                                      # (B,K,1)
     covered = c >= s
     assigned = jnp.min(jnp.where(covered, c, jnp.inf), axis=1)  # (B,S)
+    pages = jnp.maximum(jnp.ceil(s[0] / jnp.float32(page_size)), 1.0)
     w = jnp.where(jnp.isfinite(assigned), assigned - s[0],
-                  jnp.float32(page_size) - s[0])
+                  pages * jnp.float32(page_size) - s[0])
     return jnp.sum(w * freqs.astype(jnp.float32)[None, :], axis=1)
 
 

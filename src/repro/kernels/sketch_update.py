@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: batched decayed-histogram update (scatter-add).
+
+The observe half of the paper's loop, on device: a `DeviceSizeSketch`
+keeps a dense per-bucket weight vector resident in accelerator memory;
+this kernel ingests one whole batch of bucketed sizes per launch —
+decaying the existing state by the batch's total decay and scatter-adding
+the (already per-item-decayed) batch weights — so a serving step can feed
+thousands of observed sizes without a single device→host transfer.
+
+TPU mapping: scatter is hostile to the VPU, so the add is expressed as a
+compare/accumulate sweep — the same idiom as `waste_eval`. We tile
+(BINS, N) into (BLOCK_BINS, BLOCK_N) pieces; each grid step holds one
+(1, BLOCK_BINS) slice of the state/output and one (1, BLOCK_N) slice of
+the batch, builds the `bucket_id == batch_index` hit mask with a
+broadcasted iota, and accumulates `sum_i w_i * hit(i, b)` into the
+revisited output block across the inner batch grid dimension (TPU grids
+run sequentially, so `+=` into the output block is the standard
+reduction idiom). The decay multiply of the carried state happens once,
+at the first batch block.
+
+VMEM at defaults (BLOCK_BINS=512, BLOCK_N=128): hit mask
+128*512*4 = 256 KiB of temporaries, state/batch slices a few KiB —
+comfortably inside the budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_BINS = 512
+BLOCK_N = 128
+
+
+def _sketch_update_kernel(state_ref, decay_ref, idx_ref, w_ref, out_ref):
+    n_idx = pl.program_id(1)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        # One decay step per observed item: the whole batch's decay is
+        # folded into a single multiply of the carried state.
+        out_ref[...] = state_ref[...] * decay_ref[0, 0]
+
+    bins = out_ref.shape[1]
+    first = pl.program_id(0) * bins
+    bucket = first + jax.lax.broadcasted_iota(jnp.int32, (1, bins), 1)
+    idx = idx_ref[0, :]                     # (BLOCK_N,) bucket ids, -1 = pad
+    w = w_ref[0, :]                         # (BLOCK_N,) decayed item weights
+    hits = idx[:, None] == bucket           # (BLOCK_N, BLOCK_BINS)
+    out_ref[...] += jnp.sum(jnp.where(hits, w[:, None], 0.0),
+                            axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sketch_update_pallas(state, bucket_idx, weights, decay_total, *,
+                         interpret: bool = False) -> jnp.ndarray:
+    """(BINS,) f32 state x (N,) int32 bucket ids x (N,) f32 weights
+    -> (BINS,) f32 new state.
+
+    ``new[b] = state[b] * decay_total + sum_{i: idx_i == b} w_i``.
+    Callers fold the within-batch decay schedule into ``weights``
+    (item i of an n-item batch carries ``decay ** (n-1-i)``) and pass
+    ``decay_total = decay ** n``, which makes the launch bit-equivalent
+    to n sequential host observations. Pads BINS to BLOCK_BINS and N to
+    BLOCK_N (padding gets bucket id -1, which no bucket matches).
+    """
+    state = state.astype(jnp.float32)
+    bucket_idx = bucket_idx.astype(jnp.int32)
+    weights = weights.astype(jnp.float32)
+    bins = state.shape[0]
+    n = bucket_idx.shape[0]
+
+    bins_pad = (-bins) % BLOCK_BINS
+    n_pad = (-n) % BLOCK_N
+    if bins_pad:
+        state = jnp.pad(state, (0, bins_pad))
+    if n_pad:
+        bucket_idx = jnp.pad(bucket_idx, (0, n_pad), constant_values=-1)
+        weights = jnp.pad(weights, (0, n_pad))
+    bp, np_ = bins + bins_pad, n + n_pad
+
+    grid = (bp // BLOCK_BINS, np_ // BLOCK_N)
+    out = pl.pallas_call(
+        _sketch_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_BINS), lambda i, j: (0, i)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, BLOCK_N), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_BINS), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, bp), jnp.float32),
+        interpret=interpret,
+    )(state[None, :],
+      jnp.asarray(decay_total, dtype=jnp.float32).reshape(1, 1),
+      bucket_idx[None, :], weights[None, :])
+    return out[0, :bins]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sketch_update_ref(state, bucket_idx, weights, decay_total) -> jnp.ndarray:
+    """Pure-jnp oracle (and CPU fallback) for ``sketch_update_pallas``."""
+    state = state.astype(jnp.float32)
+    decayed = state * jnp.asarray(decay_total, dtype=jnp.float32)
+    valid = (bucket_idx >= 0) & (bucket_idx < state.shape[0])
+    idx = jnp.where(valid, bucket_idx, 0).astype(jnp.int32)
+    w = jnp.where(valid, weights.astype(jnp.float32), 0.0)
+    return decayed.at[idx].add(w)

@@ -50,8 +50,12 @@ def _waste_eval_kernel(chunks_ref, support_ref, freqs_ref, out_ref, *,
         ck = c[:, kk:kk + 1]                       # (BLOCK_B, 1)
         assigned = jnp.minimum(assigned,
                                jnp.where(ck >= s[None, :], ck, jnp.inf))
+    # Uncovered sizes are charged whole pages: ceil(s / page) pages (at
+    # least one), never a negative amount when s > page_size.
+    pages = jnp.maximum(jnp.ceil(s / jnp.float32(page_size)), 1.0)
+    uncovered = pages[None, :] * jnp.float32(page_size) - s[None, :]
     waste = jnp.where(jnp.isfinite(assigned), assigned - s[None, :],
-                      jnp.float32(page_size) - s[None, :])
+                      uncovered)
     out_ref[...] += jnp.sum(waste * f[None, :], axis=1, keepdims=True)
 
 

@@ -128,7 +128,9 @@ class KVSlabPool:
     def __init__(self, pool_tokens: int, chunk_classes, *,
                  align: int = ALIGN,
                  controller_config: Optional[ControllerConfig] = None,
-                 eviction_policy: Optional[EvictionPolicy] = None):
+                 eviction_policy: Optional[EvictionPolicy] = None,
+                 device_observe: bool = False,
+                 batch_observe: Optional[bool] = None):
         self.pool_tokens = int(pool_tokens)
         self.align = align
         self.set_classes(chunk_classes)
@@ -150,6 +152,28 @@ class KVSlabPool:
             controller_config = ControllerConfig(
                 page_size=1 << 22, min_chunk=align, align=align,
                 half_life=float("inf"))
+        if device_observe and not controller_config.device:
+            # Device-resident observe: the sketch lives in HBM on a
+            # bucket grid of ALIGN tokens. The grid must cover every
+            # ALLOCATABLE length — refits may grow the top class well
+            # past the initial schedule, and a length beyond the pool's
+            # own capacity can never be stored anyway, so pool_tokens is
+            # the natural ceiling. Huge pools widen the grid (keeping
+            # coverage, coarsening resolution) rather than silently
+            # clamping allocatable lengths into the top bucket.
+            width = align
+            buckets = max(64, -(-self.pool_tokens // width))
+            while buckets > (1 << 17):
+                width *= 2
+                buckets = -(-self.pool_tokens // width)
+            controller_config = dataclasses.replace(
+                controller_config, device=True,
+                device_bucket_width=width, device_buckets=int(buckets))
+        # Batched observation (the device path's natural feeding mode):
+        # per-alloc observes are skipped and the serving loop hands whole
+        # batches of lengths to observe_lengths() instead.
+        self.batch_observe = (bool(controller_config.device)
+                              if batch_observe is None else batch_observe)
         self.controller = SlabController(self.chunk_classes,
                                          config=controller_config)
 
@@ -222,7 +246,8 @@ class KVSlabPool:
         if request_id in self._retained:    # id reuse while a stale
             self._drop_retained(request_id)   # retained chunk exists
         al = self.align
-        self.controller.observe((int(length) + al - 1) // al * al)
+        if not self.batch_observe:
+            self.controller.observe((int(length) + al - 1) // al * al)
         chunk = self.class_for(length)
         if chunk is None:
             self.n_failed += 1
@@ -387,6 +412,18 @@ class KVSlabPool:
         return a.start
 
     # -- learning -------------------------------------------------------------
+    def observe_lengths(self, lengths) -> None:
+        """Feed one batch of request KV lengths into the controller's
+        sketch (the ``batch_observe`` feeding mode). ``lengths`` may be
+        a host array or a device array straight out of a serve step —
+        on the device path the ALIGN quantization, bucketing, and the
+        decayed-histogram update all run on device in one
+        ``sketch_update`` launch, with no host round-trip."""
+        if not hasattr(lengths, "astype"):   # plain python list/tuple
+            lengths = np.asarray(lengths)
+        al = self.align
+        self.controller.observe_many((lengths + (al - 1)) // al * al)
+
     def refit(self, k: Optional[int] = None, *, method: str = "dp",
               policy: Optional[SlabPolicy] = None) -> np.ndarray:
         """Re-learn chunk classes from observed lengths (paper's loop),

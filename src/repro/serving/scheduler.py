@@ -84,9 +84,13 @@ class ContinuousBatcher:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def _try_admit(self) -> None:
+    def _try_admit(self, observed: List[int]) -> None:
         while self.queue and len(self.active) < self.max_batch:
             req = self.queue[0]
+            # observed BEFORE the attempt, success or not: the per-alloc
+            # path feeds the sketch before its failure exits too, and
+            # uncoverable lengths are exactly what a refit must learn
+            observed.append(req.kv_len)
             # reserve capacity for the whole expected context
             a = self.pool.alloc(req.rid, req.kv_len, tenant=self.tenant)
             if a is None:
@@ -97,19 +101,26 @@ class ContinuousBatcher:
             self.active[req.rid] = req
 
     def step(self, t: int) -> None:
-        self._try_admit()
+        # In batch-observe mode (the pool's device-sketch path) alloc()
+        # does not observe per item; the sizes of this step's allocations
+        # are collected and handed to the controller as ONE batch below —
+        # the serve-step outputs feed the device sketch directly.
+        observed: List[int] = []
+        self._try_admit(observed)
         done: List[int] = []
         for rid, req in self.active.items():
             req.decoded += 1
             old = self.pool.allocation(rid)
             new = self.pool.extend(rid, req.kv_len)
             if new is None:          # pool full mid-flight: drop request
+                observed.append(req.kv_len)   # the attempt still counts
                 done.append(rid)
                 self.rejected += 1
                 continue
             if new.start != old.start:   # class overflow -> chunk copy
                 self.realloc_copies += 1
                 self.realloc_tokens += old.length
+                observed.append(req.kv_len)
             if req.decoded >= req.output_len:
                 done.append(rid)
                 self.completed += 1
@@ -117,6 +128,8 @@ class ContinuousBatcher:
             if rid in self.pool._live:
                 self.pool.free(rid)
             del self.active[rid]
+        if self.pool.batch_observe and observed:
+            self.pool.observe_lengths(np.asarray(observed, dtype=np.int64))
         if self.adaptive:
             decision = self.pool.maybe_refit()
             if decision is not None:

@@ -1,0 +1,116 @@
+"""Regression tests for the uncovered-size charging rule.
+
+Items larger than ``page_size`` used to be charged ``page_size - s`` —
+a NEGATIVE amount, so a schedule covering nothing scored better than one
+covering everything. The rule is now ``ceil(s/page) * page - s`` (whole
+pages, never negative), identically in the numpy oracle, the jnp
+objective, and the Pallas kernel.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (PAGE_SIZE, per_class_waste_exact, size_histogram,
+                        utilization_exact, waste_batch_jax, waste_exact,
+                        waste_jax)
+from repro.core.waste import uncovered_charge
+from repro.kernels.ops import waste_eval
+from repro.kernels.ref import waste_eval_ref
+
+PAGE = 4096
+
+
+def test_uncovered_charge_never_negative():
+    support = np.array([1, PAGE - 1, PAGE, PAGE + 1, 3 * PAGE, 10 * PAGE + 7])
+    charge = uncovered_charge(support, page_size=PAGE)
+    assert (charge >= 0).all()
+    # below one page: the classic full-page charge, unchanged
+    assert charge[0] == PAGE - 1
+    assert charge[1] == 1
+    assert charge[2] == 0                 # exactly one page
+    assert charge[3] == PAGE - 1          # two pages for page+1 bytes
+    assert charge[4] == 0
+    assert charge[5] == PAGE - 7
+
+
+def test_covering_schedule_beats_uncovering_for_giant_items():
+    """The regression: with items > page_size, an empty-coverage
+    schedule must NOT outscore one that covers everything."""
+    support = np.array([2 * PAGE + 100])
+    freqs = np.array([10])
+    covering = waste_exact([2 * PAGE + 128], support, freqs, page_size=PAGE)
+    uncovering = waste_exact([64], support, freqs, page_size=PAGE)
+    assert uncovering >= 0
+    assert covering < uncovering + 10 * (2 * PAGE + 100)  # sanity
+    assert covering == 10 * 28
+    assert uncovering == 10 * (3 * PAGE - (2 * PAGE + 100))
+
+
+def test_host_kernel_agreement_straddling_page_size():
+    """Sizes straddling PAGE_SIZE: numpy oracle == jnp objective ==
+    Pallas kernel == jnp kernel oracle, for covering and non-covering
+    schedules alike."""
+    sizes = np.array([PAGE - 1, PAGE, PAGE + 1, 2 * PAGE - 5, 2 * PAGE,
+                      2 * PAGE + 3, 5 * PAGE + 11] * 3)
+    support, freqs = size_histogram(sizes)
+    batch = np.array([
+        [64, 128, 256, 512],                       # covers nothing
+        [PAGE, 2 * PAGE, 4 * PAGE, 8 * PAGE],      # covers most
+        [6 * PAGE, 6 * PAGE, 6 * PAGE, 6 * PAGE],  # covers everything
+    ], dtype=np.int32)
+    got_kernel = np.asarray(waste_eval(batch, support.astype(np.int32),
+                                       freqs.astype(np.float32),
+                                       page_size=PAGE))
+    got_ref = np.asarray(waste_eval_ref(
+        jnp.asarray(batch), jnp.asarray(support, dtype=jnp.int32),
+        jnp.asarray(freqs, dtype=jnp.float32), page_size=PAGE))
+    got_batch = np.asarray(waste_batch_jax(
+        jnp.asarray(batch), jnp.asarray(support, dtype=jnp.int32),
+        jnp.asarray(freqs, dtype=jnp.float32), page_size=PAGE))
+    for i in range(batch.shape[0]):
+        want = waste_exact(batch[i], support, freqs, page_size=PAGE)
+        assert got_kernel[i] == want
+        assert got_ref[i] == want
+        assert got_batch[i] == want
+        assert float(waste_jax(jnp.asarray(batch[i]),
+                               jnp.asarray(support, dtype=jnp.int32),
+                               jnp.asarray(freqs, dtype=jnp.float32),
+                               page_size=PAGE)) == want
+    assert (got_kernel >= 0).all()
+
+
+def test_per_class_waste_uses_page_charge():
+    support = np.array([3 * PAGE + 1])
+    freqs = np.array([2])
+    per = per_class_waste_exact([128], support, freqs, page_size=PAGE)
+    assert per[-1] == 2 * (4 * PAGE - (3 * PAGE + 1))
+    assert per.sum() == waste_exact([128], support, freqs, page_size=PAGE)
+
+
+def test_utilization_charges_whole_pages_for_unstorable():
+    # an unstorable item holds no bytes (it is not stored) but charges
+    # ceil(s/page) whole pages of allocation, not a single page
+    support = np.array([100, 2 * PAGE + 2])
+    freqs = np.array([1, 1])
+    assert utilization_exact([128], support, freqs, page_size=PAGE) \
+        == pytest.approx(100 / (128 + 3 * PAGE))
+
+
+def test_classic_sub_page_behaviour_unchanged():
+    support, freqs = np.array([100]), np.array([2])
+    assert waste_exact([50], support, freqs) == 2 * (PAGE_SIZE - 100)
+
+
+def test_bench_charge_waste_mirrors_oracle():
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent
+                           / "benchmarks"))
+    from adaptive_bench import charge_waste
+    for s in (10, PAGE - 1, PAGE, PAGE + 1, 4 * PAGE + 9):
+        chunks = np.array([64, 512])
+        want = waste_exact(chunks, np.array([s]), np.array([1]),
+                           page_size=PAGE)
+        assert charge_waste(chunks, s, PAGE) == want
+        assert charge_waste(chunks, s, PAGE) >= 0
