@@ -316,6 +316,7 @@ def main(n_items: int = 120_000) -> Dict:
 
 
 if __name__ == "__main__":
+    from bench_io import write_bench_json
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--policy", choices=POLICIES + ("all",), default=None,
                     help="run the eviction-policy axis instead of the "
@@ -323,6 +324,9 @@ if __name__ == "__main__":
     ap.add_argument("--device-observe", action="store_true",
                     help="host vs device observe path: same refit "
                          "decisions, host syncs counted per refit window")
+    ap.add_argument("--forecast", action="store_true",
+                    help="reactive vs predictive refits on the diurnal "
+                         "workload (forecast_bench's controller axis)")
     ap.add_argument("--n-items", type=int, default=120_000)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke size (covers both axes)")
@@ -330,7 +334,18 @@ if __name__ == "__main__":
     if args.device_observe:
         from observe_bench import sync_axis
         n = min(args.n_items, 20_000) if args.quick else args.n_items
-        print(json.dumps(sync_axis(n), indent=2))
+        out = sync_axis(n)
+        # axis-specific artifact: never clobber the headline
+        # mode-comparison trajectory with a different schema
+        write_bench_json("adaptive_sync", out)
+        print(json.dumps(out, indent=2))
+        raise SystemExit(0)
+    if args.forecast:
+        from forecast_bench import controller_axis
+        n = min(args.n_items, 24_000) if args.quick else args.n_items
+        out = controller_axis(n)
+        write_bench_json("adaptive_forecast", out)
+        print(json.dumps(out, indent=2))
         raise SystemExit(0)
     if args.quick:
         n = min(args.n_items, 6000)
@@ -342,11 +357,11 @@ if __name__ == "__main__":
                                    round(r["cum_waste_frac"], 4),
                                    "n_refits": r["n_refits"]}
                                for p, r in policy_axis(n).items()}}
-        print(json.dumps(out, indent=2))
     elif args.policy is not None:
         policies = POLICIES if args.policy == "all" else tuple(
             dict.fromkeys(("coldest", args.policy)))
-        print(json.dumps(policy_axis(args.n_items, policies=policies),
-                         indent=2))
+        out = policy_axis(args.n_items, policies=policies)
     else:
-        print(json.dumps(main(args.n_items), indent=2))
+        out = main(args.n_items)
+    write_bench_json("adaptive", out)
+    print(json.dumps(out, indent=2))

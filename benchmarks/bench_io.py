@@ -1,0 +1,32 @@
+"""Benchmark-output persistence.
+
+Every top-level bench run writes its JSON payload to
+``BENCH_<name>.json`` at the repo root (in addition to stdout), so the
+trajectory of headline numbers accumulates run over run instead of
+scrolling away — the CI bench-smoke job uploads these files as
+artifacts. Pass ``path`` to redirect, or delete the file freely: it is
+an artifact, not a source file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Optional
+
+
+def repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_bench_json(name: str, payload, *,
+                     path: Optional[str] = None) -> str:
+    """Write ``payload`` as ``BENCH_<name>.json`` at the repo root;
+    returns the path (also echoed to stderr so stdout stays valid
+    JSON for piping)."""
+    out = path or os.path.join(repo_root(), f"BENCH_{name}.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+        f.write("\n")
+    print(f"[bench] wrote {out}", file=sys.stderr)
+    return out

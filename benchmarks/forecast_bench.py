@@ -1,0 +1,337 @@
+"""Benchmark: reactive vs forecast-driven adaptation.
+
+Three axes, one question each — what does the shared
+``DemandForecaster`` (``repro.core.forecast``) buy over the purely
+reactive loop the paper describes?
+
+* **controller** — diurnal traffic (periodic mixture of two paper
+  operating points) through the adaptive controller, reactive vs
+  ``ControllerConfig(forecast=...)``. Measured where reactivity hurts:
+  ``peak_onset_waste_frac`` (insert-charged waste inside the ramp
+  quarter-period before each peak — the window a reactive refit has
+  not happened yet) and ``refit_lead_items`` (how far before the peak
+  the schedule move landed; bigger = pre-positioned).
+* **arbiter** — out-of-phase multi-tenant op streams through the
+  ``TenantArbiter``, reactive vs forecast-aware donor selection.
+  Measured as hole fraction plus ``n_bounced``: approved transfers
+  whose recipient had itself donated within ``bounce_window`` ops —
+  the take-a-page-from-a-tenant-about-to-surge loop the forecast
+  surcharge exists to break.
+* **kv_quota** — two serving streams with out-of-phase bursts over one
+  ``KVSlabPool``, static token quotas vs arbiter-managed quotas
+  (``repro.serving.token_quota_arbiter``). Measured as rejected
+  requests per stream and the quota trajectory.
+
+``python benchmarks/forecast_bench.py`` emits JSON (and writes
+``BENCH_forecast.json`` at the repo root); ``--quick`` is the CI smoke
+size.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+try:
+    from adaptive_bench import K, WARMUP_FRAC, charge_waste
+    from bench_io import write_bench_json
+except ImportError:                      # imported as benchmarks.<name>
+    from benchmarks.adaptive_bench import K, WARMUP_FRAC, charge_waste
+    from benchmarks.bench_io import write_bench_json
+
+from repro.core import (PAGE_SIZE, ControllerConfig, DemandForecaster,
+                        SlabController, SlabPolicy,
+                        schedule_with_default_tail, size_histogram)
+from repro.core.distribution import PAPER_WORKLOADS
+from repro.memcached import (SlabAllocator, diurnal_multimodal_traffic,
+                             multitenant_phased_ops)
+
+
+# ---------------------------------------------------------------------------
+# controller axis: diurnal multi-modal traffic, reactive vs predictive
+# ---------------------------------------------------------------------------
+
+CTRL_PAGE = 1 << 16     # 64 KiB pages: the policy axes' cache quantum
+K_SCARCE = 4            # fewer classes than the union of day+night modes
+# Two multi-modal phases built from the paper's operating points: the
+# night set and the day set each need ~3 tight classes of their own, so
+# under K_SCARCE the optimal schedule genuinely TRACKS the phase — the
+# regime where pre-positioning pays (a unimodal diurnal mix is covered
+# once by any 6-class fit and never needs a second refit).
+NIGHT_MODES = ((1.0, 518.0, 12.0), (0.8, 1210.0, 20.0), (0.5, 4133.0, 40.0))
+DAY_MODES = ((1.0, 810.0, 16.0), (0.8, 2109.0, 25.0), (0.5, 8131.0, 60.0))
+
+
+def _controller(chunks, n_items: int, cadence: int, forecast,
+                horizon: int) -> SlabController:
+    return SlabController(chunks, config=ControllerConfig(
+        k=K_SCARCE, page_size=CTRL_PAGE, check_every=cadence,
+        half_life=2.0 * cadence,
+        # a production threshold: small mixture wobbles never trigger —
+        # which is exactly the window where only the forecast can see
+        # the daily peak coming
+        drift_threshold=0.4, min_items_between_refits=2 * cadence,
+        min_rel_improvement=0.02, amortization_windows=8.0,
+        cost_weight=0.1, forecast=forecast, forecast_horizon=horizon,
+        forecast_min_confidence=0.3))
+
+
+def drive_diurnal(sizes: np.ndarray, period: int, chunks, *,
+                  controller: Optional[SlabController] = None,
+                  page_size: int = CTRL_PAGE,
+                  mem_pages: Optional[int] = None) -> Dict:
+    """Replay ``sizes`` through a memory-LIMITED allocator (a real cache
+    holds a bounded working set — an unbounded one would price every
+    migration at the whole stream's payload and veto everything),
+    charging waste per insert against the schedule active at that
+    moment and bucketing the charges by phase of the diurnal period so
+    the onset windows are separable afterwards."""
+    mem_pages = mem_pages or max(12, len(sizes) // 1200)
+    alloc = SlabAllocator(chunks, page_size=page_size,
+                          mem_limit=mem_pages * page_size)
+    csizes = alloc.chunk_sizes
+    n = len(sizes)
+    onset_waste = onset_bytes = 0      # ramp quarter before each peak
+    cum_waste = cum_bytes = 0
+    refit_items: List[int] = []
+    predictive_refits = 0
+    for i, s in enumerate(np.asarray(sizes).tolist()):
+        s = int(s)
+        w = charge_waste(csizes, s, page_size)
+        cum_waste += w
+        cum_bytes += s
+        phase = i % period
+        if period // 4 <= phase < period // 2:   # rising into the peak
+            onset_waste += w
+            onset_bytes += s
+        alloc.set(str(i), s)
+        if controller is None:
+            continue
+        controller.observe(s)
+        decision = controller.maybe_refit(
+            cost_bytes_fn=lambda c: alloc.migration_cost_bytes(
+                schedule_with_default_tail(c, page_size=page_size)))
+        if decision is not None and decision.approved:
+            deployed = schedule_with_default_tail(decision.chunks,
+                                                  page_size=page_size)
+            alloc.reconfigure(deployed)
+            controller.set_chunks(deployed)
+            csizes = alloc.chunk_sizes
+            refit_items.append(i)
+            if decision.predictive:
+                predictive_refits += 1
+    # where in the phase did refits land? The diurnal cycle has two
+    # transitions per period (into the day peak at period/2, into the
+    # night trough at period): lead = items left until the next
+    # transition, and a refit inside the RAMP quarter before the day
+    # peak (phase in [period/4, period/2)) is a pre-positioned one —
+    # the reactive failure mode is landing just AFTER the peak instead
+    half = period // 2
+    leads = [half - (i % half) for i in refit_items]
+    pre_peak = sum(1 for i in refit_items
+                   if period // 4 <= i % period < period // 2)
+    post_peak = sum(1 for i in refit_items
+                    if period // 2 <= i % period < 3 * period // 4)
+    return {
+        "cum_waste_frac": cum_waste / max(cum_bytes, 1),
+        "peak_onset_waste_frac": onset_waste / max(onset_bytes, 1),
+        "n_refits": len(refit_items),
+        "n_predictive_refits": predictive_refits,
+        "refit_items": refit_items,
+        "n_pre_peak_refits": pre_peak,
+        "n_post_peak_refits": post_peak,
+        "mean_refit_lead_items": (float(np.mean(leads)) if leads else 0.0),
+        "n_items": n,
+    }
+
+
+def controller_axis(n_items: int, *, period: Optional[int] = None,
+                    seed: int = 7) -> Dict[str, Dict]:
+    period = period or max(2000, n_items // 3)
+    sizes = diurnal_multimodal_traffic(DAY_MODES, NIGHT_MODES,
+                                       n_items=n_items, period=period,
+                                       seed=seed)
+    # fit the starting schedule on the TROUGH (the stream starts at
+    # p_day = 0): the realistic cold-start — the peak mixture is
+    # exactly what the schedule has never seen and only the forecast
+    # can anticipate
+    warmup = sizes[:max(1, period // 8)]
+    support, freqs = size_histogram(warmup)
+    fit = SlabPolicy(page_size=CTRL_PAGE).fit(support, freqs, K_SCARCE,
+                                              method="dp")
+    learned = schedule_with_default_tail(fit.chunk_sizes,
+                                         page_size=CTRL_PAGE)
+    cadence = max(400, period // 20)      # ~20 forecast windows / cycle
+    horizon = max(1, period // (4 * cadence))   # ~quarter-period of lead
+    out = {"period": period, "cadence": cadence, "horizon": horizon}
+    for mode, forecast in (("reactive", None),
+                           ("predictive", DemandForecaster())):
+        ctl = _controller(learned, n_items, cadence, forecast, horizon)
+        out[mode] = drive_diurnal(sizes, period, learned, controller=ctl)
+    out["predictive_wins_onset"] = bool(
+        out["predictive"]["peak_onset_waste_frac"]
+        < out["reactive"]["peak_onset_waste_frac"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# arbiter axis: phased tenants, reactive vs forecast-aware donors
+# ---------------------------------------------------------------------------
+
+def arbiter_axis(n_sets: int, *, n_tenants: int = 3,
+                 seed: int = 7) -> Dict[str, Dict]:
+    try:
+        import multitenant_bench as mb
+    except ImportError:
+        from benchmarks import multitenant_bench as mb
+    workloads = PAPER_WORKLOADS[:n_tenants]
+    total_pages = max(12, mb.TOTAL_PAGES * n_sets // mb.N_SETS)
+    ops = multitenant_phased_ops(workloads, n_sets=n_sets,
+                                 trough_mix=0.5, seed=seed)
+    # a tight cadence gives the forecaster enough windows per tenant
+    # phase; one window of donor lead (pages a tenant needs THAT soon
+    # are not taken from it). NOTE the honest finding this axis
+    # records: under TTL-churned phased traffic most bounced pages are
+    # EMPTY when reclaimed (quota flapping, not payload loss), so the
+    # donor surcharge moves the aggregate numbers only marginally —
+    # the forecast's decisive wins are the controller axis above and
+    # the KV quota axis below.
+    arbitrate_every = max(200, n_sets // 60)
+    out = {"arbitrate_every": arbitrate_every, "horizon": 1}
+    for mode, forecast in (("reactive", None),
+                           ("forecast", DemandForecaster())):
+        r = mb.drive(ops, n_tenants, "arbitrated",
+                     total_pages=total_pages,
+                     arbitrate_every=arbitrate_every, forecast=forecast,
+                     forecast_horizon=1)
+        out[mode] = {k: r[k] for k in
+                     ("mean_hole_frac", "evicted_bytes", "n_transfers",
+                      "n_bounced", "n_page_denials")}
+    out["fewer_bounces"] = bool(out["forecast"]["n_bounced"]
+                                <= out["reactive"]["n_bounced"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kv_quota axis: phased serving streams, static vs arbitrated quotas
+# ---------------------------------------------------------------------------
+
+def kv_quota_axis(steps: int, *, seed: int = 0) -> Dict[str, Dict]:
+    from repro.serving import (ContinuousBatcher, KVSlabPool, Request,
+                               token_quota_arbiter)
+
+    def phased_requests(rng, stream: int, n: int, period: int):
+        """Bursty arrivals: stream 0 peaks in the first half of each
+        period, stream 1 in the second half."""
+        reqs = []
+        for i in range(n):
+            phase = (i / n * period) % 1.0
+            active = phase < 0.5 if stream == 0 else phase >= 0.5
+            if not active:
+                continue
+            reqs.append((int(i / n * steps),
+                         Request(rid=stream * 10_000_000 + i,
+                                 prompt_len=int(rng.integers(400, 1200)),
+                                 output_len=int(rng.integers(8, 32)))))
+        return reqs
+
+    out = {}
+    for mode in ("static", "arbitrated"):
+        rng = np.random.default_rng(seed)
+        kv = KVSlabPool(1 << 15, [512, 1024, 2048])
+        b0 = ContinuousBatcher(kv, tenant="chat", max_batch=24,
+                               quota_tokens=(1 << 15) // 2)
+        b1 = ContinuousBatcher(kv, tenant="batch", max_batch=24,
+                               quota_tokens=(1 << 15) // 2)
+        arb = None
+        if mode == "arbitrated":
+            arb = token_quota_arbiter(kv, unit_tokens=2048,
+                                      arbitrate_every=8,
+                                      cost_weight=0.25,
+                                      forecast=DemandForecaster())
+            b0.arbiter = arb
+            b1.arbiter = None      # one tick per shared-pool step
+        arrivals = {0: phased_requests(rng, 0, 600, 3.0),
+                    1: phased_requests(rng, 1, 600, 3.0)}
+        quota_traj = []
+        for t in range(steps):
+            for stream, batcher in ((0, b0), (1, b1)):
+                while arrivals[stream] and arrivals[stream][0][0] <= t:
+                    batcher.submit(arrivals[stream].pop(0)[1])
+                batcher.step(t)
+            # finished-but-retained chunks are what the arbiter reclaims
+            for rid in list(kv._live):
+                if rid % 7 == 0 and kv._live[rid].length >= 1200:
+                    kv.finish(rid, retain=True)
+                    for b in (b0, b1):
+                        b.active.pop(rid, None)
+            if t % 10 == 0:
+                quota_traj.append({
+                    "step": t,
+                    "chat": kv._tenants["chat"].quota_tokens,
+                    "batch": kv._tenants["batch"].quota_tokens})
+        out[mode] = {
+            "rejected_chat": b0.rejected,
+            "rejected_batch": b1.rejected,
+            "rejected_total": b0.rejected + b1.rejected,
+            "completed_total": b0.completed + b1.completed,
+            "n_failed_chat": kv._tenants["chat"].n_failed,
+            "n_failed_batch": kv._tenants["batch"].n_failed,
+            "n_transfers": 0 if arb is None else arb.n_transfers,
+            "final_quota_chat": kv._tenants["chat"].quota_tokens,
+            "final_quota_batch": kv._tenants["batch"].quota_tokens,
+            "quota_trajectory": quota_traj[-6:],
+        }
+    out["quotas_moved"] = bool(out["arbitrated"]["n_transfers"] > 0)
+    return out
+
+
+def main(n_items: int, n_sets: int, steps: int) -> Dict:
+    return {
+        "controller": controller_axis(n_items),
+        "arbiter": arbiter_axis(n_sets),
+        "kv_quota": kv_quota_axis(steps),
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--n-items", type=int, default=120_000,
+                    help="controller-axis diurnal stream length")
+    ap.add_argument("--n-sets", type=int, default=20_000,
+                    help="arbiter-axis multi-tenant sets")
+    ap.add_argument("--steps", type=int, default=400,
+                    help="kv-quota-axis serving steps")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke size (all three axes)")
+    args = ap.parse_args()
+    if args.quick:
+        out = main(min(args.n_items, 24_000), min(args.n_sets, 5000),
+                   min(args.steps, 120))
+    else:
+        out = main(args.n_items, args.n_sets, args.steps)
+    write_bench_json("forecast", out)
+    print(json.dumps(out, indent=2))
+    # enforced, not just reported: CI's bench-smoke run must go red when
+    # the predictive path stops beating reactive where it is built to
+    # (cheaper peak onsets, refits landing earlier) or when the quota
+    # arbiter stops moving tokens between phased streams
+    ctrl = out["controller"]
+    if not ctrl["predictive_wins_onset"]:
+        raise SystemExit(
+            "predictive refits did not beat reactive on peak-onset waste: "
+            f"{ctrl['predictive']['peak_onset_waste_frac']:.4f} vs "
+            f"{ctrl['reactive']['peak_onset_waste_frac']:.4f}")
+    if (ctrl["predictive"]["cum_waste_frac"]
+            > ctrl["reactive"]["cum_waste_frac"]):
+        raise SystemExit("predictive path lost on cumulative waste")
+    if (ctrl["predictive"]["n_pre_peak_refits"]
+            < ctrl["reactive"]["n_pre_peak_refits"]):
+        raise SystemExit("predictive path pre-positioned fewer refits "
+                         "before the peak than reactive")
+    if not out["kv_quota"]["quotas_moved"]:
+        raise SystemExit("token-quota arbiter moved no quota under "
+                         "phased serving load")

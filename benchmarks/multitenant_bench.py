@@ -77,7 +77,9 @@ def build_arbiter(mode: str, n_tenants: int, *,
                   arbitrate_every: int = 1000,
                   policy: str = "coldest",
                   check_every: int = 2000,
-                  cost_weight: float = 0.1) -> TenantArbiter:
+                  cost_weight: float = 0.1,
+                  forecast=None,
+                  forecast_horizon: int = 1) -> TenantArbiter:
     """One shared pool + N tenants under the given memory policy.
 
     All modes run through the same ``TenantArbiter`` object so the
@@ -85,6 +87,8 @@ def build_arbiter(mode: str, n_tenants: int, *,
     reach the arbitration cadence. ``policy`` picks the per-tenant
     eviction policy (``repro.memcached.eviction``) — it changes victim
     selection AND the predicted costs the refit/transfer gates charge.
+    ``forecast`` (a ``repro.core.DemandForecaster``) turns on
+    forecast-aware donor selection; ``None`` is the reactive baseline.
     """
     pool = PagePool(total_pages, page_size=page_size)
     cfg = ControllerConfig(
@@ -99,7 +103,8 @@ def build_arbiter(mode: str, n_tenants: int, *,
         pool, controller_config=cfg,
         arbitrate_every=(arbitrate_every if mode == "arbitrated"
                          else 1 << 62),
-        amortization_windows=8.0, cost_weight=0.1)
+        amortization_windows=8.0, cost_weight=0.1, forecast=forecast,
+        forecast_horizon=forecast_horizon)
     classes = default_memcached_schedule(page_size=page_size)
     for t in range(n_tenants):
         name = f"tenant{t}"
@@ -116,7 +121,8 @@ def drive(ops, n_tenants: int, mode: str, *,
           total_pages: int = TOTAL_PAGES, page_size: int = PAGE_SIZE,
           sample_every: int = 250, policy: str = "coldest",
           check_every: int = 2000, cost_weight: float = 0.1,
-          liveness_window: int = 0) -> Dict:
+          liveness_window: int = 0, arbitrate_every: int = 1000,
+          forecast=None, forecast_horizon: int = 1) -> Dict:
     """Replay one multi-tenant op stream under ``mode``. Gets are
     read-through: a miss is refilled with a set of the key's payload —
     the loop that makes a wrongly-chosen eviction victim cost bytes.
@@ -129,7 +135,9 @@ def drive(ops, n_tenants: int, mode: str, *,
     measure is still reported as ``mean_raw_hole_frac``."""
     arb = build_arbiter(mode, n_tenants, total_pages=total_pages,
                         page_size=page_size, policy=policy,
-                        check_every=check_every, cost_weight=cost_weight)
+                        check_every=check_every, cost_weight=cost_weight,
+                        arbitrate_every=arbitrate_every, forecast=forecast,
+                        forecast_horizon=forecast_horizon)
     pool_bytes = total_pages * page_size
     cum_holes = 0
     raw_hole_fracs: List[float] = []
@@ -168,6 +176,7 @@ def drive(ops, n_tenants: int, mode: str, *,
         "n_page_denials": sum(v["n_page_denials"]
                               for v in per_tenant.values()),
         "n_transfers": arb.n_transfers,
+        "n_bounced": arb.n_bounced,
         "n_refits": sum(v["n_refits"] for v in per_tenant.values()),
         "mean_raw_hole_frac": (sum(raw_hole_fracs)
                                / max(len(raw_hole_fracs), 1)),
@@ -284,6 +293,7 @@ def policy_main(n_ops: int, policy: str, traffic: str) -> Dict:
 
 
 if __name__ == "__main__":
+    from bench_io import write_bench_json
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--policy", choices=POLICIES + ("all",), default=None,
                     help="run the eviction-policy axis (vs the coldest "
@@ -291,18 +301,30 @@ if __name__ == "__main__":
     ap.add_argument("--traffic", default="zipfian_rereference",
                     choices=("zipfian_rereference", "phased"),
                     help="op stream for the policy axis")
+    ap.add_argument("--forecast", action="store_true",
+                    help="reactive vs forecast-aware donor selection "
+                         "(forecast_bench's arbiter axis)")
     ap.add_argument("--n-sets", type=int, default=N_SETS)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke size (covers both axes)")
     args = ap.parse_args()
+    if args.forecast:
+        from forecast_bench import arbiter_axis
+        n = min(args.n_sets, 5000) if args.quick else args.n_sets
+        out = arbiter_axis(n)
+        # axis-specific artifact: never clobber the headline
+        # mode-comparison trajectory with a different schema
+        write_bench_json("multitenant_forecast", out)
+        print(json.dumps(out, indent=2, default=str))
+        raise SystemExit(0)
     if args.quick:
         n = min(args.n_sets, 4000)
         out = {"modes": main(n)["modes"],
                "policy_axis": policy_main(n, "ranked",
                                           args.traffic)["summary"]}
-        print(json.dumps(out, indent=2, default=str))
     elif args.policy is not None:
-        print(json.dumps(policy_main(args.n_sets, args.policy,
-                                     args.traffic), indent=2))
+        out = policy_main(args.n_sets, args.policy, args.traffic)
     else:
-        print(json.dumps(main(args.n_sets), indent=2))
+        out = main(args.n_sets)
+    write_bench_json("multitenant", out)
+    print(json.dumps(out, indent=2, default=str))

@@ -123,10 +123,13 @@ def main(n_items: int) -> Dict:
 
 
 if __name__ == "__main__":
+    from bench_io import write_bench_json
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--n-items", type=int, default=200_000)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke size")
     args = ap.parse_args()
     n = min(args.n_items, 20_000) if args.quick else args.n_items
-    print(json.dumps(main(n), indent=2))
+    out = main(n)
+    write_bench_json("observe", out)
+    print(json.dumps(out, indent=2))

@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python examples/adaptive_slab.py [--fast]
 
+(``--seed`` re-rolls the traffic; ``--fast`` shrinks the stream.)
+
 Streams item sizes that jump between two of the paper's operating points
 mid-run (Table 1 -> Table 3), through a live memcached-style allocator:
 
@@ -18,7 +20,7 @@ mid-run (Table 1 -> Table 3), through a live memcached-style allocator:
 Prints the drift checks as they happen and the final three-way waste
 comparison (stock default vs frozen learned schedule vs adaptive).
 """
-import sys
+import argparse
 
 import numpy as np
 
@@ -63,9 +65,14 @@ def replay(sizes, chunks, controller=None):
 
 
 def main():
-    n = 40_000 if "--fast" in sys.argv else 200_000
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--seed", type=int, default=7,
+                    help="traffic RNG seed (default 7)")
+    args = ap.parse_args()
+    n = 40_000 if args.fast else 200_000
     a, b = PAPER_WORKLOADS[0], PAPER_WORKLOADS[2]
-    sizes = phase_shift_traffic(a, b, n_items=n, seed=7)
+    sizes = phase_shift_traffic(a, b, n_items=n, seed=args.seed)
     print(f"traffic: {n:,} items, mu={a.mu:.0f} -> mu={b.mu:.0f} "
           f"at item {n // 2:,}\n")
 

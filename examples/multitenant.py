@@ -24,6 +24,7 @@ TenantArbiter adds the cross-tenant layer:
 Prints each approved transfer as it happens, then compares final memory
 holes under static partitioning / pooled free-for-all / arbitration.
 """
+import argparse
 import os
 import sys
 
@@ -53,13 +54,18 @@ def narrated_run(ops, n_tenants, total_pages):
 
 
 def main() -> None:
-    n_sets = 10_000 if "--fast" in sys.argv[1:] else 30_000
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--seed", type=int, default=7,
+                    help="op-stream RNG seed (default 7)")
+    args = ap.parse_args()
+    n_sets = 10_000 if args.fast else 30_000
     # the live working set scales with the stream (TTL ~ period/3), so
     # scale the pool down with --fast to keep tenants contending
     total_pages = max(12, mb.TOTAL_PAGES * n_sets // 30_000)
     workloads = PAPER_WORKLOADS[:3]
     ops = multitenant_phased_ops(workloads, n_sets=n_sets,
-                                 trough_mix=0.5, seed=7)
+                                 trough_mix=0.5, seed=args.seed)
     print(f"{len(ops):,} ops, 3 tenants out of phase, "
           f"{total_pages} x {mb.PAGE_SIZE // 1024} KiB shared pages\n")
     print("arbitrated run (transfers as they happen):")

@@ -1,6 +1,6 @@
 """Serve a small model with batched requests over the learned slab pool.
 
-    PYTHONPATH=src python examples/serve_kv_slab.py
+    PYTHONPATH=src python examples/serve_kv_slab.py [--seed N]
 
 1. Simulates request traffic through the continuous batcher twice —
    pow2 chunk classes vs classes learned from the traffic — and prints
@@ -10,6 +10,7 @@
    slab-pool Pallas kernel (interpret mode on CPU), and cross-checks
    the outputs against the dense-cache decode path.
 """
+import argparse
 import copy
 
 import jax
@@ -24,8 +25,8 @@ from repro.serving import (ContinuousBatcher, KVSlabPool,
                            lognormal_request_workload, quantize_lengths)
 
 
-def fragmentation_study():
-    rng = np.random.default_rng(0)
+def fragmentation_study(seed: int = 0):
+    rng = np.random.default_rng(seed)
     workload = lognormal_request_workload(rng, 400)
     final = quantize_lengths([r.prompt_len + r.output_len
                               for r in workload])
@@ -44,7 +45,7 @@ def fragmentation_study():
               f"completed={res.completed} copies={res.realloc_copies}")
 
 
-def kernel_decode_demo():
+def kernel_decode_demo(seed: int = 0):
     cfg, model = get_model("deepseek-7b", reduced=True)
     params = model.init(jax.random.PRNGKey(0))
     hkv, hd = cfg.n_kv_heads, cfg.head_dim
@@ -58,7 +59,7 @@ def kernel_decode_demo():
     print(f"\nslab pool: starts={starts.tolist()} lens={lens_arr.tolist()} "
           f"chunks={[pool.allocation(r).chunk for r in (0, 1)]}")
 
-    rng = np.random.default_rng(1)
+    rng = np.random.default_rng(seed + 1)
     k_pool = jnp.asarray(rng.normal(size=(4096, hkv, hd)), jnp.float32)
     v_pool = jnp.asarray(rng.normal(size=(4096, hkv, hd)), jnp.float32)
     q = jnp.asarray(rng.normal(size=(2, cfg.n_heads, hd)), jnp.float32)
@@ -76,5 +77,9 @@ def kernel_decode_demo():
 
 
 if __name__ == "__main__":
-    fragmentation_study()
-    kernel_decode_demo()
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--seed", type=int, default=0,
+                    help="request-traffic / pool-content RNG seed")
+    args = ap.parse_args()
+    fragmentation_study(args.seed)
+    kernel_decode_demo(args.seed)

@@ -8,8 +8,10 @@ Public surface:
     anneal       — simulated-annealing variant
     slab_policy  — SlabPolicy / SlabSchedule, the composable API
     observe      — streaming decayed size sketch + drift distances
+    forecast     — DemandForecaster / Reactive, the predictive seam
     controller   — SlabController, the online observe→detect→refit loop
-    arbiter      — PagePool + TenantArbiter, cross-tenant page arbitration
+    arbiter      — ResourcePool/PagePool + TenantArbiter, cross-tenant
+                   resource arbitration (pages, KV token quotas)
 """
 from repro.core.distribution import (PAGE_SIZE, PAPER_N_ITEMS,
                                      PAPER_WORKLOADS, PaperWorkload,
@@ -31,12 +33,21 @@ from repro.core.waste import (default_waste_fraction, per_class_waste_exact,
                               uncovered_charge, utilization_exact,
                               waste_batch_jax, waste_exact, waste_jax)
 from repro.core.observe import (DecayedSizeHistogram, DeviceSizeSketch,
-                                StreamingSizeSketch, histogram_distance,
+                                histogram_distance,
                                 histogram_distance_device)
+from repro.core.forecast import (DemandForecaster, Forecast, Reactive,
+                                 blend_histograms)
 from repro.core.controller import (ControllerConfig, RefitDecision,
                                    SlabController)
-from repro.core.arbiter import (PagePool, TenantArbiter, TenantPages,
-                                TransferDecision)
+from repro.core.arbiter import (PagePool, ResourcePool, TenantArbiter,
+                                TenantPages, TransferDecision)
+
+
+def __getattr__(name):
+    if name == "StreamingSizeSketch":   # deprecated alias, see observe.py
+        from repro.core import observe
+        return observe.StreamingSizeSketch
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "PAGE_SIZE", "PAPER_N_ITEMS", "PAPER_WORKLOADS", "PaperWorkload",
@@ -49,8 +60,10 @@ __all__ = [
     "default_memcached_schedule", "schedule_with_default_tail",
     "default_waste_fraction", "per_class_waste_exact", "uncovered_charge",
     "utilization_exact", "waste_batch_jax", "waste_exact", "waste_jax",
-    "DecayedSizeHistogram", "DeviceSizeSketch", "StreamingSizeSketch",
+    "DecayedSizeHistogram", "DeviceSizeSketch",
     "histogram_distance", "histogram_distance_device",
+    "DemandForecaster", "Forecast", "Reactive", "blend_histograms",
     "ControllerConfig", "RefitDecision", "SlabController",
-    "PagePool", "TenantArbiter", "TenantPages", "TransferDecision",
+    "PagePool", "ResourcePool", "TenantArbiter", "TenantPages",
+    "TransferDecision",
 ]

@@ -1,42 +1,56 @@
-"""Cross-tenant page arbitration — the Memshare-style layer above the
-per-tenant controllers.
+"""Cross-tenant resource arbitration — the Memshare-style layer above
+the per-tenant controllers.
 
 The paper learns one slab schedule from one traffic pattern; a
 production fleet serves N applications with divergent size distributions
-out of ONE physical page pool. PR 1 built the single-tenant loop
+out of ONE physical resource pool. PR 1 built the single-tenant loop
 (observe → drift → refit → reconfigure); this module adds the missing
 arbitration layer the ROADMAP names: each tenant keeps its own
 :class:`~repro.core.controller.SlabController` adapting its own
-schedule, while a global :class:`TenantArbiter` redistributes *pages*
-between tenants as their demand peaks move out of phase.
+schedule, while a global :class:`TenantArbiter` redistributes resource
+*units* between tenants as their demand peaks move out of phase.
 
 Three pieces:
 
-* :class:`PagePool` — the shared physical pool. Every page is
+* :class:`ResourcePool` — the shared physical pool, parameterized by
+  resource *kind*: memcached arbitrates 64 KiB **pages**
+  (:class:`PagePool`, ``kind="pages"``), serving arbitrates **KV token
+  quota** units (``kind="kv_tokens"``, see
+  ``repro.serving.kv_slab_pool.token_quota_arbiter``). Every unit is
   tenant-tagged; per-tenant ``quota`` (None = first-come-first-served)
-  and ``floor`` (pages an arbiter may never drain below) bound what
+  and ``floor`` (units an arbiter may never drain below) bound what
   arbitration can do. The conservation invariant —
   ``free + sum(owned) == total`` — holds after every operation and is
-  checked by :attr:`PagePool.conserved`.
+  checked by :attr:`ResourcePool.conserved`.
 * :class:`TenantArbiter` — owns the per-tenant controllers and the
   transfer loop. Every ``arbitrate_every`` operations it scores the
-  best donor → recipient page transfer with the controller's own cost
+  best donor → recipient unit transfer with the controller's own cost
   model (see below) and executes approved transfers as a quota move
-  plus a ``SlabAllocator.release_page`` on the donor (memcached
-  ``slabs reassign`` eviction semantics, across tenants instead of
-  across classes).
+  plus a ``release_page`` on the donor (memcached ``slabs reassign``
+  eviction semantics, across tenants instead of across classes).
 * :class:`TransferDecision` — one scored transfer verdict, approved or
   not, mirroring :class:`~repro.core.controller.RefitDecision`.
 
 Transfer cost model (the controller's model, applied across tenants):
-a page granted to the recipient retains up to one page of payload the
+a unit granted to the recipient retains up to one unit of payload the
 recipient is currently evicting, window after window —
-``benefit = min(pressure_bytes, page_size) * amortization_windows`` —
+``benefit = min(pressure_bytes, unit_size) * amortization_windows`` —
 while the donor pays ONCE the payload bytes resident on its cheapest
-reclaimable page, weighted by ``cost_weight`` (the same migration-byte
+reclaimable unit, weighted by ``cost_weight`` (the same migration-byte
 : waste-byte exchange rate ``ControllerConfig`` uses). A transfer is
 approved only when ``benefit > cost``, the donor stays at or above its
-floor, and total pages are conserved.
+floor, and total units are conserved.
+
+Forecast-aware donor selection (``forecast=``): with an active
+:class:`~repro.core.forecast.DemandForecaster`, each arbitration round
+records every tenant's window demand into the forecaster, and a donor
+whose forecast says its demand is about to GROW is surcharged the
+predicted growth bytes — pages are not taken from a tenant heading
+into its peak, which is exactly the reclaim-then-bounce-back loop
+Memshare's reactive arbitration suffers (counted in ``n_bounced``:
+approved transfers whose recipient donated within ``bounce_window``
+ops). ``forecast=None`` or :class:`~repro.core.forecast.Reactive`
+reproduces the reactive decisions bit-for-bit.
 """
 from __future__ import annotations
 
@@ -50,38 +64,49 @@ from repro.core.distribution import PAGE_SIZE
 
 
 # ---------------------------------------------------------------------------
-# PagePool
+# ResourcePool (PagePool is the kind="pages" instantiation)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class TenantPages:
-    """Per-tenant page-ownership record inside a :class:`PagePool`."""
+    """Per-tenant unit-ownership record inside a :class:`ResourcePool`."""
 
-    owned: int = 0               # pages currently held by this tenant
+    owned: int = 0               # units currently held by this tenant
     quota: Optional[int] = None  # max owned (None: unlimited / FCFS)
     floor: int = 0               # arbiter may never drop quota below this
     n_denied: int = 0            # acquire() refusals (pressure signal)
 
 
-class PagePool:
-    """A shared physical page pool with tenant-tagged ownership.
+class ResourcePool:
+    """A shared physical pool of same-sized units with tenant-tagged
+    ownership, parameterized by resource kind.
 
-    Pages are handed out one at a time via :meth:`acquire` and returned
+    Units are handed out one at a time via :meth:`acquire` and returned
     via :meth:`release`; the pool never forgets who holds what, so the
-    conservation invariant ``free_pages + sum(owned) == total_pages``
+    conservation invariant ``free_units + sum(owned) == total_units``
     is maintained by construction and exposed as :attr:`conserved`.
 
     ``quota`` caps what a tenant may hold (``None`` disables the cap —
     the pooled, first-come-first-served baseline); ``floor`` is the
-    starvation guard honoured by :meth:`move_quota`.
+    starvation guard honoured by :meth:`move_quota`. ``unit_size`` is
+    the physical size of one unit in the kind's own currency (bytes for
+    pages, tokens for KV quota) — every pressure/benefit/cost number
+    the arbiter computes is in that currency.
+
+    The page-flavoured aliases (``total_pages`` / ``free_pages`` /
+    ``pages_in_use`` / ``page_size``) are kept on the base class so the
+    memcached layer and its tests read naturally; they are the same
+    counters.
     """
 
-    def __init__(self, total_pages: int, *, page_size: int = PAGE_SIZE):
-        if total_pages <= 0:
-            raise ValueError(f"total_pages must be positive: {total_pages}")
-        self.total_pages = int(total_pages)
-        self.page_size = int(page_size)
-        self.free_pages = int(total_pages)
+    def __init__(self, total_units: int, *, unit_size: int = PAGE_SIZE,
+                 kind: str = "units"):
+        if total_units <= 0:
+            raise ValueError(f"total_units must be positive: {total_units}")
+        self.total_units = int(total_units)
+        self.unit_size = int(unit_size)
+        self.kind = kind
+        self.free_units = int(total_units)
         self._tenants: Dict[str, TenantPages] = {}
 
     # -- registration --------------------------------------------------------
@@ -101,61 +126,80 @@ class PagePool:
 
     def equal_partition(self, *, floor: Optional[int] = None) -> None:
         """Set every registered tenant's quota to an equal share of the
-        pool (remainder pages go to the earliest-registered tenants)."""
+        pool (remainder units go to the earliest-registered tenants)."""
         names = list(self._tenants)
         if not names:
             raise ValueError("no tenants registered")
-        share, rem = divmod(self.total_pages, len(names))
+        share, rem = divmod(self.total_units, len(names))
         for i, name in enumerate(names):
             rec = self._tenants[name]
             rec.quota = share + (1 if i < rem else 0)
             if floor is not None:
                 rec.floor = floor
 
-    # -- page movement -------------------------------------------------------
+    # -- unit movement -------------------------------------------------------
     def acquire(self, tenant: str) -> bool:
-        """Hand one free page to ``tenant``; False when the pool is empty
+        """Hand one free unit to ``tenant``; False when the pool is empty
         or the tenant is at quota (counted in ``n_denied``)."""
         rec = self._tenants[tenant]
-        if self.free_pages <= 0 or (rec.quota is not None
+        if self.free_units <= 0 or (rec.quota is not None
                                     and rec.owned >= rec.quota):
             rec.n_denied += 1
             return False
-        self.free_pages -= 1
+        self.free_units -= 1
         rec.owned += 1
         return True
 
     def release(self, tenant: str) -> None:
-        """``tenant`` returns one owned page to the free pool."""
+        """``tenant`` returns one owned unit to the free pool."""
         rec = self._tenants[tenant]
         if rec.owned <= 0:
-            raise ValueError(f"tenant {tenant!r} owns no pages")
+            raise ValueError(f"tenant {tenant!r} owns no {self.kind}")
         rec.owned -= 1
-        self.free_pages += 1
+        self.free_units += 1
 
-    def move_quota(self, donor: str, recipient: str, pages: int = 1) -> None:
-        """Shift ``pages`` of quota donor → recipient (the arbiter's
+    def set_owned(self, tenant: str, owned: int) -> None:
+        """Re-sync one tenant's ownership from an external usage source
+        (the KV token-quota adapter measures real token usage each
+        round rather than brokering every alloc through the pool).
+        Conservation is preserved: the free counter absorbs the delta.
+        Growth is CLAMPED to the units currently free — per-tenant
+        syncs arrive in arbitrary order, so a grower may be observed
+        before the shrinker that funds it; the arbiter's sync pass
+        runs twice, and the second pass completes any clamped growth
+        (raising here instead would crash arbitration on exactly the
+        out-of-phase handoff it exists for)."""
+        rec = self._tenants[tenant]
+        owned = int(owned)
+        if owned < 0:
+            raise ValueError(f"owned must be non-negative, got {owned}")
+        delta = min(owned - rec.owned, self.free_units)
+        rec.owned += delta
+        self.free_units -= delta
+
+    def move_quota(self, donor: str, recipient: str, units: int = 1) -> None:
+        """Shift ``units`` of quota donor → recipient (the arbiter's
         bookkeeping half of a transfer). The donor must be
         quota-managed and stays at or above its floor — the starvation
         guard; an unmanaged recipient (``quota=None``) simply keeps its
         unlimited grab rights and only the donor shrinks."""
-        self.shrink_quota(donor, pages)
+        self.shrink_quota(donor, units)
         r = self._tenants[recipient]
         if r.quota is not None:
-            r.quota += pages
+            r.quota += units
 
-    def shrink_quota(self, tenant: str, pages: int = 1) -> None:
+    def shrink_quota(self, tenant: str, units: int = 1) -> None:
         """Lower a tenant's quota, refusing to cross its floor."""
         rec = self._tenants[tenant]
         if rec.quota is None:
             raise ValueError(
                 f"tenant {tenant!r} is not quota-managed "
                 "(register with quota= or call equal_partition)")
-        if rec.quota - pages < rec.floor:
+        if rec.quota - units < rec.floor:
             raise ValueError(
                 f"transfer would drain {tenant!r} below its floor "
-                f"({rec.quota}-{pages} < {rec.floor})")
-        rec.quota -= pages
+                f"({rec.quota}-{units} < {rec.floor})")
+        rec.quota -= units
 
     # -- views ---------------------------------------------------------------
     def owned(self, tenant: str) -> int:
@@ -168,13 +212,38 @@ class PagePool:
         return dict(self._tenants)
 
     @property
-    def pages_in_use(self) -> int:
+    def units_in_use(self) -> int:
         return sum(rec.owned for rec in self._tenants.values())
 
     @property
     def conserved(self) -> bool:
         """The invariant every transfer must preserve."""
-        return self.free_pages + self.pages_in_use == self.total_pages
+        return self.free_units + self.units_in_use == self.total_units
+
+    # -- page-flavoured aliases (memcached reads naturally) ------------------
+    @property
+    def total_pages(self) -> int:
+        return self.total_units
+
+    @property
+    def free_pages(self) -> int:
+        return self.free_units
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.units_in_use
+
+    @property
+    def page_size(self) -> int:
+        return self.unit_size
+
+
+class PagePool(ResourcePool):
+    """The ``kind="pages"`` pool memcached tenants share (the original
+    arbitration quantum: one slab page of ``page_size`` bytes)."""
+
+    def __init__(self, total_pages: int, *, page_size: int = PAGE_SIZE):
+        super().__init__(total_pages, unit_size=page_size, kind="pages")
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +252,7 @@ class PagePool:
 
 @dataclasses.dataclass
 class TransferDecision:
-    """One scored donor → recipient page-transfer verdict."""
+    """One scored donor → recipient unit-transfer verdict."""
 
     approved: bool
     reason: str                  # "transfer" | why it was declined
@@ -194,6 +263,7 @@ class TransferDecision:
     evicted_items: int           # donor items actually evicted (approved)
     evicted_bytes: int
     at_op: int                   # arbiter op clock when decided
+    forecast_penalty: float = 0.0  # demand-growth surcharge in the cost
 
 
 @dataclasses.dataclass
@@ -205,45 +275,62 @@ class _Tenant:
     evicted_bytes0: int = 0
     denials0: int = 0
     pressure: float = 0.0
+    # demand-forecast stream state
+    window_demand_bytes: float = 0.0   # set payload since last round
+    last_donated_at: int = -1          # op clock of last approved donation
 
 
 class TenantArbiter:
-    """Global page arbiter over per-tenant slab controllers.
+    """Global resource arbiter over per-tenant slab controllers.
 
-    Each registered tenant brings a ``SlabAllocator`` attached to the
-    shared :class:`PagePool` and gets its own
+    Each registered tenant brings an allocator attached to the shared
+    :class:`ResourcePool` and gets its own
     :class:`~repro.core.controller.SlabController` (intra-tenant
     schedule adaptation continues exactly as in the single-tenant
     loop). The arbiter adds the inter-tenant axis: route ``set`` /
-    ``delete`` traffic through :meth:`set` / :meth:`delete` and every
-    ``arbitrate_every`` ops it runs :meth:`arbitrate`, which
+    ``delete`` traffic through :meth:`set` / :meth:`delete` (or drive
+    the cadence externally with :meth:`tick` — the serving layer's
+    mode) and every ``arbitrate_every`` ops it runs :meth:`arbitrate`,
+    which
 
     1. measures per-tenant *pressure* — payload bytes lost to capacity
-       evictions plus page-denial mass since the last round,
+       evictions plus unit-denial mass since the last round,
     2. picks the highest-pressure tenant as recipient and the tenant
-       with the cheapest reclaimable page as donor,
+       with the cheapest reclaimable unit as donor — where "cheapest"
+       is the eviction-policy-priced reclaim cost PLUS, under an
+       active forecast, the tenant's predicted demand growth (don't
+       take units a tenant is about to need),
     3. scores the transfer with the controller's cost model
-       (``benefit = min(pressure, page_size) * amortization_windows``
-       vs ``cost = cost_weight * donor_release_cost_bytes``), and
+       (``benefit = min(pressure, unit_size) * amortization_windows``
+       vs ``cost = cost_weight * donor_release_cost + growth
+       surcharge``), and
     4. executes approved transfers: quota moves donor → recipient and
-       the donor's cheapest page is reclaimed
-       (:meth:`SlabAllocator.release_page`, memcached ``slabs
-       reassign`` eviction semantics) back into the shared free pool
-       for the recipient to grab on demand.
+       the donor's cheapest unit is reclaimed
+       (``release_page``, memcached ``slabs reassign`` eviction
+       semantics) back into the shared free pool for the recipient to
+       grab on demand.
 
-    Guarantees (tested in ``tests/test_multitenant.py``):
-    * pages are conserved across every transfer (``pool.conserved``),
+    Guarantees (tested in ``tests/test_multitenant.py`` /
+    ``tests/test_forecast.py``):
+    * units are conserved across every transfer (``pool.conserved``),
     * no transfer is approved when predicted benefit <= predicted cost,
-    * no donor is ever drained below its registered ``floor_pages``.
+    * no donor is ever drained below its registered ``floor_pages``,
+    * ``forecast=None`` / ``Reactive`` decisions match the
+      pre-forecast arbiter exactly.
     """
 
-    def __init__(self, pool: PagePool, *,
+    def __init__(self, pool: ResourcePool, *,
                  controller_config: Optional[ControllerConfig] = None,
                  arbitrate_every: int = 5000,
                  amortization_windows: float = 4.0,
                  cost_weight: float = 0.25,
                  max_transfers_per_round: int = 4,
-                 tail_default: bool = True):
+                 tail_default: bool = True,
+                 forecast=None,
+                 forecast_horizon: int = 1,
+                 forecast_min_confidence: float = 0.35,
+                 forecast_weight: float = 1.0,
+                 bounce_window: Optional[int] = None):
         self.pool = pool
         self.controller_config = controller_config
         self.arbitrate_every = int(arbitrate_every)
@@ -251,9 +338,17 @@ class TenantArbiter:
         self.cost_weight = float(cost_weight)
         self.max_transfers_per_round = int(max_transfers_per_round)
         self.tail_default = tail_default
+        self.forecaster = forecast
+        self._forecast_on = bool(getattr(forecast, "active", False))
+        self.forecast_horizon = int(forecast_horizon)
+        self.forecast_min_confidence = float(forecast_min_confidence)
+        self.forecast_weight = float(forecast_weight)
+        self.bounce_window = (2 * self.arbitrate_every
+                              if bounce_window is None else int(bounce_window))
         self.tenants: Dict[str, _Tenant] = {}
         self.decisions: List[TransferDecision] = []
         self.n_transfers = 0
+        self.n_bounced = 0       # recipient had donated within bounce_window
         self.n_ops = 0
         self._since_arbitrate = 0
 
@@ -263,11 +358,12 @@ class TenantArbiter:
                  floor_pages: int = 1,
                  quota: Optional[int] = None) -> SlabController:
         """Register one tenant. ``allocator`` must be attached to the
-        arbiter's pool (``SlabAllocator(page_pool=pool, tenant=name)``);
-        a per-tenant controller is created from ``controller_config``
+        arbiter's pool (``SlabAllocator(page_pool=pool, tenant=name)``,
+        or a ``KVTenantQuotaView`` for the token-quota kind); a
+        per-tenant controller is created from ``controller_config``
         when none is supplied. Returns the tenant's controller.
 
-        Only quota-managed tenants can *donate* pages — pass ``quota=``
+        Only quota-managed tenants can *donate* units — pass ``quota=``
         here or call ``pool.equal_partition()`` after registering
         everyone (unmanaged tenants can still receive)."""
         if name in self.tenants:
@@ -281,7 +377,7 @@ class TenantArbiter:
         self.pool.register(name, quota=quota, floor=floor_pages)
         if controller is None:
             cfg = self.controller_config or ControllerConfig(
-                page_size=self.pool.page_size)
+                page_size=self.pool.unit_size)
             controller = SlabController(allocator.chunk_sizes, config=cfg)
         self.tenants[name] = _Tenant(name=name, allocator=allocator,
                                      controller=controller)
@@ -294,6 +390,7 @@ class TenantArbiter:
         t = self.tenants[name]
         stored = t.allocator.set(key, value_size)
         t.controller.observe(int(value_size) + t.allocator.item_overhead)
+        t.window_demand_bytes += float(value_size)
         self._maybe_refit_tenant(t)
         self.n_ops += 1
         self._since_arbitrate += 1
@@ -323,12 +420,22 @@ class TenantArbiter:
             self.arbitrate()
         return deleted
 
+    def tick(self, n: int = 1) -> None:
+        """Advance the arbitration cadence by ``n`` operations that did
+        NOT route through :meth:`set`/:meth:`get`/:meth:`delete` — the
+        serving layer's mode, where traffic flows through
+        ``KVSlabPool.alloc`` and the batcher just reports op counts."""
+        self.n_ops += int(n)
+        self._since_arbitrate += int(n)
+        if self._since_arbitrate >= self.arbitrate_every:
+            self.arbitrate()
+
     def _deploy_schedule(self, chunks: np.ndarray) -> np.ndarray:
         if not self.tail_default:
             return np.asarray(chunks, dtype=np.int64)
         from repro.core.slab_policy import schedule_with_default_tail
         return schedule_with_default_tail(chunks,
-                                          page_size=self.pool.page_size)
+                                          page_size=self.pool.unit_size)
 
     def _maybe_refit_tenant(self, t: _Tenant) -> None:
         decision = t.controller.maybe_refit(
@@ -341,28 +448,52 @@ class TenantArbiter:
 
     # -- arbitration ---------------------------------------------------------
     def _refresh_pressure(self) -> None:
-        page_size = self.pool.page_size
+        unit_size = self.pool.unit_size
         for t in self.tenants.values():
             ev = t.allocator.evicted_bytes - t.evicted_bytes0
             dn = t.allocator.n_page_denials - t.denials0
             # evicted payload measures what was lost, denial mass the
             # capacity shortfall; both terms always count so a tiny
             # eviction can never zero out a heavily-denied tenant
-            t.pressure = float(ev) + float(dn) * page_size
+            t.pressure = float(ev) + float(dn) * unit_size
 
     def _reset_window(self) -> None:
         for t in self.tenants.values():
             t.evicted_bytes0 = t.allocator.evicted_bytes
             t.denials0 = t.allocator.n_page_denials
+            t.window_demand_bytes = 0.0
+
+    def _record_forecast_windows(self) -> None:
+        """One demand window per tenant per arbitration round. The
+        demand summary is the window's stored payload; an allocator may
+        override it (``current_demand_bytes``) — the KV quota view
+        reports live allocated tokens, which IS its demand."""
+        for t in self.tenants.values():
+            fn = getattr(t.allocator, "current_demand_bytes", None)
+            demand = float(fn()) if fn is not None else t.window_demand_bytes
+            self.forecaster.record_window(t.name, demand_bytes=demand)
+
+    def _forecast_penalty(self, t: _Tenant) -> float:
+        """Demand-growth surcharge on a candidate donor, in pool-
+        currency bytes: the units this tenant's forecast says it is
+        about to need are priced at full value, so reclaiming them now
+        just to bounce them back next round never scores well."""
+        if not self._forecast_on:
+            return 0.0
+        growth, conf = self.forecaster.demand_growth(
+            t.name, self.forecast_horizon)
+        if conf < self.forecast_min_confidence or growth <= 0.0:
+            return 0.0
+        return self.forecast_weight * float(growth)
 
     def _donor_release_cost(self, t: _Tenant) -> Optional[float]:
-        """Predicted cost of the donor's cheapest reclaimable page, or
-        None when the tenant has nothing it may give (no page above its
+        """Predicted cost of the donor's cheapest reclaimable unit, or
+        None when the tenant has nothing it may give (no unit above its
         floor). The number comes from the tenant allocator's eviction
         policy (``page_release_cost_bytes`` →
         ``EvictionPolicy.page_reclaim_cost_bytes``): under cost-aware
         policies a page full of never-re-referenced residents prices
-        near zero, so reclaimed pages come from the least-valuable
+        near zero, so reclaimed units come from the least-valuable
         residents fleet-wide — not merely the fewest-bytes page."""
         rec = self.pool._tenants[t.name]
         if rec.quota is None or rec.quota - 1 < rec.floor:
@@ -374,9 +505,20 @@ class TenantArbiter:
     def arbitrate(self) -> List[TransferDecision]:
         """One arbitration round; returns this round's decisions."""
         self._since_arbitrate = 0
+        # Two passes: set_owned clamps growth to the units free at that
+        # moment, so shrinking tenants must release first — the second
+        # pass completes growth the first one clamped, whatever order
+        # the tenants sync in.
+        for _ in range(2):
+            for t in self.tenants.values():
+                sync = getattr(t.allocator, "sync_owned", None)
+                if sync is not None:  # KV quota views measure usage here
+                    sync()
         self._refresh_pressure()
+        if self._forecast_on:
+            self._record_forecast_windows()
         round_decisions: List[TransferDecision] = []
-        page_size = self.pool.page_size
+        unit_size = self.pool.unit_size
         names = sorted(self.tenants)
         for _ in range(self.max_transfers_per_round):
             recipient = max(
@@ -384,21 +526,25 @@ class TenantArbiter:
                 key=lambda t: t.pressure)
             if recipient.pressure <= 0.0:
                 break    # nobody is starved; no decision to record
-            benefit = (min(recipient.pressure, float(page_size))
+            benefit = (min(recipient.pressure, float(unit_size))
                        * self.amortization_windows)
-            # cheapest donor that may give a page (floor respected)
+            # cheapest donor that may give a unit (floor respected),
+            # ranked by release cost + forecast demand-growth surcharge
             donor = None
-            donor_cost: Optional[int] = None
+            donor_cost: Optional[float] = None
+            donor_penalty = 0.0
             for n in names:
                 t = self.tenants[n]
                 if t is recipient:
                     continue
-                c = self._donor_release_cost(t)
-                if c is None:
+                base = self._donor_release_cost(t)
+                if base is None:
                     continue
+                pen = self._forecast_penalty(t)
+                c = float(base) + pen
                 if donor_cost is None or c < donor_cost or (
                         c == donor_cost and t.pressure < donor.pressure):
-                    donor, donor_cost = t, c
+                    donor, donor_cost, donor_penalty = t, c, pen
             if donor is None:
                 # nobody may donate: every other tenant is unmanaged,
                 # at its floor, or holds nothing — the starvation guard
@@ -406,43 +552,61 @@ class TenantArbiter:
                     False, "no-eligible-donor", None, recipient.name,
                     benefit, 0.0))
                 break
-            cost = self.cost_weight * float(donor_cost)
+            # the penalty is a demand-bytes surcharge, not an eviction
+            # prediction — it is charged at full weight on top of the
+            # discounted eviction cost
+            cost = (self.cost_weight * float(donor_cost - donor_penalty)
+                    + donor_penalty)
             if benefit <= cost:
                 round_decisions.append(self._decide(
                     False, "cost-exceeds-benefit", donor.name,
-                    recipient.name, benefit, cost))
+                    recipient.name, benefit, cost,
+                    forecast_penalty=donor_penalty))
                 break
-            # execute: quota follows the page; the donor's cheapest page
+            # execute: quota follows the unit; the donor's cheapest unit
             # goes back to the shared free pool for the recipient to
             # grab on its next demand
             self.pool.move_quota(donor.name, recipient.name, 1)
             evicted_items = evicted_bytes = 0
             if self.pool.owned(donor.name) > self.pool.quota(donor.name):
                 evicted_items, evicted_bytes = donor.allocator.release_page()
+            for moved in (donor, recipient):
+                apply_quota = getattr(moved.allocator, "apply_quota", None)
+                if apply_quota is not None:   # KV views push quota back
+                    apply_quota(self.pool.quota(moved.name))
             self.n_transfers += 1
+            if (recipient.last_donated_at >= 0
+                    and self.n_ops - recipient.last_donated_at
+                    <= self.bounce_window):
+                # the reactive blind spot made visible: this tenant gave
+                # a unit away moments ago and is already buying it back
+                self.n_bounced += 1
+            donor.last_donated_at = self.n_ops
             round_decisions.append(self._decide(
                 True, "transfer", donor.name, recipient.name, benefit,
                 cost, evicted_items=evicted_items,
-                evicted_bytes=evicted_bytes))
+                evicted_bytes=evicted_bytes,
+                forecast_penalty=donor_penalty))
             recipient.pressure = max(
-                0.0, recipient.pressure - float(page_size))
+                0.0, recipient.pressure - float(unit_size))
         self._reset_window()
         return round_decisions
 
     def _decide(self, approved: bool, reason: str, donor: Optional[str],
                 recipient: Optional[str], benefit: float, cost: float, *,
-                evicted_items: int = 0, evicted_bytes: int = 0
-                ) -> TransferDecision:
+                evicted_items: int = 0, evicted_bytes: int = 0,
+                forecast_penalty: float = 0.0) -> TransferDecision:
         d = TransferDecision(approved=approved, reason=reason, donor=donor,
                              recipient=recipient, benefit=benefit, cost=cost,
                              evicted_items=evicted_items,
-                             evicted_bytes=evicted_bytes, at_op=self.n_ops)
+                             evicted_bytes=evicted_bytes, at_op=self.n_ops,
+                             forecast_penalty=forecast_penalty)
         self.decisions.append(d)
         return d
 
     # -- measurement ---------------------------------------------------------
     def stats(self) -> Dict[str, Dict]:
-        """Per-tenant snapshot: pages owned/quota plus allocator stats."""
+        """Per-tenant snapshot: units owned/quota plus allocator stats."""
         out = {}
         for name, t in self.tenants.items():
             st = t.allocator.stats()

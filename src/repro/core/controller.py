@@ -85,6 +85,23 @@ class ControllerConfig:
     device: bool = False                 # device-resident observe sketch
     device_buckets: int = 1 << 13        # dense bucket count
     device_bucket_width: int = 1         # bucket grid (serving: align)
+    # Predictive refit seam: a DemandForecaster makes the drift gate
+    # fire on the FORECAST mixture — when the live sketch is still
+    # covered but the forecaster (periodicity detected over the ring of
+    # per-check sketch snapshots) says the mixture at +forecast_horizon
+    # checks has drifted past the threshold, candidate schedules are
+    # scored against a live/forecast blend and the winner is
+    # pre-positioned before the peak. None or forecast.Reactive keeps
+    # today's reactive behaviour bit-for-bit (no recording, no extra
+    # syncs, identical decisions). Anti-thrash hysteresis: predictive
+    # refits share the cooldown, must clear min_rel_improvement on the
+    # BLEND (a wrong forecast is diluted by the live half), and need
+    # forecast_min_confidence autocorrelation.
+    forecast: Optional[object] = None    # DemandForecaster | Reactive | None
+    forecast_horizon: int = 1            # checks of lead time
+    forecast_min_confidence: float = 0.35  # autocorr gate for predictive
+    forecast_blend: float = 0.5          # forecast share of scoring mixture
+    forecast_stream: Optional[str] = None  # stream key in a shared forecaster
 
 
 @dataclasses.dataclass
@@ -100,6 +117,8 @@ class RefitDecision:
     predicted_savings: float         # bytes saved over amortization horizon
     predicted_cost: float            # weighted migration bytes
     at_observation: int              # controller clock when decided
+    predictive: bool = False         # decided on the FORECAST mixture
+    forecast_drift: float = 0.0      # distance(reference, forecast mixture)
 
 
 def _quantize_up(chunks: np.ndarray, align: int) -> np.ndarray:
@@ -185,6 +204,15 @@ class SlabController:
             self.sketch = DecayedSizeHistogram(
                 half_life=half_life, max_bins=self.config.max_bins)
         self._policy = policy
+        # Predictive seam: with an active forecaster, every drift check
+        # records the live sketch as one window of this controller's
+        # stream; a Reactive (or absent) forecaster short-circuits every
+        # forecast code path so the reactive pipeline is untouched.
+        self.forecaster = self.config.forecast
+        self._forecast_on = bool(getattr(self.forecaster, "active", False))
+        self._stream = (self.config.forecast_stream
+                        or f"controller-{id(self):x}")
+        self.n_predictive_refits = 0
         # Fitting-time histogram the drift detector compares against.
         # None until the first check (or refit) establishes one.
         self.reference = reference
@@ -278,6 +306,8 @@ class SlabController:
             # already passed.
             if self.sketch.n_observed == 0:
                 return None
+            if self._forecast_on:
+                self._record_window_device()
             if self.reference is None:
                 self.reference = self.sketch.weights_device
                 return None
@@ -286,6 +316,12 @@ class SlabController:
             live = self.sketch.snapshot_weights()
             if live[0].size == 0:
                 return None
+            if self._forecast_on:
+                self.forecaster.record_window(
+                    self._stream,
+                    demand_bytes=float(np.dot(
+                        live[0].astype(np.float64), live[1])),
+                    support=live[0], weights=live[1])
             if self.reference is None:
                 # First check: adopt the live sketch as the reference the
                 # initial schedule is presumed fit to.
@@ -295,18 +331,111 @@ class SlabController:
                                        metric=self.config.drift_metric)
         self.last_drift = drift
         if drift < self.config.drift_threshold:
+            if self._forecast_on:
+                # The live mixture is covered — exactly when a coming
+                # peak is invisible to the reactive gate. Ask the
+                # forecast whether the mixture at +horizon has drifted.
+                predicted = self._maybe_predictive(drift, cost_bytes_fn)
+                if predicted is not None:
+                    return predicted
             return self._decide(False, "drift-below-threshold", drift)
         if (self.n_observed - self._last_refit_at
                 < self.config.min_items_between_refits):
             return self._decide(False, "cooldown", drift)
         return self._evaluate_refit(drift, cost_bytes_fn)
 
-    def _evaluate_refit(self, drift: float,
-                        cost_bytes_fn) -> RefitDecision:
+    # -- predictive path (ControllerConfig.forecast) -------------------------
+    def _record_window_device(self) -> None:
+        """One forecast window from the device sketch: the dense weight
+        vector by reference (functional updates make it a stable,
+        zero-sync snapshot) plus the one demand scalar the periodicity
+        detector needs (a scalar readback, counted like the drift
+        gate's)."""
+        jnp = self.sketch._jnp
+        w = self.sketch.weights_device
+        self.sketch.n_scalar_syncs += 1
+        demand = float(jnp.sum(
+            self.sketch.support_device.astype(jnp.float32) * w))
+        self.forecaster.record_window(self._stream, demand_bytes=demand,
+                                      device_weights=w)
+
+    def _maybe_predictive(self, drift: float,
+                          cost_bytes_fn) -> Optional[RefitDecision]:
+        """Fire the refit pipeline on the FORECAST mixture, or return
+        ``None`` to fall through to the reactive hold. Gates, in order:
+        a period must be detected with ``forecast_min_confidence``
+        autocorrelation, the forecast mixture must exceed the same
+        drift threshold, and the shared refit cooldown must be clear."""
         cfg = self.config
-        support, freqs = self.sketch.snapshot()
-        if support.size == 0:
-            return self._decide(False, "empty-sketch", drift)
+        fc = self.forecaster.predict(self._stream,
+                                     horizon=cfg.forecast_horizon)
+        if fc is None or fc.confidence < cfg.forecast_min_confidence:
+            return None
+        if self._device:
+            if fc.device_weights is None:
+                return None
+            self.sketch.n_scalar_syncs += 1
+            fdrift = float(histogram_distance_device(
+                self.reference, fc.device_weights,
+                metric=cfg.drift_metric))
+        else:
+            if fc.support is None or fc.support.size == 0:
+                return None
+            fdrift = histogram_distance(self.reference,
+                                        (fc.support, fc.weights),
+                                        metric=cfg.drift_metric)
+        if fdrift < cfg.drift_threshold:
+            return None
+        if (self.n_observed - self._last_refit_at
+                < cfg.min_items_between_refits):
+            return self._decide(False, "forecast-cooldown", drift,
+                                predictive=True, forecast_drift=fdrift)
+        return self._evaluate_refit(drift, cost_bytes_fn, forecast=fc,
+                                    forecast_drift=fdrift)
+
+    def _forecast_mixture(self, fc):
+        """``(support, freqs, new_reference)`` of the live/forecast
+        blend the predictive pipeline scores against. The reference
+        form matches the path (host pair / dense device vector)."""
+        cfg = self.config
+        if self._device:
+            jnp = self.sketch._jnp
+            live = self.sketch.weights_device
+            scale = jnp.sum(live) / jnp.maximum(
+                jnp.sum(fc.device_weights), 1e-30)
+            blend = ((1.0 - cfg.forecast_blend) * live
+                     + cfg.forecast_blend * scale * fc.device_weights)
+            self.sketch.n_host_syncs += 1      # materialized below
+            w = np.asarray(blend, dtype=np.float64)
+            freqs = np.rint(w).astype(np.int64)
+            keep = freqs > 0
+            support = ((np.nonzero(keep)[0].astype(np.int64) + 1)
+                       * self.sketch.bucket_width)
+            return support, freqs[keep], blend
+        from repro.core.forecast import blend_histograms
+        live = self.sketch.snapshot_weights()
+        bs, bw = blend_histograms(live, (fc.support, fc.weights),
+                                  cfg.forecast_blend)
+        freqs = np.rint(bw).astype(np.int64)
+        keep = freqs > 0
+        return bs[keep], freqs[keep], (bs, bw)
+
+    def _evaluate_refit(self, drift: float, cost_bytes_fn, *,
+                        forecast=None,
+                        forecast_drift: float = 0.0) -> RefitDecision:
+        cfg = self.config
+        predictive = forecast is not None
+        if predictive:
+            support, freqs, new_reference = self._forecast_mixture(forecast)
+            if support.size == 0:
+                return self._decide(False, "empty-forecast", drift,
+                                    predictive=True,
+                                    forecast_drift=forecast_drift)
+        else:
+            support, freqs = self.sketch.snapshot()
+            new_reference = None
+            if support.size == 0:
+                return self._decide(False, "empty-sketch", drift)
         k = cfg.k or len(self.chunks)
         fitted = self.policy.fit(support, freqs, k, method=cfg.method,
                                  baseline=self.chunks)
@@ -329,6 +458,16 @@ class SlabController:
         w_new = int(round(scores[best]))
         rel = (w_cur - w_new) / max(w_cur, 1)
         if rel < cfg.min_rel_improvement:
+            if predictive:
+                # hysteresis part 2 of the predictive path: the current
+                # schedule already serves the blend — the live reference
+                # is NOT re-anchored (a declined forecast must never
+                # blind the reactive gate to real drift later).
+                return self._decide(False,
+                                    "forecast-improvement-below-hysteresis",
+                                    drift, chunks=winner, w_cur=w_cur,
+                                    w_new=w_new, predictive=True,
+                                    forecast_drift=forecast_drift)
             # The schedule is still (near-)optimal for current traffic:
             # re-anchor the reference so steady-state traffic that merely
             # *settled* far from the old fitting histogram stops
@@ -342,26 +481,46 @@ class SlabController:
         cost = cfg.cost_weight * float(cost_bytes_fn(winner)
                                        if cost_bytes_fn else 0.0)
         if savings <= cost:
-            return self._decide(False, "cost-exceeds-savings", drift,
-                                chunks=winner, w_cur=w_cur, w_new=w_new,
-                                savings=savings, cost=cost)
+            return self._decide(False,
+                                ("forecast-cost-exceeds-savings"
+                                 if predictive else "cost-exceeds-savings"),
+                                drift, chunks=winner, w_cur=w_cur,
+                                w_new=w_new, savings=savings, cost=cost,
+                                predictive=predictive,
+                                forecast_drift=forecast_drift)
         self.chunks = winner
-        self.reference = self._reference_now()
+        if predictive:
+            # Anchor to the BLEND: neither the live traffic that is
+            # still here nor the forecast traffic that arrives on
+            # schedule reads as full drift afterwards, so a correct
+            # forecast cannot bounce the schedule back (hysteresis
+            # part 3); the shared cooldown covers the wrong-forecast
+            # case until the reactive gate sees the truth.
+            self.reference = new_reference
+            self.n_predictive_refits += 1
+        else:
+            self.reference = self._reference_now()
         self._last_refit_at = self.n_observed
         self.n_refits += 1
-        return self._decide(True, "refit", drift, chunks=winner,
-                            w_cur=w_cur, w_new=w_new,
-                            savings=savings, cost=cost)
+        return self._decide(True,
+                            "refit-predictive" if predictive else "refit",
+                            drift, chunks=winner, w_cur=w_cur, w_new=w_new,
+                            savings=savings, cost=cost,
+                            predictive=predictive,
+                            forecast_drift=forecast_drift)
 
     def _decide(self, approved: bool, reason: str, drift: float, *,
                 chunks: Optional[np.ndarray] = None, w_cur: int = 0,
                 w_new: int = 0, savings: float = 0.0,
-                cost: float = 0.0) -> RefitDecision:
+                cost: float = 0.0, predictive: bool = False,
+                forecast_drift: float = 0.0) -> RefitDecision:
         d = RefitDecision(approved=approved, reason=reason, drift=drift,
                           chunks=chunks, current_waste=w_cur,
                           candidate_waste=w_new, predicted_savings=savings,
                           predicted_cost=cost,
-                          at_observation=self.n_observed)
+                          at_observation=self.n_observed,
+                          predictive=predictive,
+                          forecast_drift=forecast_drift)
         self.decisions.append(d)
         return d
 

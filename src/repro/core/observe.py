@@ -166,9 +166,19 @@ class DecayedSizeHistogram:
         self.n_host_syncs = 0
 
 
-# Public alias: the docs call this the "streaming size sketch" — the
-# name says what it is for, DecayedSizeHistogram says how it works.
-StreamingSizeSketch = DecayedSizeHistogram
+def __getattr__(name):
+    # Deprecated alias: the early docs called this the "streaming size
+    # sketch"; the class has been DecayedSizeHistogram since PR 1 and
+    # every in-repo consumer now says so. The shim keeps old imports
+    # working one release longer, loudly.
+    if name == "StreamingSizeSketch":
+        import warnings
+        warnings.warn(
+            "StreamingSizeSketch is a deprecated alias; use "
+            "repro.core.observe.DecayedSizeHistogram",
+            DeprecationWarning, stacklevel=2)
+        return DecayedSizeHistogram
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class DeviceSizeSketch:

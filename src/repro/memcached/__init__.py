@@ -6,6 +6,7 @@ from repro.memcached.metrics import WasteComparison, compare_schedules
 from repro.memcached.slab_allocator import (ReconfigureReport, SlabAllocator,
                                             SlabStats, run_workload)
 from repro.memcached.traffic import (TenantOp, all_paper_workloads,
+                                     diurnal_multimodal_traffic,
                                      diurnal_traffic, drift_traffic,
                                      multitenant_phased_ops, paper_histogram,
                                      paper_traffic, phase_shift_traffic,
@@ -14,6 +15,7 @@ from repro.memcached.traffic import (TenantOp, all_paper_workloads,
 __all__ = [
     "WasteComparison", "compare_schedules", "ReconfigureReport",
     "SlabAllocator", "SlabStats", "run_workload", "all_paper_workloads",
+    "diurnal_multimodal_traffic",
     "diurnal_traffic", "drift_traffic", "paper_histogram", "paper_traffic",
     "phase_shift_traffic", "TenantOp", "multitenant_phased_ops",
     "EvictionPolicy", "ColdestLRU", "SegmentedLRU", "RankedPageEviction",

@@ -42,7 +42,8 @@ import numpy as np
 from repro.core.distribution import (PAGE_SIZE, PAPER_N_ITEMS,
                                      PAPER_WORKLOADS, PaperWorkload,
                                      lognormal_params_from_moments,
-                                     sample_lognormal_sizes, size_histogram)
+                                     sample_lognormal_sizes,
+                                     sample_multimodal_sizes, size_histogram)
 
 
 def paper_traffic(workload: PaperWorkload, *, n_items: int = PAPER_N_ITEMS,
@@ -117,6 +118,37 @@ def diurnal_traffic(a: PaperWorkload, b: PaperWorkload, *,
     sizes_b = sample_lognormal_sizes(rng, n_items, b.mu, b.sigma,
                                      max_size=PAGE_SIZE)
     return np.where(from_b, sizes_b, sizes_a)
+
+
+def diurnal_multimodal_traffic(day_modes: Sequence[Tuple[float, float, float]],
+                               night_modes: Sequence[
+                                   Tuple[float, float, float]], *,
+                               n_items: int = PAPER_N_ITEMS,
+                               period: int = 200_000,
+                               seed: int = 0) -> np.ndarray:
+    """Periodic swap between two MULTI-MODAL size mixtures.
+
+    ``day_modes`` / ``night_modes`` are ``(weight, mean, std)``
+    log-normal mode tuples (``sample_multimodal_sizes``); item ``i`` is
+    drawn from the day mixture with probability
+    ``0.5 * (1 - cos(2*pi*i/period))`` — pure-night troughs, pure-day
+    peaks. Unlike :func:`diurnal_traffic` (two unimodal operating
+    points, where a few classes cover the union for good), the union
+    of two multi-modal phases needs roughly twice the classes of
+    either phase alone — under a scarce class budget the optimal
+    schedule genuinely *tracks* the phase, which is the regime the
+    forecast-driven controller is for
+    (``benchmarks/forecast_bench.py``).
+    """
+    rng = np.random.default_rng(seed)
+    i = np.arange(n_items)
+    p_day = 0.5 * (1.0 - np.cos(2.0 * np.pi * i / period))
+    from_day = rng.random(n_items) < p_day
+    day = sample_multimodal_sizes(rng, n_items, tuple(day_modes),
+                                  max_size=PAGE_SIZE)
+    night = sample_multimodal_sizes(rng, n_items, tuple(night_modes),
+                                    max_size=PAGE_SIZE)
+    return np.where(from_day, day, night)
 
 
 # -- multi-tenant workloads (what the arbiter serves) ------------------------

@@ -1,14 +1,17 @@
 """Serving: slab-pool KV allocation (the paper's technique), decode steps,
 continuous batching."""
 from repro.serving.kv_slab_pool import (ALIGN, Allocation, KVSlabPool,
-                                        PoolStats, TenantTokens,
-                                        default_pow2_classes,
-                                        quantize_lengths)
+                                        KVTenantQuotaView, PoolStats,
+                                        TenantTokens, default_pow2_classes,
+                                        quantize_lengths,
+                                        token_quota_arbiter)
 from repro.serving.scheduler import (ContinuousBatcher, Request, SimResult,
                                      lognormal_request_workload)
 from repro.serving.serve_step import generate, make_serve_fns, sample_logits
 
-__all__ = ["ALIGN", "Allocation", "KVSlabPool", "PoolStats", "TenantTokens",
-           "default_pow2_classes", "quantize_lengths", "ContinuousBatcher",
+__all__ = ["ALIGN", "Allocation", "KVSlabPool", "KVTenantQuotaView",
+           "PoolStats", "TenantTokens",
+           "default_pow2_classes", "quantize_lengths", "token_quota_arbiter",
+           "ContinuousBatcher",
            "Request", "SimResult", "lognormal_request_workload",
            "generate", "make_serve_fns", "sample_logits"]

@@ -31,7 +31,14 @@ Implementation notes:
     memcached layer uses (``eviction_policy=``). Under pool pressure,
     ``alloc`` reclaims the retained chunk whose sequence is least
     likely to be re-referenced (``reuse``d) — Memshare's rank-based
-    victim selection, with KV token pages as the page unit.
+    victim selection, with KV token pages as the page unit;
+  * per-stream token quotas can be ARBITER-MANAGED: ``token_quota_arbiter``
+    wraps each stream in a :class:`KVTenantQuotaView` over a
+    ``ResourcePool(kind="kv_tokens")`` so the shared
+    :class:`~repro.core.arbiter.TenantArbiter` moves quota between
+    streams as their load phases, pricing donors by the retained-
+    sequence reclaimable value (see docs/architecture.md, "The second
+    resource kind").
 """
 from __future__ import annotations
 
@@ -111,6 +118,14 @@ class TenantTokens:
     used_tokens: int = 0                 # true KV tokens of live allocations
     active_requests: int = 0
     n_failed: int = 0                    # allocs refused (pool or quota)
+    # retained-chunk (prefix-cache) churn, split the way the memcached
+    # layer splits pressure vs migration evictions: pressure reclaims
+    # are the arbiter's demand signal, arbiter-driven reclaims must
+    # never pollute it
+    n_retained_evicted: int = 0          # pressure reclaims (alloc path)
+    retained_evicted_tokens: int = 0     # their chunk tokens
+    n_quota_reclaims: int = 0            # arbiter-driven reclaims
+    quota_reclaimed_tokens: int = 0      # their chunk tokens
 
 
 class KVSlabPool:
@@ -407,9 +422,76 @@ class KVSlabPool:
         del holder.lru[key]
         pol.on_remove(holder, key)
         self.n_retained_evicted += 1
+        vrec = self._tenants.get(a.tenant)
+        if vrec is not None:    # pressure signal: whose prefix cache paid
+            vrec.n_retained_evicted += 1
+            vrec.retained_evicted_tokens += a.chunk
         if a.chunk > chunk:
             self._carve_range(a.chunk - chunk, a.start + chunk)
         return a.start
+
+    # -- arbiter-facing retained-value surface (token-quota arbitration) -----
+    def _retained_ranked(self, tenant: str) -> List[Tuple[float, int, int]]:
+        """This tenant's retained chunks as ``(rereference_weight,
+        request_id, chunk_tokens)``, cheapest (least likely re-used)
+        first — the reclaimable-value signal the quota arbiter prices
+        donors with."""
+        pol = self.eviction_policy
+        out = []
+        for rid, a in self._retained.items():
+            if a.tenant != tenant:
+                continue
+            holder = self._retained_cls[a.chunk]
+            out.append((pol.rereference_weight(holder, str(rid)), rid,
+                        a.chunk))
+        out.sort(key=lambda t: (t[0], t[2]))
+        return out
+
+    def tenant_release_cost_tokens(self, tenant: str, tokens: int) -> float:
+        """Predicted cost (in tokens, re-reference-weighted) of taking
+        ``tokens`` of quota away from ``tenant`` right now. Unused
+        quota headroom (quota minus live minus retained) goes first and
+        is free — nobody is using it; then retained chunks cover the
+        release at their policy-priced value (a dead prefix cache
+        donates nearly free); only a remaining shortfall has to come
+        out of tokens the stream is actively using, charged at full
+        rate — the wholesale price of making a live stream fail
+        allocations."""
+        rec = self._tenants[tenant]
+        covered = 0
+        if rec.quota_tokens is not None:
+            retained = sum(a.chunk for a in self._retained.values()
+                           if a.tenant == tenant)
+            covered = max(0, rec.quota_tokens - rec.allocated_tokens
+                          - retained)
+        cost = 0.0
+        for w, _rid, chunk in self._retained_ranked(tenant):
+            if covered >= tokens:
+                break
+            cost += w * chunk
+            covered += chunk
+        if covered < tokens:
+            cost += float(tokens - covered)
+        return cost
+
+    def reclaim_tenant_retained(self, tenant: str, tokens: int
+                                ) -> Tuple[int, int]:
+        """Evict ``tenant``'s least-valuable retained chunks until
+        ``tokens`` chunk tokens are freed (or its prefix cache is
+        empty); the freed ranges re-enter the freelist. The quota
+        arbiter's execute step — counted as quota reclaims, NOT as
+        pressure evictions. Returns ``(n_evicted, tokens_freed)``."""
+        rec = self._tenants[tenant]
+        n, freed = 0, 0
+        for _w, rid, chunk in self._retained_ranked(tenant):
+            if freed >= tokens:
+                break
+            self._drop_retained(rid)
+            n += 1
+            freed += chunk
+        rec.n_quota_reclaims += n
+        rec.quota_reclaimed_tokens += freed
+        return n, freed
 
     # -- learning -------------------------------------------------------------
     def observe_lengths(self, lengths) -> None:
@@ -487,6 +569,163 @@ class KVSlabPool:
     @property
     def max_chunk_tokens(self) -> int:
         return max(self.chunk_classes)
+
+
+class KVTenantQuotaView:
+    """One serving stream of a :class:`KVSlabPool`, duck-typed as the
+    allocator a :class:`~repro.core.arbiter.TenantArbiter` expects —
+    the adapter that makes KV **token quotas** the arbiter's second
+    resource kind (``ResourcePool(kind="kv_tokens")``, one unit =
+    ``unit_size`` tokens of quota).
+
+    The mapping, column for column against the memcached tenant:
+
+    * pressure — ``n_page_denials`` → the stream's failed allocations
+      (quota or pool exhaustion), ``evicted_bytes`` → tokens of ITS
+      retained prefix chunks reclaimed under pool pressure;
+    * donor cost — ``page_release_cost_bytes`` → the policy-priced
+      reclaimable value of one unit of its retained chunks
+      (``KVSlabPool.tenant_release_cost_tokens``), shortfall charged
+      wholesale;
+    * execute — ``release_page`` → evict its least-valuable retained
+      chunks for one unit (``reclaim_tenant_retained``) and return the
+      unit to the shared pool; ``apply_quota`` pushes the moved quota
+      back into ``KVSlabPool.register_tenant(quota_tokens=...)``, so
+      the pool's own admission check enforces what the arbiter decided;
+    * ownership — ``sync_owned`` re-measures the stream's real token
+      usage (live + retained) each arbitration round, because KV
+      traffic does not broker every alloc through the ResourcePool.
+
+    Traffic never routes through ``arbiter.set``; the serving loop
+    drives the cadence with ``arbiter.tick`` (see ``ContinuousBatcher``).
+    """
+
+    def __init__(self, kv: "KVSlabPool", tenant: str, pool):
+        if tenant not in kv._tenants:
+            raise KeyError(f"tenant {tenant!r} not registered "
+                           "(call register_tenant first)")
+        self.kv = kv
+        self.tenant = tenant
+        self.page_pool = pool
+
+    @property
+    def _rec(self) -> TenantTokens:
+        return self.kv._tenants[self.tenant]
+
+    @property
+    def unit(self) -> int:
+        return self.page_pool.unit_size
+
+    @property
+    def chunk_sizes(self) -> np.ndarray:
+        return np.asarray(self.kv.chunk_classes, dtype=np.int64)
+
+    # -- pressure signal -----------------------------------------------------
+    @property
+    def evicted_bytes(self) -> int:
+        return self._rec.retained_evicted_tokens
+
+    @property
+    def n_page_denials(self) -> int:
+        return self._rec.n_failed
+
+    def current_demand_bytes(self) -> float:
+        """Live chunk tokens — the demand series the forecaster tracks
+        (a stream heading into its peak grows this before it starves)."""
+        return float(self._rec.allocated_tokens)
+
+    # -- ownership sync ------------------------------------------------------
+    def retained_tokens(self) -> int:
+        return sum(a.chunk for a in self.kv._retained.values()
+                   if a.tenant == self.tenant)
+
+    def sync_owned(self) -> None:
+        self.page_pool.set_owned(
+            self.tenant,
+            (self._rec.allocated_tokens + self.retained_tokens())
+            // self.unit)
+
+    # -- donate --------------------------------------------------------------
+    def page_release_cost_bytes(self) -> float:
+        return self.kv.tenant_release_cost_tokens(self.tenant, self.unit)
+
+    def release_page(self) -> Tuple[int, int]:
+        n, freed = self.kv.reclaim_tenant_retained(self.tenant, self.unit)
+        if self.page_pool.owned(self.tenant) > 0:
+            self.page_pool.release(self.tenant)
+        return n, freed
+
+    def apply_quota(self, units: Optional[int]) -> None:
+        if units is not None:
+            self.kv.register_tenant(self.tenant,
+                                    quota_tokens=units * self.unit)
+
+    # -- controller/stat surface (idle for KV tenants) -----------------------
+    def migration_cost_bytes(self, new_chunk_sizes) -> float:
+        return 0.0      # KV refits are hot (live chunks keep their ranges)
+
+    def stats(self):
+        rec = self._rec
+        import types
+        return types.SimpleNamespace(
+            n_resident=rec.active_requests,
+            item_bytes=rec.used_tokens,
+            waste=rec.allocated_tokens - rec.used_tokens,
+            n_evicted=rec.n_retained_evicted,
+            evicted_bytes=rec.retained_evicted_tokens,
+            n_page_denials=rec.n_failed,
+            migration_evictions=rec.n_quota_reclaims,
+            evicted_hot_bytes=0,
+            reused_after_evict=0,
+            eviction_policy=type(self.kv.eviction_policy).__name__.lower())
+
+
+def token_quota_arbiter(kv: KVSlabPool, *,
+                        unit_tokens: Optional[int] = None,
+                        floor_units: int = 1,
+                        equal_partition: bool = False,
+                        controller_config: Optional[ControllerConfig] = None,
+                        **arbiter_kw):
+    """Put a :class:`~repro.core.arbiter.TenantArbiter` in charge of a
+    KV pool's per-stream token quotas.
+
+    Every stream already registered on ``kv`` becomes a tenant of a
+    ``ResourcePool(kind="kv_tokens")`` whose unit is ``unit_tokens``
+    (default: 8 allocation grids, i.e. ``8 * kv.align``). A stream's
+    existing ``quota_tokens`` converts to its starting unit quota
+    (floor division; ``None`` stays unmanaged unless
+    ``equal_partition``). From then on the arbiter owns the quotas:
+    each round it re-measures real usage, prices donors by the
+    retained-sequence reclaimable value (plus the forecast demand
+    surcharge when ``forecast=`` is active), and pushes approved moves
+    back into ``KVSlabPool.register_tenant(quota_tokens=...)``.
+
+    Drive the cadence from the serving loop:
+    ``ContinuousBatcher(pool, tenant=..., arbiter=arb)`` ticks it once
+    per step, or call ``arb.tick(n)`` / ``arb.arbitrate()`` yourself.
+    """
+    from repro.core.arbiter import ResourcePool, TenantArbiter
+    unit = int(unit_tokens or 8 * kv.align)
+    total_units = max(1, kv.pool_tokens // unit)
+    pool = ResourcePool(total_units, unit_size=unit, kind="kv_tokens")
+    if controller_config is None:
+        # per-tenant controllers are idle here (the pool's own shared
+        # controller learns the classes from merged traffic); park the
+        # check cadence out of reach
+        controller_config = ControllerConfig(page_size=unit,
+                                             check_every=1 << 62)
+    arb = TenantArbiter(pool, controller_config=controller_config,
+                        **arbiter_kw)
+    for name, rec in kv._tenants.items():
+        quota = (None if rec.quota_tokens is None
+                 else max(floor_units, rec.quota_tokens // unit))
+        arb.register(name, KVTenantQuotaView(kv, name, pool),
+                     floor_pages=floor_units, quota=quota)
+    if equal_partition:
+        pool.equal_partition(floor=floor_units)
+        for t in arb.tenants.values():
+            t.allocator.apply_quota(pool.quota(t.name))
+    return arb
 
 
 def default_pow2_classes(min_chunk: int = ALIGN,

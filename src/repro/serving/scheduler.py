@@ -65,13 +65,18 @@ class ContinuousBatcher:
                  refit_every: Optional[int] = None,
                  adaptive: bool = False,
                  tenant: str = "default",
-                 quota_tokens: Optional[int] = None):
+                 quota_tokens: Optional[int] = None,
+                 arbiter=None):
         self.pool = pool
         self.tenant = tenant
         pool.register_tenant(tenant, quota_tokens=quota_tokens)
         self.max_batch = max_batch
         self.refit_every = refit_every
         self.adaptive = adaptive
+        # Token-quota arbitration (repro.serving.token_quota_arbiter):
+        # the batcher reports its op count each step so the arbiter's
+        # cadence advances with real serving work, not wall clock.
+        self.arbiter = arbiter
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}
         self.realloc_copies = 0
@@ -130,6 +135,10 @@ class ContinuousBatcher:
             del self.active[rid]
         if self.pool.batch_observe and observed:
             self.pool.observe_lengths(np.asarray(observed, dtype=np.int64))
+        if self.arbiter is not None:
+            # one tick per step per stream: admissions + decodes both
+            # already fed the pool's counters this step
+            self.arbiter.tick(1)
         if self.adaptive:
             decision = self.pool.maybe_refit()
             if decision is not None:

@@ -1,0 +1,477 @@
+"""Forecast layer: periodicity detection, seasonal-naive prediction,
+Reactive bit-for-bit parity (controller + arbiter), predictive
+pre-positioning, forecast-aware donor selection, and arbiter-managed KV
+token quotas moving between phased serving streams."""
+import numpy as np
+import pytest
+
+from repro.core import (ControllerConfig, DemandForecaster, PagePool,
+                        Reactive, ResourcePool, SlabController,
+                        TenantArbiter, blend_histograms)
+from repro.core.distribution import PAPER_WORKLOADS
+from repro.memcached import SlabAllocator, multitenant_phased_ops
+
+PAGE = 4096
+
+
+# -- DemandForecaster unit behaviour ----------------------------------------
+
+def _record_series(fc, stream, values):
+    for v in values:
+        fc.record_window(stream, demand_bytes=float(v))
+
+
+def test_period_detected_on_sinusoid():
+    fc = DemandForecaster()
+    t = np.arange(60)
+    _record_series(fc, "s", 100 + 50 * np.sin(2 * np.pi * t / 12))
+    lag, conf = fc.period("s")
+    assert lag == 12
+    assert conf > 0.8
+
+
+def test_period_rejects_flat_and_noise():
+    fc = DemandForecaster()
+    _record_series(fc, "flat", [42.0] * 50)
+    assert fc.period("flat") == (None, 0.0)
+    rng = np.random.default_rng(0)
+    _record_series(fc, "noise", rng.normal(100, 10, 64))
+    _, conf = fc.period("noise")
+    assert conf < 0.5
+
+
+def test_period_needs_two_cycles():
+    fc = DemandForecaster()
+    t = np.arange(18)          # 1.5 cycles of period 12
+    _record_series(fc, "s", 100 + 50 * np.sin(2 * np.pi * t / 12))
+    assert fc.period("s")[0] is None
+    # the ACF's smooth small-lag correlation must NOT be mistaken for
+    # a period when the true cycle does not fit the ring yet
+    assert fc.predict("s") is None
+
+
+def test_predict_is_seasonal_naive():
+    fc = DemandForecaster()
+    pattern = [10.0, 20.0, 30.0, 40.0]
+    _record_series(fc, "s", pattern * 8)
+    lag, conf = fc.period("s")
+    assert lag == 4
+    # last window is 40; one period ahead of (now + 1) is the window
+    # that held 10
+    f1 = fc.predict("s", horizon=1)
+    assert f1 is not None and f1.demand_bytes == 10.0
+    f2 = fc.predict("s", horizon=2)
+    assert f2.demand_bytes == 20.0
+    assert fc.predict("s", horizon=lag + 1) is None   # beyond one period
+    with pytest.raises(ValueError):
+        fc.predict("s", horizon=0)
+
+
+def test_demand_growth_sign():
+    fc = DemandForecaster()
+    _record_series(fc, "s", [10.0, 20.0, 30.0] * 8 + [10.0])
+    growth, conf = fc.demand_growth("s", 1)
+    assert growth > 0       # next phase of the cycle is 20 > 10
+    assert conf > 0.5
+    assert Reactive().demand_growth("s", 1) == (0.0, 0.0)
+
+
+def test_forecast_carries_histogram():
+    fc = DemandForecaster()
+    for rep in range(6):
+        for phase, size in enumerate((100, 900, 500)):
+            fc.record_window("s", demand_bytes=float(size),
+                             support=np.array([size]),
+                             weights=np.array([7.0]))
+    f = fc.predict("s", horizon=1)
+    assert f is not None
+    assert f.support.tolist() == [int(f.demand_bytes)]
+    assert f.weights.tolist() == [7.0]
+
+
+def test_blend_histograms_mass_preserving():
+    live = (np.array([100, 200]), np.array([6.0, 2.0]))
+    forecast = (np.array([200, 900]), np.array([40.0, 40.0]))
+    s, w = blend_histograms(live, forecast, 0.5)
+    assert s.tolist() == [100, 200, 900]
+    assert w.sum() == pytest.approx(8.0)      # live mass, not forecast's
+    s0, w0 = blend_histograms(live, forecast, 0.0)
+    assert s0.tolist() == [100, 200] and w0.tolist() == [6.0, 2.0]
+    s1, w1 = blend_histograms(live, forecast, 1.0)
+    assert s1.tolist() == [200, 900]
+    assert w1.sum() == pytest.approx(8.0)
+    with pytest.raises(ValueError):
+        blend_histograms(live, forecast, 1.5)
+
+
+def test_reactive_is_inert():
+    r = Reactive()
+    assert r.active is False
+    r.record_window("s", demand_bytes=1.0)
+    assert r.predict("s") is None
+
+
+# -- controller: Reactive parity + predictive pre-positioning ----------------
+
+def _periodic_blocks(rng, n_blocks, block=200):
+    """3 windows of ~100 B then 3 windows of ~900 B, repeated."""
+    out = []
+    for i in range(n_blocks):
+        lo = i % 6 < 3
+        out.append(rng.integers(90, 130, block) if lo
+                   else rng.integers(850, 950, block))
+    return out
+
+
+def _run_controller(forecast, *, n_blocks=24):
+    cfg = ControllerConfig(k=3, check_every=200, half_life=200.0,
+                           drift_threshold=0.3,
+                           min_items_between_refits=400,
+                           page_size=PAGE, min_chunk=48,
+                           forecast=forecast, forecast_min_confidence=0.3)
+    ctl = SlabController([128, 1024, 2048], config=cfg)
+    rng = np.random.default_rng(0)
+    for sizes in _periodic_blocks(rng, n_blocks):
+        ctl.observe_many(sizes)
+        ctl.maybe_refit()
+    return ctl
+
+
+def _decision_keys(ctl):
+    return [(d.approved, d.reason, d.at_observation,
+             round(d.drift, 9)) for d in ctl.decisions]
+
+
+def test_reactive_forecaster_parity_bit_for_bit():
+    base = _run_controller(None)
+    reactive = _run_controller(Reactive())
+    assert _decision_keys(base) == _decision_keys(reactive)
+    assert base.n_refits == reactive.n_refits
+    assert [c.tolist() for c in (base.chunks, reactive.chunks)][0] \
+        == reactive.chunks.tolist()
+    # not one extra sketch materialization either
+    assert base.sketch.n_host_syncs == reactive.sketch.n_host_syncs
+
+
+def test_predictive_refit_fires_before_the_phase_arrives():
+    ctl = _run_controller(DemandForecaster())
+    predictive = [d for d in ctl.decisions if d.approved and d.predictive]
+    assert ctl.n_predictive_refits >= 1
+    assert len(predictive) == ctl.n_predictive_refits
+    d = predictive[0]
+    assert d.reason == "refit-predictive"
+    # fired while the LIVE drift was still under the gate — the whole
+    # point: the reactive path would have held here
+    assert d.drift < 0.3
+    assert d.forecast_drift >= 0.3
+
+
+def test_predictive_declines_do_not_reanchor_reference():
+    """A declined predictive evaluation must leave the reactive drift
+    gate exactly as it was (the reference untouched)."""
+    fc = DemandForecaster()
+    cfg = ControllerConfig(k=3, check_every=100, half_life=100.0,
+                           drift_threshold=0.3,
+                           min_items_between_refits=10**9,   # always cool
+                           page_size=PAGE, min_chunk=48,
+                           forecast=fc, forecast_min_confidence=0.3)
+    ctl = SlabController([128, 1024, 2048], config=cfg)
+    rng = np.random.default_rng(1)
+    for i in range(24):
+        lo = i % 6 < 3
+        ctl.observe_many(rng.integers(90, 130, 100) if lo
+                         else rng.integers(850, 950, 100))
+        ref_before = ctl.reference
+        d = ctl.maybe_refit()
+        if d is not None and d.predictive and not d.approved:
+            assert ctl.reference is ref_before
+
+
+def test_device_controller_reactive_parity():
+    jax = pytest.importorskip("jax")
+    del jax
+
+    def run(forecast):
+        cfg = ControllerConfig(k=3, check_every=200, half_life=200.0,
+                               drift_threshold=0.3,
+                               min_items_between_refits=400,
+                               page_size=PAGE, min_chunk=48,
+                               device=True, device_buckets=1 << 10,
+                               forecast=forecast,
+                               forecast_min_confidence=0.3)
+        ctl = SlabController([128, 1024], config=cfg)
+        rng = np.random.default_rng(2)
+        for sizes in _periodic_blocks(rng, 12):
+            ctl.observe_many(sizes)
+            ctl.maybe_refit()
+        return ctl
+
+    base, reactive = run(None), run(Reactive())
+    assert _decision_keys(base) == _decision_keys(reactive)
+    assert base.sketch.n_host_syncs == reactive.sketch.n_host_syncs
+    assert base.sketch.n_scalar_syncs == reactive.sketch.n_scalar_syncs
+    # an active forecaster records device windows without materializing
+    fc = DemandForecaster()
+    ctl = run(fc)
+    assert fc.n_windows > 0
+    assert _decision_keys(ctl)  # ran checks
+
+
+# -- arbiter: Reactive parity + forecast-aware donor selection ---------------
+
+def _run_arbiter(forecast, *, n_sets=4000, seed=3):
+    pool = PagePool(24, page_size=PAGE)
+    cfg = ControllerConfig(page_size=PAGE, check_every=10**9, min_chunk=48)
+    arb = TenantArbiter(pool, controller_config=cfg, arbitrate_every=500,
+                        forecast=forecast)
+    for t in range(3):
+        name = f"tenant{t}"
+        arb.register(name, SlabAllocator([64, 256, 1024], page_size=PAGE,
+                                         page_pool=pool, tenant=name),
+                     floor_pages=1)
+    pool.equal_partition()
+    ops = multitenant_phased_ops(PAPER_WORKLOADS[:3], n_sets=n_sets,
+                                 seed=seed)
+    for op in ops:
+        name = f"tenant{op.tenant}"
+        if op.op == "set":
+            arb.set(name, op.key, min(op.size, 3000))
+        elif op.op == "delete":
+            arb.delete(name, op.key)
+    assert pool.conserved
+    return arb
+
+
+def _transfer_keys(arb):
+    return [(d.approved, d.reason, d.donor, d.recipient, d.at_op,
+             round(d.benefit, 6), round(d.cost, 6)) for d in arb.decisions]
+
+
+def test_arbiter_reactive_parity_bit_for_bit():
+    base = _run_arbiter(None)
+    reactive = _run_arbiter(Reactive())
+    assert _transfer_keys(base) == _transfer_keys(reactive)
+    assert base.n_transfers == reactive.n_transfers
+
+
+def test_forecast_penalty_redirects_donor():
+    """The cheapest donor is about to surge: reactive takes its page
+    anyway; the forecast's demand-growth surcharge redirects the
+    transfer to the genuinely idle tenant."""
+    def build(forecast):
+        pool = PagePool(12, page_size=PAGE)
+        cfg = ControllerConfig(page_size=PAGE, check_every=10**9,
+                               min_chunk=48)
+        arb = TenantArbiter(pool, controller_config=cfg,
+                            arbitrate_every=10**9, forecast=forecast,
+                            forecast_min_confidence=0.3)
+        for name in ("starved", "rising", "flat"):
+            arb.register(name, SlabAllocator(
+                [64, 256, 1024], page_size=PAGE, page_pool=pool,
+                tenant=name), floor_pages=1)
+        pool.equal_partition()      # quota 4 each
+        # starve the recipient: fill its quota, then keep denying
+        for i in range(600):
+            arb.tenants["starved"].allocator.set(f"k{i}", 900)
+        # "flat" exercises its whole quota with small residents, so its
+        # cheapest page costs real payload; "rising" is idle (owned <
+        # quota), the classic cost-free donor — exactly the tenant a
+        # reactive arbiter loves to drain right before its peak
+        for i in range(4 * PAGE // 64):
+            arb.tenants["flat"].allocator.set(f"f{i}", 50)
+        return arb
+
+    reactive = build(None)
+    d = reactive.arbitrate()[0]
+    assert d.approved and d.recipient == "starved"
+    assert d.donor == "rising"            # cost 0 beats flat's payload
+
+    fc = DemandForecaster()
+    # rising's demand cycles and is heading UP next window (growth far
+    # above flat's page payload); flat really is flat
+    _record_series(fc, "rising", [9000.0, 18000.0, 27000.0] * 8
+                   + [9000.0])
+    _record_series(fc, "flat", [2000.0] * 25)
+    forecast = build(fc)
+    d = forecast.arbitrate()[0]
+    assert d.approved and d.recipient == "starved"
+    assert d.donor == "flat"              # the growth surcharge redirected
+    assert d.forecast_penalty == 0.0      # chosen donor pays no surcharge
+
+
+def test_bounce_counter_tracks_donate_then_receive():
+    pool = PagePool(8, page_size=PAGE)
+    cfg = ControllerConfig(page_size=PAGE, check_every=10**9, min_chunk=48)
+    arb = TenantArbiter(pool, controller_config=cfg,
+                        arbitrate_every=10**9, bounce_window=10**9,
+                        max_transfers_per_round=1)
+    for name in ("a", "b"):
+        arb.register(name, SlabAllocator([64, 512], page_size=PAGE,
+                                         page_pool=pool, tenant=name),
+                     floor_pages=1)
+    pool.equal_partition()
+    # a starves, b donates
+    for i in range(200):
+        arb.tenants["a"].allocator.set(f"k{i}", 500)
+    assert arb.arbitrate()[0].donor == "b"
+    assert arb.n_bounced == 0
+    # now b starves right back: a (which never donated) gives the page,
+    # but b receiving after donating counts as a bounce
+    arb._reset_window()
+    for i in range(400):
+        arb.tenants["b"].allocator.set(f"j{i}", 500)
+    d = next(x for x in arb.arbitrate() if x.approved)
+    assert d.recipient == "b"
+    assert arb.n_bounced == 1
+
+
+# -- ResourcePool kinds ------------------------------------------------------
+
+def test_resource_pool_kinds_and_aliases():
+    pool = ResourcePool(10, unit_size=2048, kind="kv_tokens")
+    assert pool.kind == "kv_tokens"
+    assert pool.unit_size == pool.page_size == 2048
+    assert pool.total_units == pool.total_pages == 10
+    page = PagePool(4, page_size=PAGE)
+    assert page.kind == "pages" and page.page_size == PAGE
+
+
+def test_resource_pool_set_owned_conserves():
+    pool = ResourcePool(10, unit_size=512, kind="kv_tokens")
+    pool.register("a")
+    pool.register("b")
+    pool.set_owned("a", 4)
+    pool.set_owned("b", 3)
+    assert pool.conserved and pool.free_units == 3
+    pool.set_owned("a", 1)
+    assert pool.conserved and pool.free_units == 6
+    with pytest.raises(ValueError):
+        pool.set_owned("a", -1)
+
+
+def test_set_owned_sync_order_independent():
+    """An out-of-phase handoff (one tenant's usage grows while the
+    other's shrinks) must survive any sync order: growth is clamped to
+    the free units, and a second pass completes it — never a crash."""
+    pool = ResourcePool(16, unit_size=512, kind="kv_tokens")
+    pool.register("a")
+    pool.register("b")
+    pool.set_owned("a", 14)
+    pool.set_owned("b", 2)          # pool fully owned, free = 0
+    # phases flip; the GROWER syncs first
+    pool.set_owned("b", 14)         # clamped: nothing free yet
+    assert pool.owned("b") == 2 and pool.conserved
+    pool.set_owned("a", 2)          # the shrinker funds it
+    pool.set_owned("b", 14)         # second pass completes the growth
+    assert pool.owned("a") == 2 and pool.owned("b") == 14
+    assert pool.conserved
+
+
+def test_release_cost_credits_unused_quota_headroom():
+    """Quota a stream is not using donates for free; only tokens past
+    the headroom + retained value are charged."""
+    from repro.serving import KVSlabPool
+    kv = KVSlabPool(8192, [512])
+    kv.register_tenant("idle", quota_tokens=4096)     # nothing allocated
+    assert kv.tenant_release_cost_tokens("idle", 1024) == 0.0
+    kv.register_tenant("busy", quota_tokens=1024)
+    assert kv.alloc(1, 500, tenant="busy") is not None
+    assert kv.alloc(2, 500, tenant="busy") is not None   # quota exhausted
+    # no headroom, no retained: full wholesale rate
+    assert kv.tenant_release_cost_tokens("busy", 1024) == 1024.0
+
+
+# -- arbiter-managed KV token quotas (the serving resource kind) -------------
+
+def test_kv_token_quotas_move_between_phased_streams():
+    """The e2e claim: under phased load, the arbiter takes token quota
+    from the idle stream (pricing its retained prefix chunks with the
+    reclaimable-value signal) and gives it to the surging one — and the
+    pool's own admission control enforces the moved quotas."""
+    from repro.serving import KVSlabPool, token_quota_arbiter
+    kv = KVSlabPool(1 << 14, [128, 256, 512, 1024])
+    kv.register_tenant("chat", quota_tokens=8192)
+    kv.register_tenant("batch", quota_tokens=8192)
+    unit = 1024
+    arb = token_quota_arbiter(kv, unit_tokens=unit, arbitrate_every=5,
+                              cost_weight=0.25)
+    assert arb.pool.kind == "kv_tokens"
+    assert arb.pool.quota("chat") == 8192 // unit
+    rng = np.random.default_rng(0)
+    rid = 0
+    # phase 1: batch ran earlier and left retained prefix chunks
+    for _ in range(6):
+        a = kv.alloc(rid, 900, tenant="batch")
+        rid += 1
+        assert a is not None
+        kv.finish(a.request_id, retain=True)
+    # phase 2: chat surges into its quota ceiling
+    for _ in range(40):
+        for _ in range(4):
+            kv.alloc(rid, int(rng.integers(600, 1000)), tenant="chat")
+            rid += 1
+        arb.tick(4)
+    assert arb.n_transfers > 0
+    assert kv._tenants["chat"].quota_tokens > 8192      # quota followed load
+    assert kv._tenants["batch"].quota_tokens >= unit    # floor respected
+    # the arbiter's pool quota and the KV pool's enforced quota agree
+    for name in ("chat", "batch"):
+        assert kv._tenants[name].quota_tokens \
+            == arb.pool.quota(name) * unit
+    assert arb.pool.conserved
+
+
+def test_kv_quota_view_pressure_and_release():
+    from repro.serving import KVSlabPool, KVTenantQuotaView
+    kv = KVSlabPool(4096, [512])
+    kv.register_tenant("s", quota_tokens=1024)
+    pool = ResourcePool(4, unit_size=1024, kind="kv_tokens")
+    pool.register("s")
+    view = KVTenantQuotaView(kv, "s", pool)
+    assert view.n_page_denials == 0
+    a = kv.alloc(1, 500, tenant="s")
+    assert a is not None
+    assert kv.alloc(2, 500, tenant="s") is not None
+    assert kv.alloc(3, 500, tenant="s") is None      # quota
+    assert view.n_page_denials == 1
+    view.sync_owned()
+    assert pool.owned("s") == 1                       # 1024 tokens used
+    # retained chunks are the reclaimable value
+    kv.finish(1, retain=True)
+    kv.finish(2, retain=True)
+    assert view.retained_tokens() == 1024
+    cost = view.page_release_cost_bytes()
+    assert 0.0 <= cost <= 1024
+    n, freed = kv.reclaim_tenant_retained("s", 1024)
+    assert n == 2 and freed == 1024
+    assert kv._tenants["s"].n_quota_reclaims == 2
+    # quota reclaims are NOT pressure evictions
+    assert kv._tenants["s"].retained_evicted_tokens == 0
+    with pytest.raises(KeyError):
+        KVTenantQuotaView(kv, "nope", pool)
+
+
+def test_batcher_ticks_arbiter():
+    from repro.serving import ContinuousBatcher, KVSlabPool, Request, \
+        token_quota_arbiter
+    kv = KVSlabPool(1 << 13, [256, 512])
+    b = ContinuousBatcher(kv, tenant="s", quota_tokens=1 << 12)
+    arb = token_quota_arbiter(kv, unit_tokens=512, arbitrate_every=3)
+    b.arbiter = arb
+    for r in range(6):
+        b.submit(Request(rid=r, prompt_len=300, output_len=4))
+    for t in range(8):
+        b.step(t)
+    assert arb.n_ops == 8      # one tick per step
+
+
+# -- deprecated alias --------------------------------------------------------
+
+def test_streaming_size_sketch_alias_deprecated():
+    from repro.core import observe
+    with pytest.warns(DeprecationWarning, match="DecayedSizeHistogram"):
+        cls = observe.StreamingSizeSketch
+    assert cls is observe.DecayedSizeHistogram
+    import repro.core as core
+    assert core.__getattr__("StreamingSizeSketch") \
+        is observe.DecayedSizeHistogram

@@ -247,6 +247,65 @@ def test_arbiter_no_pressure_no_decisions():
     assert arb.n_transfers == 0
 
 
+def test_single_tenant_arbitrate_is_noop_decision():
+    """With one registered tenant there is never an eligible donor: a
+    pressured round records a declined decision, an idle round records
+    nothing — and neither moves a page."""
+    pool = PagePool(4, page_size=PAGE)
+    cfg = ControllerConfig(page_size=PAGE, check_every=10**9, min_chunk=48)
+    arb = TenantArbiter(pool, controller_config=cfg, arbitrate_every=10**9)
+    alloc = SlabAllocator([64, 256, 1024], page_size=PAGE,
+                          page_pool=pool, tenant="only")
+    arb.register("only", alloc, floor_pages=1, quota=4)
+    assert arb.arbitrate() == []                   # idle: nothing at all
+    fill(alloc, 300, 900, "k")                     # pressured
+    owned_before = pool.owned("only")
+    decisions = arb.arbitrate()
+    assert [d.reason for d in decisions] == ["no-eligible-donor"]
+    assert not decisions[0].approved
+    assert arb.n_transfers == 0
+    assert pool.owned("only") == owned_before
+    assert pool.quota("only") == 4
+    assert pool.conserved
+
+
+def test_conservation_under_interleaved_release_page():
+    """A tenant surrendering pages on its own (e.g. a maintenance drain)
+    between and during arbitration rounds must never break the pool
+    invariant or the arbiter."""
+    arb, pool, allocs = make_arbiter(n_tenants=3, total_pages=18,
+                                     cost_weight=0.1)
+    fill(allocs["t0"], 60, 200, "a")
+    fill(allocs["t2"], 40, 200, "c")
+    for round_ in range(4):
+        fill(allocs["t1"], 200, 900, f"b{round_}_")
+        if allocs["t2"].pages_allocated > 1:       # interleaved drain
+            allocs["t2"].release_page()
+            assert pool.conserved
+        arb.arbitrate()
+        assert pool.conserved
+        if allocs["t0"].pages_allocated > 1:
+            allocs["t0"].release_page()
+            assert pool.conserved
+    assert sum(pool.owned(n) for n in ("t0", "t1", "t2")) \
+        + pool.free_pages == pool.total_pages
+
+
+def test_zero_pressure_window_produces_no_transfers():
+    """A window in which nobody was denied and nothing was evicted must
+    arbitrate to zero transfers — even right after a pressured window."""
+    arb, pool, allocs = make_arbiter(n_tenants=2, total_pages=8)
+    fill(allocs["t1"], 300, 900, "b")              # pressured window
+    arb.arbitrate()
+    transfers_after_first = arb.n_transfers
+    for i in range(50):                            # quiet traffic only
+        allocs["t0"].set(f"q{i}", 100)
+        allocs["t0"].delete(f"q{i}")
+    assert arb.arbitrate() == []                   # zero-pressure window
+    assert arb.n_transfers == transfers_after_first
+    assert pool.conserved
+
+
 def test_arbiter_register_validates_pool_attachment():
     arb, pool, _ = make_arbiter(n_tenants=2)
     stray = SlabAllocator([64], page_size=PAGE)
