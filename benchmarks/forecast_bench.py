@@ -296,6 +296,25 @@ def main(n_items: int, n_sets: int, steps: int) -> Dict:
     }
 
 
+def run(n_items: int = 24_000, n_sets: int = 5000, steps: int = 120):
+    """CSV-driver alias (see ``benchmarks/run.py``): quick-size axes,
+    persisted through the shared ``bench_io`` path."""
+    out = main(n_items, n_sets, steps)
+    write_bench_json("forecast", out)
+    ctrl, arb, kv = out["controller"], out["arbiter"], out["kv_quota"]
+    return [
+        ("controller", 0.0,
+         f"predictive_wins_onset={ctrl['predictive_wins_onset']};"
+         f"onset_waste={ctrl['predictive']['peak_onset_waste_frac']:.4f}"),
+        ("arbiter", 0.0,
+         f"fewer_bounces={arb['fewer_bounces']};"
+         f"n_bounced={arb['forecast']['n_bounced']}"),
+        ("kv_quota", 0.0,
+         f"quotas_moved={kv['quotas_moved']};"
+         f"n_transfers={kv['arbitrated']['n_transfers']}"),
+    ]
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--n-items", type=int, default=120_000,

@@ -1,18 +1,25 @@
-"""Benchmark: host-dict vs device-sketch observation.
+"""Benchmark: host-dict vs device-sketch observation, fused vs per-batch.
 
-The observe half of the paper's loop, measured two ways:
+The observe half of the paper's loop, measured three ways:
 
 * **throughput** — items/second of ``DecayedSizeHistogram.observe_many``
-  (the host python-dict sketch, one dict update per item) vs
-  ``DeviceSizeSketch.observe_many`` (one Pallas ``sketch_update`` launch
-  per batch), on the same batched size stream;
-* **sync traffic** — a phase-shifted traffic replay through two
-  ``SlabController``s (host sketch vs ``device=True``), counting
-  device↔host sketch materializations (``n_host_syncs``) per refit
-  window and checking the two paths reach the SAME refit decisions.
-  The host path materializes the sketch at every drift check; the
-  device path only when the drift gate has already passed and a refit
-  is actually evaluated.
+  (the host python-dict sketch, one dict update per item) vs the device
+  sketch driven per-batch (one jitted dispatch per ``observe_many``) vs
+  the FUSED observe window (``observe_window``: a whole chunk of batches
+  scanned through ``sketch_update`` in ONE dispatch), with dispatch
+  accounting (``n_dispatches``) per path. CI-enforced: the run fails if
+  fused device throughput regresses below the host baseline.
+* **sync traffic** — a phase-shifted traffic replay through three
+  ``SlabController``s (host sketch, ``device=True`` per-batch,
+  ``device=True`` fused window), counting device↔host materializations
+  (``n_host_syncs``) and observe-loop launches (``n_dispatches``) per
+  cadence window, and checking all three paths reach the SAME refit
+  decisions. The fused path costs 1 dispatch + at most 1 host sync per
+  window — the drift scalar rides along in the flush dispatch.
+* **arbiter scoring** — N tenants' drift checks coming due on the same
+  ``TenantArbiter.tick``: every pending candidate frontier is scored in
+  ONE batched ``waste_eval`` launch (CI-enforced), instead of one
+  launch per tenant.
 
 ``python benchmarks/observe_bench.py`` emits JSON;
 ``--quick`` is the CI smoke size.
@@ -22,7 +29,7 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from typing import Dict
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -34,13 +41,19 @@ from repro.memcached import phase_shift_traffic
 
 K = 6
 BATCH = 512
+WINDOW_BATCHES = 8      # batches per fused observe window
 
 
 def observe_throughput(n_items: int, *, batch: int = BATCH,
                        half_life: float = 4000.0,
                        num_buckets: int = 1 << 12) -> Dict:
-    """items/s of the host dict vs the device sketch on one stream."""
+    """items/s of host dict vs per-batch device vs fused device window."""
     rng = np.random.default_rng(0)
+    # full batches and full windows only: ragged tails compile extra
+    # programs (a one-off cost), and this axis measures the steady-state
+    # per-window dispatch cost
+    n_items = max(n_items // (batch * WINDOW_BATCHES), 1) \
+        * batch * WINDOW_BATCHES
     sizes = rng.integers(64, num_buckets - 1, n_items).astype(np.int64)
     batches = [sizes[i:i + batch] for i in range(0, n_items, batch)]
 
@@ -58,19 +71,46 @@ def observe_throughput(n_items: int, *, batch: int = BATCH,
         device.observe_many(b)
     device.weights_device.block_until_ready()
     device_s = time.perf_counter() - t0
+    device_dispatches = device.n_dispatches
 
-    return {
+    fused = DeviceSizeSketch(half_life=half_life, num_buckets=num_buckets,
+                             window=True)
+    fused.observe_window(batches[:WINDOW_BATCHES])     # warmup compile
+    fused.reset()
+    t0 = time.perf_counter()
+    for i in range(0, len(batches), WINDOW_BATCHES):
+        fused.observe_window(batches[i:i + WINDOW_BATCHES])
+    fused.weights_device.block_until_ready()
+    fused_s = time.perf_counter() - t0
+    n_windows = -(-len(batches) // WINDOW_BATCHES)
+
+    out = {
         "n_items": n_items,
         "batch": batch,
+        "window_batches": WINDOW_BATCHES,
         "host_items_per_s": round(n_items / host_s),
         "device_items_per_s": round(n_items / device_s),
+        "fused_items_per_s": round(n_items / fused_s),
+        "device_dispatches": device_dispatches,
+        "fused_dispatches": fused.n_dispatches,
+        "fused_dispatches_per_window": round(
+            fused.n_dispatches / n_windows, 2),
         "device_speedup": round(host_s / device_s, 2),
+        "fused_speedup": round(host_s / fused_s, 2),
     }
+    if out["fused_items_per_s"] < out["host_items_per_s"]:
+        # enforced, not just recorded: the whole point of the fused
+        # window is that the device path stops losing to the host dict
+        raise SystemExit(
+            "fused device observe is SLOWER than the host baseline: "
+            f"{out['fused_items_per_s']} < {out['host_items_per_s']} "
+            "items/s")
+    return out
 
 
 def sync_axis(n_items: int, *, batch: int = BATCH) -> Dict:
-    """Same refit decisions, far fewer host syncs: the fused device path
-    vs the host path on phase-shifted traffic."""
+    """Same refit decisions, one launch + at most one sync per window:
+    host vs per-batch device vs fused device on phase-shifted traffic."""
     a, b = PAPER_WORKLOADS[0], PAPER_WORKLOADS[2]
     sizes = phase_shift_traffic(a, b, n_items=n_items, shift_at=0.5,
                                 seed=11)
@@ -87,8 +127,13 @@ def sync_axis(n_items: int, *, batch: int = BATCH) -> Dict:
     decisions = {}
     for name, config in (
             ("host", ControllerConfig(**common)),
-            ("device", ControllerConfig(**common, device=True,
-                                        device_buckets=1 << 12))):
+            ("device_per_batch",
+             ControllerConfig(**common, device=True,
+                              device_buckets=1 << 12,
+                              fused_observe=False)),
+            ("device_fused",
+             ControllerConfig(**common, device=True,
+                              device_buckets=1 << 12))):
         ctl = SlabController(deployed, config=config)
         t0 = time.perf_counter()
         for i in range(0, len(sizes), batch):
@@ -100,18 +145,78 @@ def sync_axis(n_items: int, *, batch: int = BATCH) -> Dict:
             "n_checks": ctl.n_checks,
             "n_refits": ctl.n_refits,
             "host_syncs": ctl.sketch.n_host_syncs,
+            "dispatches": ctl.sketch.n_dispatches,
+            "dispatches_per_window": round(
+                ctl.sketch.n_dispatches / max(ctl.n_checks, 1), 2),
+            "host_syncs_per_window": round(
+                ctl.sketch.n_host_syncs / max(ctl.n_checks, 1), 2),
             "syncs_per_refit_window": round(
                 ctl.sketch.n_host_syncs / max(ctl.n_refits, 1), 2),
             "wall_s": round(dt, 3),
         }
-    out["decisions_match"] = decisions["host"] == decisions["device"]
+    out["decisions_match"] = (
+        decisions["host"] == decisions["device_per_batch"]
+        == decisions["device_fused"])
     out["sync_ratio"] = round(out["host"]["host_syncs"]
-                              / max(out["device"]["host_syncs"], 1), 1)
+                              / max(out["device_fused"]["host_syncs"], 1), 1)
     if not out["decisions_match"]:
         # enforced, not just reported: CI's bench-smoke run must go red
-        # when the device path stops reproducing the host decisions
+        # when a device path stops reproducing the host decisions
         raise SystemExit(
             f"host/device refit decisions diverged: {decisions}")
+    return out
+
+
+def arbiter_axis(*, n_tenants: int = 8, per_tenant: int = 4000) -> Dict:
+    """All tenants' drift checks due on one tick -> ONE waste_eval
+    launch scoring every pending candidate frontier (CI-enforced)."""
+    from repro.core.arbiter import PagePool, TenantArbiter
+    from repro.core.slab_policy import default_memcached_schedule
+    from repro.memcached import SlabAllocator
+
+    page_size = 1 << 16
+    pool = PagePool(64 * n_tenants, page_size=page_size)
+    cadence = per_tenant // 2
+    cfg = ControllerConfig(k=K, check_every=cadence,
+                           half_life=float(cadence),
+                           drift_threshold=0.05,
+                           min_items_between_refits=0,
+                           min_rel_improvement=0.0, cost_weight=0.0,
+                           page_size=page_size)
+    arb = TenantArbiter(pool, controller_config=cfg,
+                        arbitrate_every=1 << 62)
+    classes = default_memcached_schedule(page_size=page_size)
+    rng = np.random.default_rng(3)
+    for t in range(n_tenants):
+        name = f"tenant{t}"
+        alloc = SlabAllocator(classes, page_size=page_size,
+                              page_pool=pool, tenant=name)
+        arb.register(name, alloc)
+    # phase A: every controller adopts its reference on the first tick
+    for t in range(n_tenants):
+        arb.tenants[f"tenant{t}"].controller.observe_many(
+            rng.integers(100, 2000, cadence))
+    arb.tick(0)
+    # phase B: drifted traffic -> every frontier comes due together
+    for t in range(n_tenants):
+        arb.tenants[f"tenant{t}"].controller.observe_many(
+            rng.integers(4000, 30000, cadence))
+    launches0 = arb.n_score_launches
+    t0 = time.perf_counter()
+    arb.tick(0)
+    dt = time.perf_counter() - t0
+    out = {
+        "n_tenants": n_tenants,
+        "frontiers_scored": arb.n_frontiers_scored,
+        "waste_eval_launches_per_tick": arb.n_score_launches - launches0,
+        "tick_wall_s": round(dt, 4),
+    }
+    if out["waste_eval_launches_per_tick"] > 1:
+        # enforced: fleet scoring must stay one launch per tick no
+        # matter how many tenants come due together
+        raise SystemExit(
+            f"arbiter used {out['waste_eval_launches_per_tick']} "
+            f"waste_eval launches for {n_tenants} pending tenants")
     return out
 
 
@@ -119,7 +224,36 @@ def main(n_items: int) -> Dict:
     return {
         "observe_throughput": observe_throughput(n_items),
         "syncs": sync_axis(n_items),
+        "arbiter": arbiter_axis(),
     }
+
+
+def run(n_items: int = 60_000) -> List[Tuple[str, float, str]]:
+    """CSV-driver alias (see ``benchmarks/run.py``): same measurements,
+    persisted through the shared ``bench_io`` path."""
+    try:
+        from bench_io import write_bench_json
+    except ImportError:      # running as a package module
+        from benchmarks.bench_io import write_bench_json
+    out = main(n_items)
+    write_bench_json("observe", out)
+    tp, sx, ar = out["observe_throughput"], out["syncs"], out["arbiter"]
+    return [
+        ("host_observe", 1e6 * tp["n_items"] / tp["host_items_per_s"]
+         / max(tp["n_items"] // tp["batch"], 1),
+         f"items_per_s={tp['host_items_per_s']}"),
+        ("fused_observe", 1e6 * tp["n_items"] / tp["fused_items_per_s"]
+         / max(tp["n_items"] // tp["batch"], 1),
+         f"items_per_s={tp['fused_items_per_s']};"
+         f"dispatches_per_window={tp['fused_dispatches_per_window']}"),
+        ("sync_axis", 1e6 * sx["device_fused"]["wall_s"],
+         f"decisions_match={sx['decisions_match']};"
+         f"dispatches_per_window="
+         f"{sx['device_fused']['dispatches_per_window']}"),
+        ("arbiter_axis", 1e6 * ar["tick_wall_s"],
+         f"launches_per_tick={ar['waste_eval_launches_per_tick']};"
+         f"frontiers={ar['frontiers_scored']}"),
+    ]
 
 
 if __name__ == "__main__":

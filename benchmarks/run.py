@@ -12,9 +12,9 @@ import traceback
 
 def main() -> None:
     from benchmarks import (adaptive_bench, bucketing_bench,
-                            convergence_bench, k_sweep, kernel_bench,
-                            kv_pool_bench, multitenant_bench, paper_tables,
-                            sigma_sweep)
+                            convergence_bench, forecast_bench, k_sweep,
+                            kernel_bench, kv_pool_bench, multitenant_bench,
+                            observe_bench, paper_tables, sigma_sweep)
     suites = [
         ("paper_tables", lambda: paper_tables.run()),
         ("sigma_sweep", lambda: sigma_sweep.run()),
@@ -25,6 +25,8 @@ def main() -> None:
         ("multitenant", lambda: multitenant_bench.run()),
         ("bucketing", lambda: bucketing_bench.run()),
         ("kernels", lambda: kernel_bench.run()),
+        ("observe", lambda: observe_bench.run()),
+        ("forecast", lambda: forecast_bench.run()),
     ]
     failures = 0
     for suite, fn in suites:

@@ -59,7 +59,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.controller import ControllerConfig, SlabController
+from repro.core.controller import (ControllerConfig, ScoreRequest,
+                                   SlabController, _score_frontier,
+                                   score_requests)
 from repro.core.distribution import PAGE_SIZE
 
 
@@ -351,6 +353,11 @@ class TenantArbiter:
         self.n_bounced = 0       # recipient had donated within bounce_window
         self.n_ops = 0
         self._since_arbitrate = 0
+        # Fleet-batched candidate scoring telemetry: every drain that
+        # finds pending frontiers costs ONE waste_eval launch however
+        # many tenants came due together.
+        self.n_score_launches = 0
+        self.n_frontiers_scored = 0
 
     # -- registration --------------------------------------------------------
     def register(self, name: str, allocator, *,
@@ -424,9 +431,13 @@ class TenantArbiter:
         """Advance the arbitration cadence by ``n`` operations that did
         NOT route through :meth:`set`/:meth:`get`/:meth:`delete` — the
         serving layer's mode, where traffic flows through
-        ``KVSlabPool.alloc`` and the batcher just reports op counts."""
+        ``KVSlabPool.alloc`` and the batcher just reports op counts.
+        Every tenant whose controller came due (externally-fed sketches)
+        gets its drift check here, with all pending candidate frontiers
+        scored in ONE batched ``waste_eval`` launch."""
         self.n_ops += int(n)
         self._since_arbitrate += int(n)
+        self._drain_checks(self.tenants.values())
         if self._since_arbitrate >= self.arbitrate_every:
             self.arbitrate()
 
@@ -437,14 +448,63 @@ class TenantArbiter:
         return schedule_with_default_tail(chunks,
                                           page_size=self.pool.unit_size)
 
-    def _maybe_refit_tenant(self, t: _Tenant) -> None:
-        decision = t.controller.maybe_refit(
-            cost_bytes_fn=lambda c: t.allocator.migration_cost_bytes(
-                self._deploy_schedule(c)))
-        if decision is not None and decision.approved:
+    def _apply_refit(self, t: _Tenant, decision) -> None:
+        if decision.approved:
             deployed = self._deploy_schedule(decision.chunks)
             t.allocator.reconfigure(deployed)
             t.controller.set_chunks(deployed)
+
+    def _maybe_refit_tenant(self, t: _Tenant) -> None:
+        self._drain_checks([t])
+
+    def _drain_checks(self, tenants) -> None:
+        """Run every due tenant's drift check, batching all surviving
+        candidate frontiers into one fleet ``waste_eval`` launch.
+
+        The gates (drift, cooldown, hysteresis, cost model) run in each
+        tenant's own controller exactly as on the solo path; only the
+        frontier *scoring* is pooled. A single pending frontier goes
+        through the controller's own ``_score_frontier`` launch, so
+        solo-tenant decisions stay bit-identical to ``maybe_refit``;
+        with several pending tenants the fleet kernel scores every
+        frontier row against its own histogram in one launch (padding
+        is score-neutral — see ``score_requests``)."""
+        pending = []
+        for t in tenants:
+            if not t.controller.check_due:
+                continue
+            out = t.controller.begin_check(
+                cost_bytes_fn=lambda c, _t=t:
+                    _t.allocator.migration_cost_bytes(
+                        self._deploy_schedule(c)))
+            if out is None:
+                continue
+            if isinstance(out, ScoreRequest):
+                pending.append((t, out))
+            else:
+                self._apply_refit(t, out)
+        if not pending:
+            return
+        self.n_score_launches += 1
+        self.n_frontiers_scored += len(pending)
+        if len(pending) == 1:
+            t, req = pending[0]
+            scores = [_score_frontier(req.rows, req.support, req.freqs,
+                                      page_size=req.page_size)]
+        else:
+            # group by page_size (a static kernel parameter); in
+            # practice one group — one launch per tick
+            by_ps: Dict[int, List] = {}
+            for t, req in pending:
+                by_ps.setdefault(req.page_size, []).append(req)
+            scored = {}
+            for reqs in by_ps.values():
+                for req, s in zip(reqs, score_requests(reqs)):
+                    scored[id(req)] = s
+            self.n_score_launches += len(by_ps) - 1
+            scores = [scored[id(req)] for _, req in pending]
+        for (t, req), s in zip(pending, scores):
+            self._apply_refit(t, t.controller.finish_check(req, s))
 
     # -- arbitration ---------------------------------------------------------
     def _refresh_pressure(self) -> None:

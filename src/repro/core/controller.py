@@ -85,6 +85,12 @@ class ControllerConfig:
     device: bool = False                 # device-resident observe sketch
     device_buckets: int = 1 << 13        # dense bucket count
     device_bucket_width: int = 1         # bucket grid (serving: align)
+    # Single-launch observe windows: observe_many batches buffer on
+    # host and the whole cadence window folds into the sketch in ONE
+    # fused dispatch at the drift check — which also emits the drift
+    # scalar, so a window costs 1 dispatch + (at most) 1 scalar sync.
+    # False restores the one-launch-per-batch device path.
+    fused_observe: bool = True           # device path: buffer + fuse
     # Predictive refit seam: a DemandForecaster makes the drift gate
     # fire on the FORECAST mixture — when the live sketch is still
     # covered but the forecaster (periodicity detected over the ring of
@@ -119,6 +125,28 @@ class RefitDecision:
     at_observation: int              # controller clock when decided
     predictive: bool = False         # decided on the FORECAST mixture
     forecast_drift: float = 0.0      # distance(reference, forecast mixture)
+
+
+@dataclasses.dataclass
+class ScoreRequest:
+    """A candidate frontier whose gates all passed, waiting for waste
+    scores — the seam that lets :class:`~repro.core.arbiter.TenantArbiter`
+    batch many tenants' frontiers into one ``waste_eval`` launch.
+
+    Produced by :meth:`SlabController.begin_check`; hand the scores for
+    ``rows`` (row 0 is the current schedule) to
+    :meth:`SlabController.finish_check` to complete the decision.
+    """
+
+    rows: List[np.ndarray]           # candidate schedules, row 0 = current
+    support: np.ndarray              # histogram the frontier is scored on
+    freqs: np.ndarray
+    page_size: int
+    drift: float
+    cost_bytes_fn: Optional[Callable[[np.ndarray], float]]
+    predictive: bool = False
+    forecast_drift: float = 0.0
+    new_reference: object = None     # blend reference (predictive path)
 
 
 def _quantize_up(chunks: np.ndarray, align: int) -> np.ndarray:
@@ -156,6 +184,54 @@ def _score_frontier(rows: List[np.ndarray], support: np.ndarray,
         from repro.core.waste import waste_batch_jax
         scores = waste_batch_jax(batch, support, freqs, page_size=page_size)
     return np.asarray(scores, dtype=np.float64)
+
+
+def score_requests(reqs: List["ScoreRequest"]) -> List[np.ndarray]:
+    """Score several candidate frontiers — each against its OWN
+    histogram — in ONE batched ``waste_eval_fleet`` launch.
+
+    All requests must share ``page_size`` (a static kernel parameter;
+    the arbiter groups by it). Padding is score-neutral: schedules pad
+    by repeating their top chunk (duplicate classes are waste-neutral),
+    histograms pad with size-0/freq-0 buckets (zero waste contribution)
+    — so each request's scores are exactly what its own
+    :func:`_score_frontier` launch would produce.
+    """
+    page_size = reqs[0].page_size
+    if any(r.page_size != page_size for r in reqs):
+        raise ValueError("score_requests needs a uniform page_size")
+    batches = [_pad_rows(r.rows) for r in reqs]
+    kmax = max(b.shape[1] for b in batches)
+    smax = max(r.support.size for r in reqs)
+    rows_out, sup_out, frq_out, splits = [], [], [], []
+    for r, b in zip(reqs, batches):
+        if b.shape[1] < kmax:
+            b = np.concatenate(
+                [b, np.repeat(b[:, -1:], kmax - b.shape[1], axis=1)], axis=1)
+        sup = np.zeros(smax, dtype=np.int64)
+        frq = np.zeros(smax, dtype=np.float64)
+        sup[:r.support.size] = r.support
+        frq[:r.freqs.size] = r.freqs
+        rows_out.append(b)
+        sup_out.append(np.broadcast_to(sup, (b.shape[0], smax)))
+        frq_out.append(np.broadcast_to(frq, (b.shape[0], smax)))
+        splits.append(b.shape[0])
+    chunks = np.concatenate(rows_out, axis=0)
+    supports = np.concatenate(sup_out, axis=0)
+    freqs = np.concatenate(frq_out, axis=0)
+    try:
+        from repro.kernels.ops import waste_eval_fleet
+        scores = np.asarray(waste_eval_fleet(chunks, supports, freqs,
+                                             page_size=page_size),
+                            dtype=np.float64)
+    except Exception:  # pragma: no cover - kernel stack unavailable
+        return [_score_frontier(r.rows, r.support, r.freqs,
+                                page_size=page_size) for r in reqs]
+    out, at = [], 0
+    for n in splits:
+        out.append(scores[at:at + n])
+        at += n
+    return out
 
 
 class SlabController:
@@ -199,7 +275,8 @@ class SlabController:
             self.sketch = DeviceSizeSketch(
                 half_life=half_life,
                 num_buckets=self.config.device_buckets,
-                bucket_width=self.config.device_bucket_width)
+                bucket_width=self.config.device_bucket_width,
+                window=self.config.fused_observe)
         else:
             self.sketch = DecayedSizeHistogram(
                 half_life=half_life, max_bins=self.config.max_bins)
@@ -285,6 +362,12 @@ class SlabController:
                                   self.sketch.snapshot_weights(),
                                   metric=self.config.drift_metric)
 
+    @property
+    def check_due(self) -> bool:
+        """True when the next :meth:`maybe_refit`/:meth:`begin_check`
+        will actually run a drift check (the cadence is due)."""
+        return self._since_check >= self.config.check_every
+
     def maybe_refit(self,
                     cost_bytes_fn: Optional[Callable[[np.ndarray], float]]
                     = None) -> Optional[RefitDecision]:
@@ -293,25 +376,55 @@ class SlabController:
         Returns ``None`` between checks; otherwise a :class:`RefitDecision`
         (``approved`` tells the caller whether to apply ``chunks``).
         """
+        out = self.begin_check(cost_bytes_fn)
+        if not isinstance(out, ScoreRequest):
+            return out
+        scores = _score_frontier(out.rows, out.support, out.freqs,
+                                 page_size=out.page_size)
+        return self.finish_check(out, scores)
+
+    def begin_check(self,
+                    cost_bytes_fn: Optional[Callable[[np.ndarray], float]]
+                    = None):
+        """First half of a drift check: run every gate up to candidate
+        scoring. Returns ``None`` (not due / nothing observed), a
+        final :class:`RefitDecision` (a gate declined), or a
+        :class:`ScoreRequest` the caller must score and pass to
+        :meth:`finish_check` — the arbiter batches many tenants'
+        requests into one ``waste_eval`` launch; :meth:`maybe_refit`
+        scores a single request inline.
+        """
         if self._since_check < self.config.check_every:
             return None
         self._since_check = 0
         self.n_checks += 1
         if self._device:
-            # Fused device path: the sketch was updated on device by
-            # observe_many; the drift gate compares two resident weight
-            # vectors on device too. Only the one gate scalar crosses to
-            # host here — the sketch is materialized solely inside
-            # _evaluate_refit, i.e. when the drift+cooldown gates have
+            # Fused device path: the whole cadence window of buffered
+            # observe batches folds into the resident sketch in ONE
+            # dispatch here, which also emits the drift distance vs the
+            # resident reference — so the window costs one launch and
+            # the gate costs one scalar readback. The sketch is
+            # materialized solely when the drift+cooldown gates have
             # already passed.
             if self.sketch.n_observed == 0:
                 return None
+            drift_dev = None
+            if self.reference is not None:
+                drift_dev = self.sketch.flush_window(
+                    reference=self.reference,
+                    metric=self.config.drift_metric)
+            else:
+                self.sketch.flush_window()
             if self._forecast_on:
                 self._record_window_device()
             if self.reference is None:
                 self.reference = self.sketch.weights_device
                 return None
-            drift = self.drift()
+            if drift_dev is None:
+                drift = self.drift()    # nothing was buffered this window
+            else:
+                self.sketch.n_scalar_syncs += 1
+                drift = float(drift_dev)
         else:
             live = self.sketch.snapshot_weights()
             if live[0].size == 0:
@@ -342,7 +455,7 @@ class SlabController:
         if (self.n_observed - self._last_refit_at
                 < self.config.min_items_between_refits):
             return self._decide(False, "cooldown", drift)
-        return self._evaluate_refit(drift, cost_bytes_fn)
+        return self._frontier_request(drift, cost_bytes_fn)
 
     # -- predictive path (ControllerConfig.forecast) -------------------------
     def _record_window_device(self) -> None:
@@ -359,10 +472,10 @@ class SlabController:
         self.forecaster.record_window(self._stream, demand_bytes=demand,
                                       device_weights=w)
 
-    def _maybe_predictive(self, drift: float,
-                          cost_bytes_fn) -> Optional[RefitDecision]:
-        """Fire the refit pipeline on the FORECAST mixture, or return
-        ``None`` to fall through to the reactive hold. Gates, in order:
+    def _maybe_predictive(self, drift: float, cost_bytes_fn):
+        """Fire the refit pipeline on the FORECAST mixture — returning
+        a decision or a :class:`ScoreRequest` — or return ``None`` to
+        fall through to the reactive hold. Gates, in order:
         a period must be detected with ``forecast_min_confidence``
         autocorrelation, the forecast mixture must exceed the same
         drift threshold, and the shared refit cooldown must be clear."""
@@ -390,8 +503,8 @@ class SlabController:
                 < cfg.min_items_between_refits):
             return self._decide(False, "forecast-cooldown", drift,
                                 predictive=True, forecast_drift=fdrift)
-        return self._evaluate_refit(drift, cost_bytes_fn, forecast=fc,
-                                    forecast_drift=fdrift)
+        return self._frontier_request(drift, cost_bytes_fn, forecast=fc,
+                                      forecast_drift=fdrift)
 
     def _forecast_mixture(self, fc):
         """``(support, freqs, new_reference)`` of the live/forecast
@@ -420,9 +533,11 @@ class SlabController:
         keep = freqs > 0
         return bs[keep], freqs[keep], (bs, bw)
 
-    def _evaluate_refit(self, drift: float, cost_bytes_fn, *,
-                        forecast=None,
-                        forecast_drift: float = 0.0) -> RefitDecision:
+    def _frontier_request(self, drift: float, cost_bytes_fn, *,
+                          forecast=None, forecast_drift: float = 0.0):
+        """Build the candidate frontier once every gate up to scoring
+        has passed: returns a :class:`ScoreRequest`, or a final
+        :class:`RefitDecision` when there is nothing to score."""
         cfg = self.config
         predictive = forecast is not None
         if predictive:
@@ -447,8 +562,26 @@ class SlabController:
             cfg.align)
         if defaults.size:
             candidates.append(defaults)
-        scores = _score_frontier(candidates, support, freqs,
-                                 page_size=cfg.page_size)
+        return ScoreRequest(rows=candidates, support=support, freqs=freqs,
+                            page_size=cfg.page_size, drift=drift,
+                            cost_bytes_fn=cost_bytes_fn,
+                            predictive=predictive,
+                            forecast_drift=forecast_drift,
+                            new_reference=new_reference)
+
+    def finish_check(self, req: ScoreRequest,
+                     scores: np.ndarray) -> RefitDecision:
+        """Second half of a drift check: turn the waste ``scores`` of
+        ``req.rows`` (however they were computed — inline or in a
+        fleet-batched launch) into the final decision."""
+        cfg = self.config
+        drift = req.drift
+        forecast_drift = req.forecast_drift
+        predictive = req.predictive
+        new_reference = req.new_reference
+        cost_bytes_fn = req.cost_bytes_fn
+        candidates = req.rows
+        scores = np.asarray(scores, dtype=np.float64)
         best = int(np.argmin(scores[1:])) + 1   # best non-current candidate
         winner = candidates[best]
         # The frontier scores ARE the waste values (row 0 is the current

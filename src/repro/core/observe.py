@@ -63,6 +63,7 @@ class DecayedSizeHistogram:
         self.n_observed = 0                  # lifetime count (undecayed)
         self._total = 0.0                    # decayed total weight
         self.n_host_syncs = 0                # snapshot materializations
+        self.n_dispatches = 0                # device launches (host: none)
 
     # -- updates -----------------------------------------------------------
     def observe(self, size: int, weight: float = 1.0) -> None:
@@ -164,6 +165,7 @@ class DecayedSizeHistogram:
         self.n_observed = 0
         self._total = 0.0
         self.n_host_syncs = 0
+        self.n_dispatches = 0
 
 
 def __getattr__(name):
@@ -179,6 +181,43 @@ def __getattr__(name):
             DeprecationWarning, stacklevel=2)
         return DecayedSizeHistogram
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+_WINDOW_FLUSH: Dict[tuple, object] = {}
+
+
+def _window_flush_fn(metric: str, use_kernel: bool, interpret: bool,
+                     bucket_width: int, with_ref: bool, donate: bool):
+    """One jitted program for a whole observe window: the scanned
+    sketch update (kernel or oracle engine) plus — when a reference is
+    supplied — the drift distance of the post-window state, emitted as
+    a single device scalar. Cached per static configuration."""
+    key = (metric, use_kernel, interpret, bucket_width, with_ref, donate)
+    fn = _WINDOW_FLUSH.get(key)
+    if fn is not None:
+        return fn
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.sketch_update import (sketch_window_pallas,
+                                             sketch_window_ref)
+
+    def run(state, sizes, weights, lengths, decay, decay_totals, ref):
+        if use_kernel:
+            new = sketch_window_pallas(state, sizes, weights, lengths,
+                                       decay, decay_totals,
+                                       bucket_width=bucket_width,
+                                       interpret=interpret)
+        else:
+            new = sketch_window_ref(state, sizes, weights, lengths,
+                                    decay, decay_totals,
+                                    bucket_width=bucket_width)
+        drift = (_dense_distance(ref, new, metric) if with_ref
+                 else jnp.float32(0.0))
+        return new, drift
+
+    fn = jax.jit(run, donate_argnums=(0,) if donate else ())
+    _WINDOW_FLUSH[key] = fn
+    return fn
 
 
 class DeviceSizeSketch:
@@ -209,7 +248,10 @@ class DeviceSizeSketch:
 
     def __init__(self, *, half_life: Optional[float] = None,
                  num_buckets: int = 1 << 13, bucket_width: int = 1,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 window: bool = False,
+                 window_kernel: Optional[bool] = None,
+                 max_pending_batches: int = 512):
         if half_life is not None and half_life <= 0:
             raise ValueError(f"half_life must be positive, got {half_life}")
         if num_buckets < 2:
@@ -224,8 +266,21 @@ class DeviceSizeSketch:
         self._decay = 0.5 ** (1.0 / half_life) if half_life else 1.0
         self._interpret = interpret
         self._use_ref = False       # latched once the Pallas path fails
+        # window=True turns observe_many into an accumulator: batches
+        # buffer on host (raw, untouched) and fold into the sketch in
+        # ONE fused dispatch at flush_window() — or transparently, the
+        # moment any state view is read. window_kernel picks the scan
+        # engine: None = Pallas kernel on TPU, jnp oracle elsewhere
+        # (the interpret-mode kernel would be slower than the host
+        # dict); True/False forces it.
+        self._window = bool(window)
+        self._window_kernel = window_kernel
+        self._max_pending = int(max_pending_batches)
+        self._pending: list = []    # [(sizes_row, weights_row|None, n), ...]
+        self._escaped = False       # a weights_device ref is held outside
         self._weights = jnp.zeros(num_buckets, dtype=jnp.float32)
         self.n_observed = 0                  # lifetime count (undecayed)
+        self.n_dispatches = 0                # jitted observe-loop launches
         self.n_host_syncs = 0                # full materializations
         self.n_scalar_syncs = 0              # few-byte scalar readbacks
 
@@ -251,65 +306,182 @@ class DeviceSizeSketch:
         """Record one size (a one-element batch; prefer observe_many)."""
         self.observe_many([int(size)], [float(weight)])
 
+    def _normalize_batch(self, sizes, weights):
+        """``(sizes_row, weights_row|None, n)`` with host arrays kept on
+        host (stacking pads them for free; the single device transfer
+        happens at dispatch) and device arrays left on device."""
+        if not hasattr(sizes, "ravel"):
+            sizes = np.asarray(sizes)
+        sizes = sizes.ravel() if sizes.ndim != 1 else sizes
+        n = int(sizes.shape[0])
+        if weights is not None:
+            if isinstance(weights, (int, float)):
+                weights = np.full(n, weights, dtype=np.float32)
+            elif not hasattr(weights, "ravel"):
+                weights = np.asarray(weights, dtype=np.float32)
+        return sizes, weights, n
+
     def observe_many(self, sizes, weights=None) -> None:
-        """Record a batch of sizes in ONE kernel launch.
+        """Record a batch of sizes — ONE jitted dispatch (or zero, in
+        window mode, where batches buffer until ``flush_window``).
 
         ``sizes`` may be a host array or a device array straight out of
-        a serve step — either way nothing is pulled back to host. Each
-        item i of an n-item batch is folded in with ``decay**(n-1-i)``,
-        matching n sequential host observations exactly.
+        a serve step — either way nothing is pulled back to host, and
+        bucketization happens inside the jit (the host hands over raw
+        sizes). Each item i of an n-item batch is folded in with
+        ``decay**(n-1-i)``, matching n sequential host observations
+        exactly.
         """
-        jnp = self._jnp
-        idx = self.bucket_of(sizes)
-        n = int(idx.shape[0])
-        if n == 0:
+        row = self._normalize_batch(sizes, weights)
+        if row[2] == 0:
             return
-        w = (jnp.ones(n, dtype=jnp.float32) if weights is None
-             else jnp.broadcast_to(
-                 jnp.asarray(weights, dtype=jnp.float32), (n,)))
-        if self._decay != 1.0:
-            w = w * jnp.power(jnp.float32(self._decay),
-                              jnp.arange(n - 1, -1, -1, dtype=jnp.float32))
-        # Pad the batch to the kernel's block size HERE, outside the jit
-        # boundary: serving batch lengths vary nearly every step, and
-        # each distinct traced shape would recompile the launch. Padding
-        # ids are -1 (no bucket matches) with zero weight, and
-        # decay_total stays decay**n of the REAL batch length.
+        self.n_observed += row[2]
+        if self._window:
+            self._pending.append(row)
+            if len(self._pending) >= self._max_pending:
+                self.flush_window()     # bound host memory, not a sync
+            return
+        self._launch([row])
+
+    def observe_window(self, sizes_chunk, weights_chunk=None, *,
+                       reference=None, metric: str = "l1"):
+        """Fold a whole chunk of observe batches in ONE fused dispatch.
+
+        ``sizes_chunk`` is a sequence of batches (ragged is fine) or a
+        2-D ``[n_batches, batch]`` array; ``weights_chunk`` optionally
+        matches its shape. Bit-equivalent to calling ``observe_many``
+        per batch — but the scan over ``sketch_update`` steps, the
+        per-item decay, and (when ``reference`` is given) the drift
+        distance of the post-window state compile into a single launch.
+        (On the kernel engine, bit-equivalence holds when the batch
+        lengths share one BLOCK_N pad band — uniform serving batches
+        always do; mixed bands round within ~1 f32 ulp. The jnp oracle
+        engine is bit-stable for any raggedness.)
+        Returns the drift as a 0-d device array (no host sync) when
+        ``reference`` is supplied, else ``None``. Any batches buffered
+        in window mode are folded into the same dispatch first.
+        """
+        rows = self._pending
+        self._pending = []
+        for i, batch in enumerate(sizes_chunk):
+            w = None if weights_chunk is None else weights_chunk[i]
+            row = self._normalize_batch(batch, w)
+            if row[2]:
+                self.n_observed += row[2]
+                rows.append(row)
+        if not rows:
+            return None
+        return self._launch(rows, reference=reference, metric=metric)
+
+    def flush_window(self, *, reference=None, metric: str = "l1"):
+        """Fold every buffered batch into the sketch in one dispatch.
+
+        Returns the drift vs ``reference`` as a 0-d device array when a
+        reference is given, else ``None``; no-op when nothing is
+        pending. Reading any state view (``weights_device``,
+        ``snapshot*``, ``effective_count``) flushes implicitly, so
+        buffering is invisible to consumers of the sketch.
+        """
+        if not self._pending:
+            return None
+        rows, self._pending = self._pending, []
+        return self._launch(rows, reference=reference, metric=metric)
+
+    def _stacked(self, rows):
+        """Stack buffered rows into ``(sizes2d, weights2d, lengths,
+        decay_totals)``. Shapes are padded up to powers of two (B) and
+        power-of-two multiples of BLOCK_N (N) so ragged serving windows
+        reuse a handful of compiled programs instead of one per shape;
+        dead positions/rows are exact no-ops in the scan. Per-row
+        ``decay ** n`` is computed here, in host float64, so the fused
+        path rounds identically to the per-batch path."""
         from repro.kernels.sketch_update import BLOCK_N
-        pad = (-n) % BLOCK_N
-        if pad:
-            idx = jnp.pad(idx, (0, pad), constant_values=-1)
-            w = jnp.pad(w, (0, pad))
-        if not self._use_ref:
-            try:
-                from repro.kernels.ops import sketch_update
-                self._weights = sketch_update(self._weights, idx, w,
-                                              self._decay ** n,
-                                              interpret=self._interpret)
-                self.n_observed += n
-                return
-            except Exception as e:  # pragma: no cover - pallas unavailable
-                # Latched: don't re-pay a doomed trace per batch (a
-                # kernel *bug* still surfaces through the dedicated
-                # kernel-vs-oracle tests, which call the launch
-                # directly) — but say so once, or a production run would
-                # silently measure the fallback while reporting itself
-                # as the kernel path.
-                import warnings
-                warnings.warn(
-                    "DeviceSizeSketch: Pallas sketch_update launch "
-                    f"failed ({e!r}); latching the jnp fallback for "
-                    "this sketch", RuntimeWarning)
-                self._use_ref = True
-        from repro.kernels.sketch_update import sketch_update_ref
-        self._weights = sketch_update_ref(self._weights, idx, w,
-                                          self._decay ** n)
-        self.n_observed += n
+        import jax
+        b = len(rows)
+        lengths = np.zeros(1 << (b - 1).bit_length(), dtype=np.int32)
+        lengths[:b] = [n for (_, _, n) in rows]
+        nmax = int(lengths.max())
+        npad = BLOCK_N << max(0, -(-nmax // BLOCK_N) - 1).bit_length()
+        decay_totals = np.asarray([self._decay ** int(n) for n in lengths],
+                                  dtype=np.float32)
+        on_device = any(isinstance(s, jax.Array) for (s, _, _) in rows)
+        if on_device:
+            jnp = self._jnp
+            sizes2d = jnp.zeros((len(lengths), npad), dtype=jnp.int32)
+            weights2d = jnp.ones((len(lengths), npad), dtype=jnp.float32)
+            for i, (s, w, n) in enumerate(rows):
+                sizes2d = sizes2d.at[i, :n].set(
+                    jnp.asarray(s).astype(jnp.int32))
+                if w is not None:
+                    weights2d = weights2d.at[i, :n].set(
+                        jnp.asarray(w, dtype=jnp.float32))
+            return sizes2d, weights2d, lengths, decay_totals
+        sizes2d = np.zeros((len(lengths), npad), dtype=np.int32)
+        weights2d = np.ones((len(lengths), npad), dtype=np.float32)
+        for i, (s, w, n) in enumerate(rows):
+            sizes2d[i, :n] = s
+            if w is not None:
+                weights2d[i, :n] = np.broadcast_to(w, (n,))
+        return sizes2d, weights2d, lengths, decay_totals
+
+    def _launch(self, rows, *, reference=None, metric: str = "l1"):
+        """One fused dispatch folding ``rows`` into the sketch; returns
+        the drift device scalar when ``reference`` is given."""
+        import jax
+        sizes2d, weights2d, lengths, decay_totals = self._stacked(rows)
+        with_ref = reference is not None
+        ref = reference if with_ref else np.float32(0.0)
+        use_kernel = (self._window_kernel if self._window_kernel is not None
+                      else (not self._use_ref
+                            and jax.default_backend() == "tpu"))
+        interpret = False
+        if use_kernel:
+            from repro.kernels.ops import _default_interpret
+            interpret = (self._interpret if self._interpret is not None
+                         else _default_interpret())
+        # Donate the carried state so the fused update runs in place —
+        # unless a caller still holds a reference to the current buffer
+        # (the controller's drift reference, a forecast window), which
+        # donation would invalidate. CPU ignores donation; skip it
+        # there to avoid per-launch warnings.
+        donate = jax.default_backend() != "cpu" and not self._escaped
+        decay = np.float32(self._decay)
+        try:
+            fn = _window_flush_fn(metric, use_kernel, interpret,
+                                  self.bucket_width, with_ref, donate)
+            new, drift = fn(self._weights, sizes2d, weights2d, lengths,
+                            decay, decay_totals, ref)
+        except Exception as e:  # pragma: no cover - pallas unavailable
+            if not use_kernel:
+                raise
+            # Latched: don't re-pay a doomed trace per window — but say
+            # so once, or a production run would silently measure the
+            # fallback while reporting itself as the kernel path.
+            import warnings
+            warnings.warn(
+                "DeviceSizeSketch: Pallas sketch_window launch failed "
+                f"({e!r}); latching the jnp fallback for this sketch",
+                RuntimeWarning)
+            self._use_ref = True
+            fn = _window_flush_fn(metric, False, False, self.bucket_width,
+                                  with_ref, donate)
+            new, drift = fn(self._weights, sizes2d, weights2d, lengths,
+                            decay, decay_totals, ref)
+        self._weights = new
+        self._escaped = False
+        self.n_dispatches += 1
+        return drift if with_ref else None
 
     # -- views -------------------------------------------------------------
     @property
     def weights_device(self):
-        """The dense per-bucket weight vector (device array, no sync)."""
+        """The dense per-bucket weight vector (device array, no sync).
+
+        Flushes any buffered window first, and marks the buffer as
+        escaped: the next fused launch will not donate a buffer the
+        caller may still be holding."""
+        self.flush_window()
+        self._escaped = True
         return self._weights
 
     @property
@@ -322,11 +494,13 @@ class DeviceSizeSketch:
     @property
     def effective_count(self) -> float:
         """Decayed total mass (scalar readback, not a materialization)."""
+        self.flush_window()
         self.n_scalar_syncs += 1
         return float(self._jnp.sum(self._weights))
 
     def snapshot(self) -> Tuple[np.ndarray, np.ndarray]:
         """``(support, freqs)`` int64 — THE device→host sync point."""
+        self.flush_window()
         self.n_host_syncs += 1
         w = np.asarray(self._weights)
         freqs = np.rint(w).astype(np.int64)
@@ -337,6 +511,7 @@ class DeviceSizeSketch:
 
     def snapshot_weights(self) -> Tuple[np.ndarray, np.ndarray]:
         """Float-weight variant of :meth:`snapshot` (no rounding)."""
+        self.flush_window()
         self.n_host_syncs += 1
         w = np.asarray(self._weights, dtype=np.float64)
         keep = w > 0.0
@@ -347,7 +522,10 @@ class DeviceSizeSketch:
     def reset(self) -> None:
         self._weights = self._jnp.zeros(self.num_buckets,
                                         dtype=self._jnp.float32)
+        self._pending = []
+        self._escaped = False
         self.n_observed = 0
+        self.n_dispatches = 0
         self.n_host_syncs = 0
         self.n_scalar_syncs = 0
 
@@ -367,34 +545,42 @@ def _aligned(a: Tuple[np.ndarray, np.ndarray],
     return support, pa, pb
 
 
+def _dense_distance(wa, wb, metric: str):
+    """jnp body of the dense-histogram distance — shared by
+    :func:`histogram_distance_device` and the fused observe-window
+    flush, so the in-scan drift scalar and the standalone gate are the
+    same traced ops."""
+    import jax.numpy as jnp
+    wa = wa.astype(jnp.float32)
+    wb = wb.astype(jnp.float32)
+    ta = jnp.sum(wa)
+    tb = jnp.sum(wb)
+    pa = wa / jnp.maximum(ta, 1e-30)
+    pb = wb / jnp.maximum(tb, 1e-30)
+    if metric == "l1":
+        d = 0.5 * jnp.sum(jnp.abs(pa - pb))
+    else:
+        # emd on a uniform bucket grid: the bucket width cancels, and
+        # the host metric's span is the occupied extent (empty edge
+        # buckets contribute zero cdf gap, so only the denominator
+        # needs the occupied first/last bucket).
+        occupied = (wa > 0) | (wb > 0)
+        first = jnp.argmax(occupied)
+        last = wa.shape[0] - 1 - jnp.argmax(occupied[::-1])
+        cdf_gap = jnp.abs(jnp.cumsum(pa - pb))[:-1]
+        d = jnp.sum(cdf_gap) / jnp.maximum(last - first, 1)
+    # empty-vs-empty is 0, empty-vs-mass is 1 (host semantics)
+    both = (ta > 0) & (tb > 0)
+    return jnp.where(both, d, jnp.where(ta == tb, 0.0, 1.0))
+
+
 def _histogram_distance_device_jit(metric: str):
     """Build the jitted dense-histogram distance for one metric."""
     import jax
-    import jax.numpy as jnp
 
     @jax.jit
     def dist(wa, wb):
-        wa = wa.astype(jnp.float32)
-        wb = wb.astype(jnp.float32)
-        ta = jnp.sum(wa)
-        tb = jnp.sum(wb)
-        pa = wa / jnp.maximum(ta, 1e-30)
-        pb = wb / jnp.maximum(tb, 1e-30)
-        if metric == "l1":
-            d = 0.5 * jnp.sum(jnp.abs(pa - pb))
-        else:
-            # emd on a uniform bucket grid: the bucket width cancels, and
-            # the host metric's span is the occupied extent (empty edge
-            # buckets contribute zero cdf gap, so only the denominator
-            # needs the occupied first/last bucket).
-            occupied = (wa > 0) | (wb > 0)
-            first = jnp.argmax(occupied)
-            last = wa.shape[0] - 1 - jnp.argmax(occupied[::-1])
-            cdf_gap = jnp.abs(jnp.cumsum(pa - pb))[:-1]
-            d = jnp.sum(cdf_gap) / jnp.maximum(last - first, 1)
-        # empty-vs-empty is 0, empty-vs-mass is 1 (host semantics)
-        both = (ta > 0) & (tb > 0)
-        return jnp.where(both, d, jnp.where(ta == tb, 0.0, 1.0))
+        return _dense_distance(wa, wb, metric)
 
     return dist
 

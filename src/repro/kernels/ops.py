@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.core.distribution import PAGE_SIZE
 from repro.kernels.sketch_update import sketch_update_pallas
 from repro.kernels.slab_attention import slab_decode_attention_pallas
-from repro.kernels.waste_eval import waste_eval_pallas
+from repro.kernels.waste_eval import waste_eval_fleet_pallas, waste_eval_pallas
 
 
 def _default_interpret() -> bool:
@@ -37,6 +37,19 @@ def waste_eval(chunk_batch, support, freqs, *, page_size: int = PAGE_SIZE,
     return waste_eval_pallas(jnp.asarray(chunk_batch),
                              jnp.asarray(support), jnp.asarray(freqs),
                              page_size=page_size, interpret=interpret)
+
+
+def waste_eval_fleet(chunk_batch, supports, freqs, *,
+                     page_size: int = PAGE_SIZE,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """(B, K) schedules x (B, S) per-row histograms -> (B,) waste — the
+    one-launch fleet scorer behind ``TenantArbiter``'s batched checks."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return waste_eval_fleet_pallas(jnp.asarray(chunk_batch),
+                                   jnp.asarray(supports),
+                                   jnp.asarray(freqs),
+                                   page_size=page_size, interpret=interpret)
 
 
 def slab_decode_attention(q, k_pool, v_pool, starts, lens, *,

@@ -109,3 +109,103 @@ def sketch_update_ref(state, bucket_idx, weights, decay_total) -> jnp.ndarray:
     idx = jnp.where(valid, bucket_idx, 0).astype(jnp.int32)
     w = jnp.where(valid, weights.astype(jnp.float32), 0.0)
     return decayed.at[idx].add(w)
+
+
+# ---------------------------------------------------------------------------
+# Fused observe window: one dispatch per cadence window
+# ---------------------------------------------------------------------------
+
+# Trace-time side-effect counter: bumped once per (re)trace of a window
+# scan, so tests can assert that feeding many same-shaped windows does
+# NOT recompile (the dispatch-count regression test).
+WINDOW_TRACE_COUNT = 0
+
+
+def _bucketize(sizes_row, bucket_width: int, num_buckets: int):
+    """Device-side bucket ids: ``ceil(s / width) - 1`` clipped into the
+    grid; negative sizes map to -1, which the scatter ignores. Same
+    mapping as ``DeviceSizeSketch.bucket_of`` — moved inside the jit so
+    the host hands over RAW sizes."""
+    s = sizes_row.astype(jnp.int32)
+    idx = -(-s // jnp.int32(bucket_width)) - 1
+    return jnp.where(s < 0, -1, jnp.clip(idx, 0, num_buckets - 1))
+
+
+def _window_scan(state, sizes, weights, lengths, decay, decay_totals, *,
+                 bucket_width: int, update):
+    """``lax.scan`` over a stacked ``(B, N)`` chunk of observe batches,
+    threading the sketch state through one ``update`` step per batch.
+
+    Row semantics match B sequential ``observe_many`` calls exactly:
+    item i of row b's ``lengths[b]``-item batch carries
+    ``decay ** (lengths[b]-1-i)`` and the carried state decays once by
+    ``decay_totals[b]`` (host-computed ``decay ** lengths[b]``, so the
+    float64→float32 rounding matches the per-batch path bit-for-bit).
+    Positions at or past ``lengths[b]`` are dead: bucket id -1, weight
+    exactly 0.0 — and a zero-length row is an exact no-op, which makes
+    padding B up to a stable shape free. The decay exponent is clamped
+    at 0 on dead positions so ``decay ** huge`` can never underflow
+    into an ``inf * 0`` NaN.
+    """
+    global WINDOW_TRACE_COUNT
+    WINDOW_TRACE_COUNT += 1
+    num_buckets = state.shape[0]
+    pos = jnp.arange(sizes.shape[1], dtype=jnp.int32)
+    decay = jnp.asarray(decay, dtype=jnp.float32)
+
+    def step(st, xs):
+        s_row, w_row, n, dtot = xs
+        live = pos < n
+        idx = jnp.where(live, _bucketize(s_row, bucket_width, num_buckets),
+                        -1)
+        expo = jnp.maximum(n - 1 - pos, 0).astype(jnp.float32)
+        w = jnp.where(live, w_row.astype(jnp.float32) * jnp.power(decay,
+                                                                  expo),
+                      0.0)
+        return update(st, idx, w, dtot), None
+
+    out, _ = jax.lax.scan(
+        step, state.astype(jnp.float32),
+        (sizes, weights, lengths.astype(jnp.int32),
+         decay_totals.astype(jnp.float32)))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_width", "interpret"))
+def sketch_window_pallas(state, sizes, weights, lengths, decay,
+                         decay_totals, *, bucket_width: int = 1,
+                         interpret: bool = False) -> jnp.ndarray:
+    """(BINS,) state x (B, N) raw sizes -> new state, ONE dispatch.
+
+    The scanned-window variant of ``sketch_update_pallas``: bucketize +
+    per-item decay + B kernel steps compile into a single XLA program,
+    so a whole cadence window of observe batches costs one launch
+    instead of B. ``lengths[b]`` is row b's real batch length (rows are
+    right-padded); see ``_window_scan`` for the exact equivalence
+    contract.
+
+    Rounding contract: results are BIT-identical to B per-batch
+    launches whenever N matches what each per-batch launch padded to —
+    i.e. all batch lengths fall in one BLOCK_N pad band (uniform
+    serving batches always do). Across bands the padded grid shape
+    changes, and XLA does not promise identical rounding across
+    different programs: expect ~1 f32 ulp of drift on the kernel
+    engine. ``sketch_window_ref`` is bit-stable for any raggedness
+    (scatter order is index-determined; zero pads are exact no-ops).
+    """
+    return _window_scan(
+        state, sizes, weights, lengths, decay, decay_totals,
+        bucket_width=bucket_width,
+        update=lambda st, idx, w, dt: sketch_update_pallas(
+            st, idx, w, dt, interpret=interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_width",))
+def sketch_window_ref(state, sizes, weights, lengths, decay,
+                      decay_totals, *, bucket_width: int = 1) -> jnp.ndarray:
+    """Pure-jnp oracle for ``sketch_window_pallas`` — and the engine of
+    choice off-TPU, where a compiled scatter beats the interpret-mode
+    kernel by orders of magnitude."""
+    return _window_scan(state, sizes, weights, lengths, decay,
+                        decay_totals, bucket_width=bucket_width,
+                        update=sketch_update_ref)

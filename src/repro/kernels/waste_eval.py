@@ -100,3 +100,98 @@ def waste_eval_pallas(chunk_batch, support, freqs, *,
         interpret=interpret,
     )(chunk_batch, support[None, :], freqs[None, :])
     return out[:b, 0]
+
+
+# ---------------------------------------------------------------------------
+# Fleet variant: B schedules against B per-row histograms (one launch
+# scoring every pending tenant's candidate frontier at once)
+# ---------------------------------------------------------------------------
+
+def _waste_eval_fleet_kernel(chunks_ref, support_ref, freqs_ref, out_ref, *,
+                             page_size: int):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    c = chunks_ref[...].astype(jnp.float32)        # (BLOCK_B, K) sorted rows
+    s = support_ref[...].astype(jnp.float32)       # (BLOCK_B, BLOCK_S)
+    f = freqs_ref[...]                             # (BLOCK_B, BLOCK_S)
+
+    k = c.shape[1]
+    assigned = jnp.full(s.shape, jnp.inf, dtype=jnp.float32)
+    for kk in range(k):  # static unroll: running min of covering chunks
+        ck = c[:, kk:kk + 1]                       # (BLOCK_B, 1)
+        assigned = jnp.minimum(assigned, jnp.where(ck >= s, ck, jnp.inf))
+    pages = jnp.maximum(jnp.ceil(s / jnp.float32(page_size)), 1.0)
+    uncovered = pages * jnp.float32(page_size) - s
+    waste = jnp.where(jnp.isfinite(assigned), assigned - s, uncovered)
+    out_ref[...] += jnp.sum(waste * f, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page_size", "interpret"))
+def waste_eval_fleet_pallas(chunk_batch, supports, freqs, *,
+                            page_size: int = PAGE_SIZE,
+                            interpret: bool = False) -> jnp.ndarray:
+    """(B, K) schedules x (B, S) PER-ROW histograms -> (B,) waste.
+
+    The multi-tenant sibling of :func:`waste_eval_pallas`: row b scores
+    schedule b against histogram b, so one launch covers every pending
+    tenant's frontier. Same tiling, same accumulation order — a row
+    whose histogram is replicated from the single-histogram call gets a
+    bit-identical score. Pads B to BLOCK_B and S to BLOCK_S (padded
+    sizes get freq 0 / size 0, zero waste).
+    """
+    b, k = chunk_batch.shape
+    s = supports.shape[1]
+    chunk_batch = jnp.sort(chunk_batch.astype(jnp.int32), axis=1)
+    supports = supports.astype(jnp.int32)
+    freqs = freqs.astype(jnp.float32)
+
+    b_pad = (-b) % BLOCK_B
+    s_pad = (-s) % BLOCK_S
+    if b_pad:
+        chunk_batch = jnp.pad(chunk_batch, ((0, b_pad), (0, 0)),
+                              constant_values=1)
+        supports = jnp.pad(supports, ((0, b_pad), (0, 0)))
+        freqs = jnp.pad(freqs, ((0, b_pad), (0, 0)))
+    if s_pad:
+        supports = jnp.pad(supports, ((0, 0), (0, s_pad)))
+        freqs = jnp.pad(freqs, ((0, 0), (0, s_pad)))
+    bp, sp = b + b_pad, s + s_pad
+
+    grid = (bp // BLOCK_B, sp // BLOCK_S)
+    out = pl.pallas_call(
+        functools.partial(_waste_eval_fleet_kernel, page_size=page_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_B, BLOCK_S), lambda i, j: (i, j)),
+            pl.BlockSpec((BLOCK_B, BLOCK_S), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        interpret=interpret,
+    )(chunk_batch, supports, freqs)
+    return out[:b, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def waste_eval_fleet_ref(chunk_batch, supports, freqs, *,
+                         page_size: int = PAGE_SIZE) -> jnp.ndarray:
+    """Pure-jnp oracle for ``waste_eval_fleet_pallas``."""
+    c = jnp.sort(chunk_batch.astype(jnp.float32), axis=1)
+
+    def row(crow, srow, frow):
+        s = srow.astype(jnp.float32)
+        covering = jnp.where(crow[:, None] >= s[None, :],
+                             crow[:, None], jnp.inf)
+        assigned = jnp.min(covering, axis=0)
+        pages = jnp.maximum(jnp.ceil(s / jnp.float32(page_size)), 1.0)
+        uncovered = pages * jnp.float32(page_size) - s
+        waste = jnp.where(jnp.isfinite(assigned), assigned - s, uncovered)
+        return jnp.sum(waste * frow.astype(jnp.float32))
+
+    return jax.vmap(row)(c, supports, freqs)

@@ -497,10 +497,20 @@ class KVSlabPool:
     def observe_lengths(self, lengths) -> None:
         """Feed one batch of request KV lengths into the controller's
         sketch (the ``batch_observe`` feeding mode). ``lengths`` may be
-        a host array or a device array straight out of a serve step —
-        on the device path the ALIGN quantization, bucketing, and the
-        decayed-histogram update all run on device in one
-        ``sketch_update`` launch, with no host round-trip."""
+        a host array or a device array straight out of a serve step.
+
+        On the device path the RAW lengths are handed over untouched:
+        the sketch's bucket grid is a multiple of ALIGN, and
+        ``ceil(ceil(s/a)*a / (m*a)) == ceil(s / (m*a))`` — bucketing
+        raw lengths lands in exactly the bucket the ALIGN-quantized
+        length would, so quantization, bucketing, and the decayed
+        update all happen inside the controller's fused observe window
+        (one dispatch per cadence, nothing computed per batch on host).
+        """
+        cfg = self.controller.config
+        if cfg.device and cfg.device_bucket_width % self.align == 0:
+            self.controller.observe_many(lengths)
+            return
         if not hasattr(lengths, "astype"):   # plain python list/tuple
             lengths = np.asarray(lengths)
         al = self.align

@@ -108,8 +108,11 @@ class ContinuousBatcher:
     def step(self, t: int) -> None:
         # In batch-observe mode (the pool's device-sketch path) alloc()
         # does not observe per item; the sizes of this step's allocations
-        # are collected and handed to the controller as ONE batch below —
-        # the serve-step outputs feed the device sketch directly.
+        # are collected and handed to the controller as ONE batch below.
+        # With the fused observe window (ControllerConfig.fused_observe)
+        # these per-step batches just accumulate on host — the whole
+        # cadence window folds into the device sketch in a single
+        # dispatch at the adaptive drift check.
         observed: List[int] = []
         self._try_admit(observed)
         done: List[int] = []

@@ -437,3 +437,104 @@ def test_two_batchers_share_one_pool_as_tenants():
     assert b1.completed > 0 and b2.completed > 0
     assert st["chat"].active_requests == 0
     assert st["batch"].allocated_tokens == 0
+
+
+# -- fleet-batched candidate scoring (one waste_eval launch per tick) --------
+
+def _fleet_arbiter(n_tenants, *, check_every=300):
+    pool = PagePool(16 * n_tenants, page_size=PAGE)
+    cfg = ControllerConfig(page_size=PAGE, k=4, check_every=check_every,
+                           half_life=float(check_every),
+                           drift_threshold=0.05,
+                           min_items_between_refits=0,
+                           min_rel_improvement=0.0, cost_weight=0.0)
+    arb = TenantArbiter(pool, controller_config=cfg,
+                        arbitrate_every=10**9)
+    for t in range(n_tenants):
+        name = f"t{t}"
+        alloc = SlabAllocator([64, 256, 1024], page_size=PAGE,
+                              page_pool=pool, tenant=name)
+        arb.register(name, alloc)
+    return arb
+
+
+def _observe_all(arb, lo, hi, n, seed):
+    rng = np.random.default_rng(seed)
+    for ten in arb.tenants.values():
+        ten.controller.observe_many(rng.integers(lo, hi, n))
+
+
+def test_arbiter_fleet_scoring_one_launch_per_tick():
+    """However many tenants' drift checks come due on the same tick,
+    every surviving candidate frontier is scored in ONE batched
+    waste_eval launch."""
+    arb = _fleet_arbiter(5)
+    _observe_all(arb, 100, 900, 300, seed=0)
+    arb.tick(0)                       # first checks adopt references
+    assert arb.n_score_launches == 0  # nothing to score yet
+    _observe_all(arb, 1500, 3800, 300, seed=1)   # everyone drifts
+    arb.tick(0)
+    assert arb.n_score_launches == 1
+    assert arb.n_frontiers_scored == 5
+    for ten in arb.tenants.values():
+        assert len(ten.controller.decisions) == 1
+
+
+def test_arbiter_fleet_decisions_match_solo_path():
+    """Fleet-batched scoring must not change a single verdict: the same
+    traffic through per-tenant solo checks (one waste_eval launch each)
+    reaches identical decisions and schedules."""
+    batched = _fleet_arbiter(4)
+    solo = _fleet_arbiter(4)
+    for phase, (lo, hi, seed) in enumerate(((100, 900, 0),
+                                            (1500, 3800, 1),
+                                            (60, 500, 2))):
+        _observe_all(batched, lo, hi, 300, seed=seed)
+        _observe_all(solo, lo, hi, 300, seed=seed)
+        batched.tick(0)               # one drain over all tenants
+        for ten in solo.tenants.values():
+            solo._maybe_refit_tenant(ten)   # one drain per tenant
+    assert batched.n_score_launches < solo.n_score_launches
+    for name in batched.tenants:
+        db = batched.tenants[name].controller.decisions
+        ds = solo.tenants[name].controller.decisions
+        assert [(d.approved, d.reason, d.drift) for d in db] \
+            == [(d.approved, d.reason, d.drift) for d in ds]
+        assert list(batched.tenants[name].controller.chunks) \
+            == list(solo.tenants[name].controller.chunks)
+        assert list(batched.tenants[name].allocator.chunk_sizes) \
+            == list(solo.tenants[name].allocator.chunk_sizes)
+
+
+def test_score_requests_matches_per_request_frontier():
+    """score_requests pools heterogeneous frontiers (different candidate
+    counts, support sizes) into one launch; padding is score-neutral, so
+    each request's scores match its own _score_frontier launch."""
+    from repro.core.controller import (ScoreRequest, _score_frontier,
+                                       score_requests)
+    rng = np.random.default_rng(7)
+    reqs = []
+    for nrows, nsup in ((2, 5), (3, 9), (4, 2)):
+        rows = [np.sort(rng.integers(64, 4000, k + 2))
+                for k in range(nrows)]
+        support = np.sort(rng.choice(
+            np.arange(64, 4000), size=nsup, replace=False)).astype(np.int64)
+        freqs = rng.integers(1, 50, nsup).astype(np.int64)
+        reqs.append(ScoreRequest(rows=rows, support=support, freqs=freqs,
+                                 page_size=PAGE, drift=0.5,
+                                 cost_bytes_fn=None))
+    fleet = score_requests(reqs)
+    for req, scores in zip(reqs, fleet):
+        solo = _score_frontier(req.rows, req.support, req.freqs,
+                               page_size=req.page_size)
+        np.testing.assert_allclose(scores, solo, rtol=1e-6)
+
+
+def test_score_requests_rejects_mixed_page_size():
+    from repro.core.controller import ScoreRequest, score_requests
+    mk = lambda ps: ScoreRequest(rows=[np.array([64, 256])],
+                                 support=np.array([100]),
+                                 freqs=np.array([5]), page_size=ps,
+                                 drift=0.0, cost_bytes_fn=None)
+    with pytest.raises(ValueError, match="page_size"):
+        score_requests([mk(4096), mk(8192)])

@@ -327,3 +327,224 @@ if HAVE_HYPOTHESIS:
             assert dense[s] == pytest.approx(w, rel=1e-3, abs=1e-5)
         assert (np.asarray(d.weights_device).sum()
                 >= h.effective_count * (1 - 1e-4))
+
+
+# -- fused observe windows (single-launch cadence) ---------------------------
+
+ENGINES = [
+    pytest.param(dict(window_kernel=False), id="jnp-oracle"),
+    pytest.param(dict(window_kernel=True, interpret=True),
+                 id="pallas-interpret"),
+]
+
+
+def _reference_sketch(rng, engine):
+    ref = DeviceSizeSketch(half_life=300.0, num_buckets=256,
+                           bucket_width=4, **engine)
+    ref.observe_many(rng.integers(1, 900, 300))
+    return ref.weights_device
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_observe_window_bitwise_matches_sequential(engine):
+    """One fused window over K ragged, weighted batches produces the
+    SAME bits as K per-batch launches — sketch and drift scalar alike.
+
+    Batch lengths here share one BLOCK_N pad band (all <= 128), where
+    the window stacks rows at exactly the width each per-batch launch
+    used — the condition under which the kernel engine is bit-stable
+    (see test_window_cross_band_rounding for the cross-band contract)."""
+    rng = np.random.default_rng(5)
+    batches = [rng.integers(1, 900, n) for n in (64, 1, 33, 100, 128)]
+    weights = [rng.uniform(0.25, 3.0, len(b)).astype(np.float32)
+               for b in batches]
+    reference = _reference_sketch(np.random.default_rng(9), engine)
+
+    seq = DeviceSizeSketch(half_life=300.0, num_buckets=256,
+                           bucket_width=4, **engine)
+    for b, w in zip(batches, weights):
+        seq.observe_many(b, w)
+    drift_seq = float(histogram_distance_device(reference,
+                                                seq.weights_device))
+
+    win = DeviceSizeSketch(half_life=300.0, num_buckets=256,
+                           bucket_width=4, window=True, **engine)
+    drift_win = win.observe_window(batches, weights, reference=reference)
+
+    assert win.n_dispatches == 1
+    assert win.n_observed == seq.n_observed
+    np.testing.assert_array_equal(np.asarray(win.weights_device),
+                                  np.asarray(seq.weights_device))
+    assert float(drift_win) == drift_seq
+
+
+def test_window_cross_band_rounding():
+    """The padding contract across BLOCK_N bands: the jnp oracle stays
+    BITWISE identical for arbitrarily ragged windows (scatter-add order
+    is index-determined; zero pads are exact no-ops), while the kernel
+    engine — whose padded grid shape changes across bands, and XLA does
+    not promise identical rounding across different programs — may
+    drift by ~1 f32 ulp, far inside every decision threshold."""
+    rng = np.random.default_rng(8)
+    lens = (64, 1, 33, 200, 300, 513)       # three different pad bands
+    batches = [rng.integers(1, 900, n) for n in lens]
+    weights = [rng.uniform(0.25, 3.0, n).astype(np.float32) for n in lens]
+    for engine, exact in ((dict(window_kernel=False), True),
+                          (dict(window_kernel=True, interpret=True),
+                           False)):
+        seq = DeviceSizeSketch(half_life=300.0, num_buckets=256,
+                               bucket_width=4, **engine)
+        for b, w in zip(batches, weights):
+            seq.observe_many(b, w)
+        win = DeviceSizeSketch(half_life=300.0, num_buckets=256,
+                               bucket_width=4, window=True, **engine)
+        win.observe_window(batches, weights)
+        a = np.asarray(seq.weights_device)
+        b_ = np.asarray(win.weights_device)
+        if exact:
+            np.testing.assert_array_equal(a, b_)
+        else:
+            np.testing.assert_allclose(a, b_, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_window_buffering_is_invisible(engine):
+    """window=True buffers observe_many batches (zero launches) and any
+    state view flushes them — consumers cannot tell the modes apart."""
+    rng = np.random.default_rng(2)
+    batches = [rng.integers(1, 250, n) for n in (40, 7, 40)]
+    plain = DeviceSizeSketch(half_life=50.0, num_buckets=64, **engine)
+    win = DeviceSizeSketch(half_life=50.0, num_buckets=64, window=True,
+                           **engine)
+    for b in batches:
+        plain.observe_many(b)
+        win.observe_many(b)
+    assert win.n_dispatches == 0          # everything still buffered
+    assert win.n_observed == plain.n_observed
+    sup_w, frq_w = win.snapshot()         # view -> implicit flush
+    sup_p, frq_p = plain.snapshot()
+    assert win.n_dispatches == 1
+    np.testing.assert_array_equal(sup_w, sup_p)
+    np.testing.assert_array_equal(frq_w, frq_p)
+    assert win.effective_count == pytest.approx(plain.effective_count)
+
+
+def test_window_flush_empty_is_noop_and_reset_clears_pending():
+    win = DeviceSizeSketch(num_buckets=64, window=True,
+                           window_kernel=False)
+    assert win.flush_window() is None
+    assert win.n_dispatches == 0
+    win.observe_many([1, 2, 3])
+    win.reset()
+    assert win.n_observed == 0 and win.n_dispatches == 0
+    assert win.snapshot()[0].size == 0    # pending was dropped, not kept
+
+
+def test_fused_window_single_dispatch_no_retrace():
+    """Dispatch-count regression: every same-shaped cadence window is
+    exactly ONE launch of ONE compiled program (no per-window retrace —
+    the trace counter in kernels.sketch_update ticks at most once)."""
+    from repro.kernels import sketch_update as su
+    rng = np.random.default_rng(0)
+    win = DeviceSizeSketch(half_life=100.0, num_buckets=256, window=True,
+                           window_kernel=False)
+    win.observe_window([rng.integers(1, 900, 64) for _ in range(8)])
+    traces0 = su.WINDOW_TRACE_COUNT
+    for _ in range(3):
+        win.observe_window([rng.integers(1, 900, 64) for _ in range(8)])
+    assert win.n_dispatches == 4
+    assert su.WINDOW_TRACE_COUNT == traces0      # shapes reuse the jit
+    # ragged batch lengths pad to the same compiled shapes too
+    win.observe_window([rng.integers(1, 900, n)
+                        for n in (63, 64, 1, 17, 60, 64, 2, 9)])
+    assert su.WINDOW_TRACE_COUNT == traces0
+    assert win.n_dispatches == 5
+
+
+def test_escaped_reference_survives_later_windows():
+    """A weights_device reference handed out (the controller's drift
+    reference) must stay valid across later fused launches — donation
+    is skipped while a reference is escaped."""
+    win = DeviceSizeSketch(num_buckets=64, window=True,
+                           window_kernel=False)
+    win.observe_many([10, 10, 20])
+    ref = win.weights_device
+    before = np.asarray(ref).copy()
+    win.observe_window([[30, 40, 50]] * 4)
+    np.testing.assert_array_equal(np.asarray(ref), before)
+
+
+def test_controller_fused_window_matches_per_batch_decisions():
+    """ControllerConfig.fused_observe must not change a single verdict:
+    same decisions, same drifts, same final schedule — with one launch
+    and at most one scalar sync per cadence window."""
+    n = 12_000
+    sizes, deployed = _phase_shift_setup(n)
+    common = dict(k=6, check_every=500, half_life=1000.0,
+                  drift_threshold=0.12, min_items_between_refits=2000,
+                  amortization_windows=8.0, cost_weight=0.1,
+                  device=True, device_buckets=1 << 12)
+    per_batch = SlabController(deployed, config=ControllerConfig(
+        **common, fused_observe=False))
+    fused = SlabController(deployed, config=ControllerConfig(**common))
+    assert fused.sketch._window and not per_batch.sketch._window
+    for i in range(0, n, 125):          # 4 batches per cadence window
+        per_batch.observe_many(sizes[i:i + 125])
+        fused.observe_many(sizes[i:i + 125])
+        per_batch.maybe_refit()
+        fused.maybe_refit()
+    assert fused.n_refits == per_batch.n_refits >= 1
+    assert ([(d.approved, d.reason, d.drift) for d in fused.decisions]
+            == [(d.approved, d.reason, d.drift)
+                for d in per_batch.decisions])
+    assert list(fused.chunks) == list(per_batch.chunks)
+    # the tentpole accounting contract: a cadence window of buffered
+    # batches folds in ONE dispatch, the drift gate rides along as a
+    # single scalar readback
+    assert fused.sketch.n_dispatches <= fused.n_checks
+    assert fused.sketch.n_scalar_syncs <= fused.n_checks
+    assert fused.sketch.n_dispatches < per_batch.sketch.n_dispatches / 2
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.given(
+        seed=st.integers(0, 2**31 - 1),
+        # one BLOCK_N pad band (<=128): the regime where the kernel
+        # engine guarantees bit-identity (test_window_cross_band_rounding
+        # covers the ulp-bounded cross-band contract)
+        lens=st.lists(st.integers(1, 128), min_size=1, max_size=6),
+        half_life=st.one_of(st.none(), st.floats(5.0, 2000.0)),
+        weighted=st.booleans(),
+    )
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_observe_window_property(seed, lens, half_life, weighted):
+        """For random ragged windows, decays, and weights: the fused
+        window is bit-identical to sequential launches on BOTH engines,
+        and drift comes back identical to the standalone metric."""
+        rng = np.random.default_rng(seed)
+        batches = [rng.integers(1, 1000, n) for n in lens]
+        weights = ([rng.uniform(0.1, 4.0, n).astype(np.float32)
+                    for n in lens] if weighted else None)
+        ref_sizes = rng.integers(1, 1000, 150)
+        for engine in (dict(window_kernel=False),
+                       dict(window_kernel=True, interpret=True)):
+            ref = DeviceSizeSketch(half_life=half_life, num_buckets=128,
+                                   bucket_width=8, **engine)
+            ref.observe_many(ref_sizes)
+            reference = ref.weights_device
+            seq = DeviceSizeSketch(half_life=half_life, num_buckets=128,
+                                   bucket_width=8, **engine)
+            for i, b in enumerate(batches):
+                seq.observe_many(b, None if weights is None
+                                 else weights[i])
+            drift_seq = float(histogram_distance_device(
+                reference, seq.weights_device))
+            win = DeviceSizeSketch(half_life=half_life, num_buckets=128,
+                                   bucket_width=8, window=True, **engine)
+            drift_win = win.observe_window(batches, weights,
+                                           reference=reference)
+            assert win.n_dispatches == 1
+            np.testing.assert_array_equal(
+                np.asarray(win.weights_device),
+                np.asarray(seq.weights_device))
+            assert float(drift_win) == drift_seq
