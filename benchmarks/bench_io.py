@@ -23,10 +23,21 @@ def write_bench_json(name: str, payload, *,
                      path: Optional[str] = None) -> str:
     """Write ``payload`` as ``BENCH_<name>.json`` at the repo root;
     returns the path (also echoed to stderr so stdout stays valid
-    JSON for piping)."""
+    JSON for piping).
+
+    The write is atomic (temp file in the same directory + rename): an
+    interrupted bench run leaves either the previous artifact or the
+    new one, never a truncated JSON that breaks the next CI compare.
+    """
     out = path or os.path.join(repo_root(), f"BENCH_{name}.json")
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2, default=str)
-        f.write("\n")
+    tmp = f"{out}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2, default=str)
+            f.write("\n")
+        os.replace(tmp, out)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
     print(f"[bench] wrote {out}", file=sys.stderr)
     return out

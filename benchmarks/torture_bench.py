@@ -1,0 +1,370 @@
+"""Torture bench: the scenario matrix, scored by its WORST case.
+
+Every other bench in this repo reports means on traffic we chose; this
+one replays the ``repro.scenarios`` matrix — trace replay through the
+CSV parser, chaos events (tenant join/leave, flash crowds,
+forecast-defeating size steps, TTL storms), and the adversarially-found
+drift fixture — through the real ``SlabController`` + ``TenantArbiter``
++ ``SlabAllocator`` stack and a ``KVSlabPool`` under the token-quota
+arbiter, under both the reactive and the forecast policy. What goes in
+``BENCH_torture.json`` is the **worst case across the matrix**: max
+mean/peak hole fraction, max cumulative waste, max forecast-miss refits
+(reactive refits chasing a shock), and the total count of invariant
+violations (conservation, sketch mass, dispatch accounting, KV token
+accounting) — which must be ZERO; any violation exits nonzero, which is
+the CI gate.
+
+``python benchmarks/torture_bench.py --quick`` is the CI smoke size;
+``--scenario`` / ``--axis`` narrow the matrix (the CI job shards on
+these); ``run()`` returns CSV rows for ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import ControllerConfig, PagePool, TenantArbiter
+from repro.core.distribution import PAPER_WORKLOADS
+from repro.core.forecast import DemandForecaster
+from repro.core.slab_policy import default_memcached_schedule
+from repro.memcached import SlabAllocator, multitenant_phased_ops
+from repro.scenarios import (FlashCrowd, SizeStep, TenantJoin, TenantLeave,
+                             TTLStorm, WORST_FIXTURE, apply_chaos,
+                             check_all, check_kv_pool, format_trace,
+                             load_fixture, parse_trace, replay_fixture,
+                             tenants_of)
+
+PAGE_SIZE = 1 << 16       # same arbitration quantum as multitenant_bench
+PAGES_PER_KSET = 3        # pool scaled to stream length: genuine contention
+N_SETS = 20_000
+K = 6
+SCENARIOS = ("trace_replay", "join_leave", "flash_crowd", "size_step",
+             "ttl_storm", "adversarial_drift", "kv_chaos")
+AXES = ("reactive", "forecast")
+
+
+def make_stream(scenario: str, *, n_sets: int, n_tenants: int = 3,
+                seed: int = 7):
+    """One scenario's op stream + its chaos marks.
+
+    Every scenario starts from the same out-of-phase multi-tenant base
+    stream; ``trace_replay`` routes it through the CSV writer + parser
+    (so the full trace path is under torture too), the chaos scenarios
+    perturb it with one event family each — sized/timed against the
+    stream so each hits the mechanism it is named for.
+    """
+    workloads = PAPER_WORKLOADS[:n_tenants]
+    base = multitenant_phased_ops(workloads, n_sets=n_sets,
+                                  trough_mix=0.5, seed=seed)
+    n = len(base)
+    if scenario == "trace_replay":
+        ops = parse_trace(format_trace(base))
+        assert ops == base, "trace round-trip drifted from the base stream"
+        return ops, []
+    if scenario == "join_leave":
+        events = [
+            TenantJoin(at=n // 4, tenant=n_tenants,
+                       workload=PAPER_WORKLOADS[-1], rate=0.4,
+                       lifetime=max(200, n // 6)),
+            TenantLeave(at=2 * n // 3, tenant=0, flush=True),
+        ]
+    elif scenario == "flash_crowd":
+        events = [FlashCrowd(at=n // 3, duration=max(100, n // 6),
+                             tenant=1, boost=3)]
+    elif scenario == "size_step":
+        # One aperiodic step for every tenant: the seasonal-naive
+        # forecast keeps replaying the pre-step sizes — the refits this
+        # forces are exactly what forecast_miss_refits counts.
+        events = [SizeStep(at=n // 2,
+                           workload=PAPER_WORKLOADS[n_tenants % len(
+                               PAPER_WORKLOADS)])]
+    elif scenario == "ttl_storm":
+        events = [TTLStorm(at=n // 2, frac=0.6)]
+    else:
+        raise ValueError(f"unknown stream scenario {scenario!r}")
+    res = apply_chaos(base, events, seed=seed)
+    return res.ops, res.marks
+
+
+def _build_arbiter(n_tenants: int, *, total_pages: int, axis: str,
+                   check_every: int) -> TenantArbiter:
+    forecast = DemandForecaster(ring=16) if axis == "forecast" else None
+    cfg = ControllerConfig(
+        k=K, page_size=PAGE_SIZE, check_every=check_every,
+        drift_threshold=0.12, min_items_between_refits=2 * check_every,
+        amortization_windows=8.0, cost_weight=0.1, forecast=forecast)
+    pool = PagePool(total_pages, page_size=PAGE_SIZE)
+    arb = TenantArbiter(pool, controller_config=cfg,
+                        arbitrate_every=max(500, check_every // 2),
+                        amortization_windows=8.0, cost_weight=0.1,
+                        forecast=forecast)
+    classes = default_memcached_schedule(page_size=PAGE_SIZE)
+    for t in range(n_tenants):
+        name = f"tenant{t}"
+        alloc = SlabAllocator(classes, page_size=PAGE_SIZE,
+                              page_pool=pool, tenant=name)
+        arb.register(name, alloc,
+                     floor_pages=max(1, total_pages // (4 * n_tenants)))
+    pool.equal_partition()
+    return arb
+
+
+def drive(ops, marks, *, n_tenants: int, total_pages: int, axis: str,
+          check_every: int, sample_every: int = 250) -> Dict:
+    """Replay one scenario stream through the arbitrated stack,
+    checking every invariant at every sample point. Chaos marks are
+    fed to ``TenantArbiter.note_event`` as they are crossed, so the
+    forecast-miss accounting lines up with the injections."""
+    arb = _build_arbiter(n_tenants, total_pages=total_pages, axis=axis,
+                         check_every=check_every)
+    pool_bytes = total_pages * PAGE_SIZE
+    marks = sorted(marks)
+    mark_i = 0
+    hole_fracs: List[float] = []
+    cum_waste = 0
+    violations: List[str] = []
+    since_sample = 0
+    for i, op in enumerate(ops):
+        while mark_i < len(marks) and marks[mark_i][0] <= i:
+            arb.note_event(marks[mark_i][1])
+            mark_i += 1
+        name = f"tenant{op.tenant}"
+        if name not in arb.tenants:        # chaos joiner: register live
+            alloc = SlabAllocator(
+                default_memcached_schedule(page_size=PAGE_SIZE),
+                page_size=PAGE_SIZE, page_pool=arb.pool, tenant=name)
+            arb.register(name, alloc, floor_pages=1)
+        if op.op == "set":
+            arb.set(name, op.key, op.size)
+        elif op.op == "get":
+            if not arb.get(name, op.key):
+                arb.set(name, op.key, op.size)     # read-through refill
+        else:
+            arb.delete(name, op.key)
+        since_sample += 1
+        if since_sample >= sample_every:
+            since_sample = 0
+            live = sum(t.allocator.stats().item_bytes
+                       for t in arb.tenants.values())
+            hole_fracs.append((pool_bytes - live) / pool_bytes)
+            cum_waste += sum(t.allocator.stats().waste
+                             for t in arb.tenants.values()) * sample_every
+            violations.extend(check_all(
+                pool=arb.pool,
+                sketches=[t.controller.sketch
+                          for t in arb.tenants.values()]))
+    violations.extend(check_all(
+        pool=arb.pool,
+        sketches=[t.controller.sketch for t in arb.tenants.values()]))
+    return {
+        "n_ops": len(ops),
+        "mean_hole_frac": (sum(hole_fracs) / max(len(hole_fracs), 1)),
+        "peak_hole_frac": max(hole_fracs, default=0.0),
+        "cum_waste_byte_ops": int(cum_waste),
+        "n_refits": sum(t.controller.n_refits
+                        for t in arb.tenants.values()),
+        "forecast_miss_refits": arb.forecast_miss_refits(),
+        "n_transfers": arb.n_transfers,
+        "n_events": len(arb.events),
+        "violations": violations,
+    }
+
+
+def drive_adversarial(*, n_sets: int, axis: str, check_every: int,
+                      fixture: Optional[str] = None) -> Dict:
+    """The adversarial-drift scenario: replay the checked-in worst
+    fixture allocator-free for its exact regret numbers, then drive its
+    size stream through a single-tenant arbitrated allocator (unique
+    keys; the pool evicts) for hole/invariant torture."""
+    path = fixture or WORST_FIXTURE
+    rec = load_fixture(path)
+    result = replay_fixture(path, strict=False)
+    sizes = rec["schedule"].sizes()[:max(n_sets, 2 * check_every)]
+    from repro.memcached.traffic import TenantOp
+    ops = [TenantOp(0, "set", f"k{i}", int(s))
+           for i, s in enumerate(sizes.tolist())]
+    # every segment boundary is an event the forecaster cannot see
+    fracs = [f for _, f in rec["schedule"].segments]
+    total = sum(fracs)
+    marks, acc = [], 0.0
+    for f in fracs[:-1]:
+        acc += f / total
+        marks.append((int(acc * len(ops)), "drift-segment"))
+    total_pages = max(12, PAGES_PER_KSET * len(ops) // 2000)
+    out = drive(ops, marks, n_tenants=1, total_pages=total_pages,
+                axis=axis, check_every=check_every)
+    out.update({
+        "fixture": os.path.basename(path),
+        "regret_bytes": result.regret,
+        "regret_recorded": rec["regret"],
+        "regret_matches_fixture": result.regret == rec["regret"],
+        "adaptive_waste": result.adaptive_waste,
+        "oracle_waste": result.oracle_waste,
+    })
+    return out
+
+
+def drive_kv(*, n_sets: int, axis: str, check_every: int,
+             seed: int = 7) -> Dict:
+    """The serving-layer scenario: a ``KVSlabPool`` under the
+    token-quota arbiter, driven by a chaos-perturbed length stream
+    (flash crowd + size step). Sets allocate, deletes free; quota and
+    token-conservation invariants are checked throughout."""
+    from repro.serving import KVSlabPool, token_quota_arbiter
+    workloads = PAPER_WORKLOADS[:2]
+    base = multitenant_phased_ops(workloads, n_sets=n_sets,
+                                  trough_mix=0.5, seed=seed)
+    n = len(base)
+    res = apply_chaos(base, [
+        FlashCrowd(at=n // 3, duration=max(100, n // 6), tenant=0, boost=3),
+        SizeStep(at=2 * n // 3, factor=1.7),
+    ], seed=seed)
+    forecast = DemandForecaster(ring=16) if axis == "forecast" else None
+    cfg = ControllerConfig(k=K, check_every=check_every, align=128,
+                           min_chunk=128, page_size=1 << 13,
+                           forecast=forecast)
+    kv = KVSlabPool(n_sets * 160, [256, 512, 1024, 2048, 4096, 8192],
+                    controller_config=cfg)
+    for t in tenants_of(base, []):
+        kv.register_tenant(f"stream{t}", quota_tokens=n_sets * 80)
+    arb = token_quota_arbiter(kv, arbitrate_every=max(500, check_every))
+    live: Dict[str, int] = {}
+    next_id = 0
+    n_alloc = n_denied = 0
+    violations: List[str] = []
+    marks = sorted(res.marks)
+    mark_i = 0
+    for i, op in enumerate(res.ops):
+        while mark_i < len(marks) and marks[mark_i][0] <= i:
+            arb.note_event(marks[mark_i][1])
+            mark_i += 1
+        stream = f"stream{op.tenant}"
+        if op.op == "set" and op.key not in live:
+            a = kv.alloc(next_id, max(1, op.size), tenant=stream)
+            if a is None:
+                n_denied += 1
+            else:
+                live[op.key] = next_id
+                n_alloc += 1
+            next_id += 1
+        elif op.op == "delete" and op.key in live:
+            kv.free(live.pop(op.key))
+        arb.tick(1)
+        if i % 250 == 0:
+            violations.extend(check_all(pool=arb.pool,
+                                        sketches=[kv.controller.sketch],
+                                        kv_pool=kv))
+    violations.extend(check_all(pool=arb.pool,
+                                sketches=[kv.controller.sketch],
+                                kv_pool=kv))
+    s = kv.stats()
+    return {
+        "n_ops": len(res.ops),
+        "n_alloc": n_alloc,
+        "n_denied": n_denied,
+        "mean_hole_frac": s.waste_fraction,
+        "peak_hole_frac": s.waste_fraction,
+        "cum_waste_byte_ops": int(s.waste_tokens) * len(res.ops),
+        "n_refits": kv.controller.n_refits,
+        "forecast_miss_refits": kv.controller.forecast_miss_refits(),
+        "n_transfers": arb.n_transfers,
+        "n_events": len(arb.events),
+        "violations": violations,
+    }
+
+
+def run_matrix(*, n_sets: int = N_SETS, scenarios=SCENARIOS, axes=AXES,
+               seed: int = 7) -> Dict:
+    """The full scenario × policy matrix + the worst-case rollup."""
+    check_every = max(300, n_sets // 10)
+    n_tenants = 3
+    total_pages = max(12, PAGES_PER_KSET * n_sets // 1000)
+    cells: Dict[str, Dict] = {}
+    for scenario in scenarios:
+        for axis in axes:
+            key = f"{scenario}/{axis}"
+            t0 = time.perf_counter()
+            if scenario == "adversarial_drift":
+                cell = drive_adversarial(n_sets=n_sets, axis=axis,
+                                         check_every=check_every)
+            elif scenario == "kv_chaos":
+                cell = drive_kv(n_sets=n_sets, axis=axis,
+                                check_every=check_every, seed=seed)
+            else:
+                ops, marks = make_stream(scenario, n_sets=n_sets,
+                                         n_tenants=n_tenants, seed=seed)
+                cell = drive(ops, marks, n_tenants=n_tenants,
+                             total_pages=total_pages, axis=axis,
+                             check_every=check_every)
+            cell["seconds"] = round(time.perf_counter() - t0, 3)
+            cells[key] = cell
+    worst = {
+        "worst_mean_hole_frac": max(
+            (c["mean_hole_frac"], k) for k, c in cells.items()),
+        "worst_peak_hole_frac": max(
+            (c["peak_hole_frac"], k) for k, c in cells.items()),
+        "worst_cum_waste_byte_ops": max(
+            (c["cum_waste_byte_ops"], k) for k, c in cells.items()),
+        "worst_forecast_miss_refits": max(
+            (c["forecast_miss_refits"], k) for k, c in cells.items()),
+        "total_invariant_violations": sum(
+            len(c["violations"]) for c in cells.values()),
+    }
+    return {"n_sets": n_sets, "k": K, "page_size": PAGE_SIZE,
+            "scenarios": list(scenarios), "axes": list(axes),
+            "worst_case": worst, "cells": cells}
+
+
+def run(n_sets: int = 6000) -> List[Tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    out = run_matrix(n_sets=n_sets)
+    dt = (time.perf_counter() - t0) * 1e6 / max(
+        sum(c["n_ops"] for c in out["cells"].values()), 1)
+    w = out["worst_case"]
+    return [(
+        "torture_matrix", dt,
+        f"worst_mean_hole={w['worst_mean_hole_frac'][0]:.4f}"
+        f"@{w['worst_mean_hole_frac'][1]};"
+        f"worst_miss_refits={w['worst_forecast_miss_refits'][0]}"
+        f"@{w['worst_forecast_miss_refits'][1]};"
+        f"violations={w['total_invariant_violations']}")]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke size")
+    ap.add_argument("--n-sets", type=int, default=N_SETS)
+    ap.add_argument("--scenario", choices=SCENARIOS + ("all",),
+                    default="all", help="run one scenario row")
+    ap.add_argument("--axis", choices=AXES + ("all",), default="all",
+                    help="run one policy column")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+    n_sets = min(args.n_sets, 3000) if args.quick else args.n_sets
+    scenarios = (SCENARIOS if args.scenario == "all"
+                 else (args.scenario,))
+    axes = AXES if args.axis == "all" else (args.axis,)
+    out = run_matrix(n_sets=n_sets, scenarios=scenarios, axes=axes,
+                     seed=args.seed)
+    from bench_io import write_bench_json
+    name = "torture" if args.scenario == "all" and args.axis == "all" \
+        else f"torture_{args.scenario}_{args.axis}"
+    write_bench_json(name, out)
+    print(json.dumps(out, indent=2, default=str))
+    n_viol = out["worst_case"]["total_invariant_violations"]
+    if n_viol:
+        print(f"[torture] {n_viol} INVARIANT VIOLATIONS", file=sys.stderr)
+        for key, cell in out["cells"].items():
+            for v in cell["violations"]:
+                print(f"[torture]   {key}: {v}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -55,7 +55,7 @@ reproduces the reactive decisions bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -349,6 +349,7 @@ class TenantArbiter:
                               if bounce_window is None else int(bounce_window))
         self.tenants: Dict[str, _Tenant] = {}
         self.decisions: List[TransferDecision] = []
+        self.events: List[Tuple[int, str]] = []   # (n_ops, label) marks
         self.n_transfers = 0
         self.n_bounced = 0       # recipient had donated within bounce_window
         self.n_ops = 0
@@ -440,6 +441,24 @@ class TenantArbiter:
         self._drain_checks(self.tenants.values())
         if self._since_arbitrate >= self.arbitrate_every:
             self.arbitrate()
+
+    def note_event(self, label: str, tenants: Optional[Sequence[str]] = None
+                   ) -> None:
+        """Mark an external event (chaos injection, deploy) on the
+        arbiter clock and on every named tenant's controller (all
+        tenants when ``tenants`` is None) — the torture harness feeds
+        chaos marks through here so per-tenant
+        ``forecast_miss_refits`` and the arbiter-level timeline agree."""
+        self.events.append((self.n_ops, label))
+        names = self.tenants.keys() if tenants is None else tenants
+        for name in names:
+            self.tenants[name].controller.note_event(label)
+
+    def forecast_miss_refits(self, window: Optional[int] = None) -> int:
+        """Sum of every tenant controller's post-event reactive refits
+        (see :meth:`SlabController.forecast_miss_refits`)."""
+        return sum(t.controller.forecast_miss_refits(window)
+                   for t in self.tenants.values())
 
     def _deploy_schedule(self, chunks: np.ndarray) -> np.ndarray:
         if not self.tail_default:

@@ -299,6 +299,10 @@ class SlabController:
         self.n_checks = 0
         self.last_drift = 0.0
         self.decisions: List[RefitDecision] = []
+        # External-event timeline: (observation clock, label) marks fed
+        # by the torture harness (chaos injections) or an operator
+        # (deploys, failovers). Purely diagnostic — never gates.
+        self.events: List[Tuple[int, str]] = []
 
     # -- shared policy -------------------------------------------------------
     @property
@@ -317,6 +321,32 @@ class SlabController:
         """Sync the controller after the consumer adjusted the schedule
         out-of-band (e.g. alignment quantization)."""
         self.chunks = np.unique(np.asarray(chunk_sizes, dtype=np.int64))
+
+    # -- external events -----------------------------------------------------
+    def note_event(self, label: str) -> None:
+        """Mark an external event (chaos injection, deploy, tenant
+        churn) at the current observation clock. Events never change
+        decisions; they let :meth:`forecast_miss_refits` attribute
+        later refits to the shocks that forced them."""
+        self.events.append((self.n_observed, label))
+
+    def forecast_miss_refits(self, window: Optional[int] = None) -> int:
+        """Approved **reactive** refits landing within ``window``
+        observations after a noted event — refits the controller had to
+        take *after* a shock it did not pre-position for (a predictive
+        refit before the shock would not count). The torture bench
+        reports the worst case of this across scenarios: it is the
+        forecaster's miss rate under adversarial timing. ``window``
+        defaults to two check cadences."""
+        w = (2 * self.config.check_every if window is None
+             else int(window))
+        n = 0
+        for d in self.decisions:
+            if d.approved and not d.predictive:
+                if any(at <= d.at_observation <= at + w
+                       for at, _ in self.events):
+                    n += 1
+        return n
 
     # -- observe -------------------------------------------------------------
     def observe(self, size: int) -> None:

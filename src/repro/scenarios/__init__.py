@@ -1,0 +1,43 @@
+"""Scenario torture suite: trace replay, chaos events, adversarial drift.
+
+The layer that turns the repo's benchmarks into an adversarial test
+harness — see ``docs/scenarios.md``:
+
+* :mod:`repro.scenarios.trace` — published cache-trace CSV schemas
+  (Twitter SoCC'20 / Meta CacheLib) ⇄ ``TenantOp`` streams, with a
+  key-coherent down-sampler and a synthetic-trace writer so CI never
+  downloads anything.
+* :mod:`repro.scenarios.chaos` — injectable events over any op stream:
+  tenant join/leave, flash crowds, size-distribution steps, TTL storms.
+* :mod:`repro.scenarios.adversary` — hill-climb over drift schedules
+  maximizing controller regret vs the hindsight dp-optimal schedule;
+  worst finds persist under ``fixtures/`` as pinned regressions.
+* :mod:`repro.scenarios.invariants` — conservation / sketch-mass /
+  dispatch-accounting / KV-token checkers the bench gates CI on.
+"""
+from repro.scenarios.adversary import (DriftSchedule, EvalResult,
+                                       SearchResult, WORST_FIXTURE, evaluate,
+                                       load_fixture, replay_fixture,
+                                       save_fixture, search)
+from repro.scenarios.chaos import (ChaosResult, FlashCrowd, SizeStep,
+                                   TenantJoin, TenantLeave, TTLStorm,
+                                   apply_chaos, tenants_of)
+from repro.scenarios.invariants import (check_all, check_conservation,
+                                        check_dispatch_accounting,
+                                        check_kv_pool, check_sketch_mass)
+from repro.scenarios.trace import (META_SCHEMA, TWITTER_SCHEMA, TraceSchema,
+                                   downsample, format_trace, parse_trace,
+                                   synthetic_trace_ops, trace_histogram,
+                                   write_trace)
+
+__all__ = [
+    "TraceSchema", "TWITTER_SCHEMA", "META_SCHEMA", "parse_trace",
+    "format_trace", "write_trace", "synthetic_trace_ops", "downsample",
+    "trace_histogram",
+    "TenantJoin", "TenantLeave", "FlashCrowd", "SizeStep", "TTLStorm",
+    "ChaosResult", "apply_chaos", "tenants_of",
+    "DriftSchedule", "EvalResult", "SearchResult", "evaluate", "search",
+    "save_fixture", "load_fixture", "replay_fixture", "WORST_FIXTURE",
+    "check_all", "check_conservation", "check_sketch_mass",
+    "check_dispatch_accounting", "check_kv_pool",
+]

@@ -1,0 +1,335 @@
+"""Adversarial drift search: find the schedule change that hurts most.
+
+The benchmarks show the adaptive controller winning on drift patterns
+*we* chose. The honest question is the opposite one: what drift pattern
+would an adversary choose? This module searches over **drift
+schedules** — piecewise-stationary size streams, each segment drawn
+from one of the paper's operating points — for the one that maximizes
+the controller's *regret* against the hindsight-optimal static schedule
+(:func:`repro.core.dp_optimal.dp_optimal` fit on the whole stream).
+
+Regret is where the controller's hysteresis shows its cost: a stream
+that flips between far-apart operating points just slower than the
+cooldown, or parks most of its mass where the decayed sketch has
+already forgotten it, makes every refit arrive late and every late
+refit pay twice. Positive regret = the static oracle would have beaten
+adaptation on that stream.
+
+The evaluation is **allocator-free and exactly deterministic**: the
+stream drives a real :class:`~repro.core.controller.SlabController`
+(drift gate, cooldown, hysteresis — the full pipeline), but candidate
+frontiers are scored with exact integer :func:`waste_exact` instead of
+the f32 kernel, so a found schedule replays bit-identically on any
+platform. That is what makes :func:`save_fixture` /
+:func:`replay_fixture` usable as a **pinned regression test**: the
+worst schedule ever found is checked in under ``fixtures/`` and CI
+replays it, asserting the recorded regret to the byte — any controller
+change that silently worsens (or quietly "fixes") worst-case behaviour
+trips the pin and must update the fixture deliberately.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.controller import ControllerConfig, ScoreRequest, SlabController
+from repro.core.distribution import (PAGE_SIZE, PAPER_WORKLOADS,
+                                     lognormal_params_from_moments)
+from repro.core.dp_optimal import dp_optimal
+from repro.core.slab_policy import schedule_with_default_tail
+from repro.core.waste import waste_exact
+
+#: Checked-in adversarial fixtures live next to this module.
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "fixtures")
+WORST_FIXTURE = os.path.join(FIXTURE_DIR, "worst_drift.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSchedule:
+    """One piecewise-stationary size stream: ``segments`` is a tuple of
+    ``(workload_index, fraction)`` pairs — each segment draws its share
+    of the ``n_items`` stream from that :data:`PAPER_WORKLOADS`
+    operating point's lognormal. Fractions are normalized; ``seed``
+    fixes every draw."""
+
+    segments: Tuple[Tuple[int, float], ...]
+    n_items: int = 8000
+    seed: int = 0
+
+    def __post_init__(self):
+        if not self.segments:
+            raise ValueError("a drift schedule needs at least one segment")
+        for widx, frac in self.segments:
+            if not 0 <= widx < len(PAPER_WORKLOADS):
+                raise ValueError(f"workload index {widx} out of range")
+            if frac <= 0:
+                raise ValueError(f"segment fraction must be > 0, got {frac}")
+
+    def sizes(self) -> np.ndarray:
+        """Materialize the stream (int64 sizes in ``[1, PAGE_SIZE]``)."""
+        rng = np.random.default_rng(self.seed)
+        fracs = np.asarray([f for _, f in self.segments], dtype=np.float64)
+        bounds = np.rint(np.cumsum(fracs / fracs.sum())
+                         * self.n_items).astype(np.int64)
+        bounds[-1] = self.n_items
+        out: List[np.ndarray] = []
+        start = 0
+        for (widx, _), end in zip(self.segments, bounds.tolist()):
+            n = max(0, end - start)
+            start = end
+            w = PAPER_WORKLOADS[widx]
+            mu_log, sigma_log = lognormal_params_from_moments(
+                np.asarray([w.mu]), np.asarray([w.sigma]))
+            draws = rng.lognormal(mean=mu_log[0], sigma=sigma_log[0], size=n)
+            out.append(np.clip(np.rint(draws), 1, PAGE_SIZE)
+                       .astype(np.int64))
+        return (np.concatenate(out) if out
+                else np.zeros(0, dtype=np.int64))
+
+    def to_json(self) -> Dict:
+        return {"segments": [[int(w), float(f)] for w, f in self.segments],
+                "n_items": int(self.n_items), "seed": int(self.seed)}
+
+    @classmethod
+    def from_json(cls, obj: Dict) -> "DriftSchedule":
+        return cls(segments=tuple((int(w), float(f))
+                                  for w, f in obj["segments"]),
+                   n_items=int(obj["n_items"]), seed=int(obj["seed"]))
+
+
+@dataclasses.dataclass
+class EvalResult:
+    """One schedule's regret accounting (exact int bytes)."""
+
+    schedule: DriftSchedule
+    regret: int              # adaptive_waste - oracle_waste
+    adaptive_waste: int      # controller's schedule, scored window by window
+    oracle_waste: int        # hindsight static dp schedule, same windows
+    oracle_chunks: np.ndarray
+    n_refits: int
+    n_windows: int
+
+
+def _hist(sizes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    support, freqs = np.unique(sizes, return_counts=True)
+    return support.astype(np.int64), freqs.astype(np.int64)
+
+
+def _check_exact(controller: SlabController):
+    """Run one due drift check with exact-integer candidate scoring —
+    the same gate pipeline ``maybe_refit`` runs, minus the f32 kernel,
+    so results are bit-stable across platforms."""
+    req = controller.begin_check(None)
+    if not isinstance(req, ScoreRequest):
+        return req
+    scores = np.asarray([waste_exact(row, req.support, req.freqs,
+                                     page_size=req.page_size)
+                         for row in req.rows], dtype=np.float64)
+    return controller.finish_check(req, scores)
+
+
+def evaluate(schedule: DriftSchedule, *, k: int = 6,
+             check_every: int = 1000,
+             config: Optional[ControllerConfig] = None) -> EvalResult:
+    """Regret of the adaptive controller on ``schedule``'s stream.
+
+    The stream is split into windows of ``check_every`` items. Window 0
+    is warmup: the controller starts from the dp-optimal fit on it (the
+    most charitable initialization) and adopts it as the drift
+    reference. Every later window is **served before it is observed**:
+    its waste is charged against the schedule the controller believed
+    in at the window's start, then the window feeds the sketch and the
+    controller may refit. Both sides deploy with the covering default
+    tail (:func:`schedule_with_default_tail`) exactly as the arbiter
+    deploys refits — so regret measures hole waste under late/wrong
+    adaptation, not the trivial catastrophe of an uncovered size. The
+    oracle is one static :func:`~repro.core.dp_optimal.dp_optimal`
+    schedule fit with hindsight on exactly the scored windows — an
+    opponent the controller can only beat by adapting well.
+    """
+    sizes = schedule.sizes()
+    if sizes.size < 2 * check_every:
+        raise ValueError(
+            f"schedule too short: {sizes.size} items < 2 windows of "
+            f"{check_every}")
+    cfg = config or ControllerConfig(
+        k=k, check_every=check_every,
+        min_items_between_refits=check_every, page_size=PAGE_SIZE)
+    warm = sizes[:check_every]
+    controller = SlabController(dp_optimal(*_hist(warm), k).chunks,
+                                config=cfg)
+    controller.observe_many(warm)
+    _check_exact(controller)                 # adopts warmup as reference
+    windows = [sizes[at:at + check_every]
+               for at in range(check_every, sizes.size, check_every)]
+    scored = np.concatenate(windows)
+    oracle = dp_optimal(*_hist(scored), k)
+    oracle_deployed = schedule_with_default_tail(oracle.chunks,
+                                                 page_size=cfg.page_size)
+    adaptive_waste = 0
+    oracle_waste = 0
+    for window in windows:
+        support, freqs = _hist(window)
+        deployed = schedule_with_default_tail(controller.chunks,
+                                              page_size=cfg.page_size)
+        adaptive_waste += waste_exact(deployed, support, freqs,
+                                      page_size=cfg.page_size)
+        oracle_waste += waste_exact(oracle_deployed, support, freqs,
+                                    page_size=cfg.page_size)
+        controller.observe_many(window)
+        _check_exact(controller)
+    return EvalResult(schedule=schedule,
+                      regret=int(adaptive_waste - oracle_waste),
+                      adaptive_waste=int(adaptive_waste),
+                      oracle_waste=int(oracle_waste),
+                      oracle_chunks=oracle.chunks,
+                      n_refits=controller.n_refits,
+                      n_windows=len(windows))
+
+
+# -- the search --------------------------------------------------------------
+
+def _random_schedule(rng: np.random.Generator, *, n_items: int,
+                     max_segments: int) -> DriftSchedule:
+    n_seg = int(rng.integers(2, max_segments + 1))
+    widx = rng.integers(0, len(PAPER_WORKLOADS), size=n_seg)
+    fracs = rng.dirichlet(np.ones(n_seg)) * 0.9 + 0.1 / n_seg
+    return DriftSchedule(
+        segments=tuple((int(w), round(float(f), 4))
+                       for w, f in zip(widx, fracs)),
+        n_items=n_items, seed=int(rng.integers(1 << 16)))
+
+
+def _mutate(sched: DriftSchedule, rng: np.random.Generator, *,
+            max_segments: int) -> DriftSchedule:
+    segs = [list(s) for s in sched.segments]
+    move = rng.integers(0, 4)
+    if move == 0:                        # retarget one segment's workload
+        i = int(rng.integers(0, len(segs)))
+        segs[i][0] = int(rng.integers(0, len(PAPER_WORKLOADS)))
+    elif move == 1:                      # jitter the split points
+        for s in segs:
+            s[1] = max(0.02, s[1] * float(rng.uniform(0.6, 1.6)))
+    elif move == 2 and len(segs) < max_segments:    # split a segment
+        i = int(rng.integers(0, len(segs)))
+        w, f = segs[i]
+        segs[i] = [w, f / 2]
+        segs.insert(i + 1, [int(rng.integers(0, len(PAPER_WORKLOADS))),
+                            f / 2])
+    elif move == 3 and len(segs) > 2:    # merge two neighbours
+        i = int(rng.integers(0, len(segs) - 1))
+        segs[i][1] += segs[i + 1][1]
+        del segs[i + 1]
+    seed = (sched.seed if rng.random() < 0.7
+            else int(rng.integers(1 << 16)))
+    return DriftSchedule(
+        segments=tuple((w, round(f, 4)) for w, f in segs),
+        n_items=sched.n_items, seed=seed)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best: EvalResult
+    n_evals: int
+    history: List[int]       # best regret after each evaluation
+
+
+def search(n_evals: int = 40, *, seed: int = 0, n_items: int = 8000,
+           k: int = 6, check_every: int = 1000, max_segments: int = 5,
+           restart_every: int = 12) -> SearchResult:
+    """Bounded hill-climb over drift schedules, maximizing regret.
+
+    Random start, one mutation per step, greedy accept, random restart
+    every ``restart_every`` non-improving steps (the landscape is full
+    of local optima where the controller happens to adapt cleanly).
+    Deterministic given ``seed``; cost is ``n_evals`` exact
+    evaluations, no allocator in the loop."""
+    rng = np.random.default_rng(seed)
+    current = _random_schedule(rng, n_items=n_items,
+                               max_segments=max_segments)
+    cur_eval = evaluate(current, k=k, check_every=check_every)
+    best = cur_eval
+    history = [best.regret]
+    stale = 0
+    for _ in range(n_evals - 1):
+        if stale >= restart_every:
+            cand = _random_schedule(rng, n_items=n_items,
+                                    max_segments=max_segments)
+            stale = 0
+        else:
+            cand = _mutate(cur_eval.schedule, rng,
+                           max_segments=max_segments)
+        try:
+            cand_eval = evaluate(cand, k=k, check_every=check_every)
+        except ValueError:               # degenerate mutation (too short)
+            history.append(best.regret)
+            continue
+        if cand_eval.regret > cur_eval.regret:
+            cur_eval = cand_eval
+            stale = 0
+        else:
+            stale += 1
+        if cand_eval.regret > best.regret:
+            best = cand_eval
+        history.append(best.regret)
+    return SearchResult(best=best, n_evals=len(history), history=history)
+
+
+# -- fixtures: persist the worst schedule found ------------------------------
+
+def save_fixture(path: str, result: EvalResult, *,
+                 k: int = 6, check_every: int = 1000,
+                 found_by: Optional[Dict] = None) -> str:
+    """Persist an evaluated schedule as a replayable fixture (atomic
+    write). The recorded waste numbers are exact ints — replay asserts
+    them to the byte."""
+    payload = {
+        "schedule": result.schedule.to_json(),
+        "k": int(k),
+        "check_every": int(check_every),
+        "regret": int(result.regret),
+        "adaptive_waste": int(result.adaptive_waste),
+        "oracle_waste": int(result.oracle_waste),
+        "oracle_chunks": [int(c) for c in result.oracle_chunks],
+        "n_refits": int(result.n_refits),
+        "n_windows": int(result.n_windows),
+        "found_by": found_by or {},
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def load_fixture(path: str = WORST_FIXTURE) -> Dict:
+    with open(path) as f:
+        fixture = json.load(f)
+    fixture["schedule"] = DriftSchedule.from_json(fixture["schedule"])
+    return fixture
+
+
+def replay_fixture(path: str = WORST_FIXTURE, *,
+                   strict: bool = True) -> EvalResult:
+    """Re-evaluate a persisted fixture. With ``strict`` (the pinned
+    regression mode), the replayed regret/waste must equal the recorded
+    bytes exactly — a mismatch means controller behaviour changed."""
+    fixture = load_fixture(path)
+    result = evaluate(fixture["schedule"], k=fixture["k"],
+                      check_every=fixture["check_every"])
+    if strict:
+        for field in ("regret", "adaptive_waste", "oracle_waste"):
+            got = getattr(result, field)
+            if got != fixture[field]:
+                raise AssertionError(
+                    f"fixture {os.path.basename(path)} drifted: {field} "
+                    f"replayed {got} != recorded {fixture[field]} — "
+                    f"controller behaviour changed; re-run the adversary "
+                    f"search and update the fixture deliberately")
+    return result

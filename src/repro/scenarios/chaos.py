@@ -1,0 +1,279 @@
+"""Chaos events: fault-shaped perturbations injected into any op stream.
+
+The "Idiosyncrasies of Programmable Caching Engines" catalogue of engine
+edge cases is exactly what the repo's smooth synthetic mixtures never
+exercise: tenants that appear and vanish mid-run, flash crowds that
+multiply one tenant's arrivals for a window, size-distribution step
+changes that break the seasonal-naive forecast, and TTL storms that
+tombstone half the resident set in one burst. :func:`apply_chaos` takes
+any ``TenantOp`` stream (synthetic generator output or a parsed trace)
+plus a list of events and returns the perturbed stream — so every
+existing driver (``TenantArbiter``, the benches, ``KVSlabPool`` length
+feeds) tortures unchanged.
+
+Events fire at *base-stream op indices* (``at``), and the result
+carries a ``marks`` timeline of where each event landed in the OUTPUT
+stream — the torture bench hands those to
+``SlabController.note_event`` / ``TenantArbiter.note_event`` so
+forecast-miss refits (reactive refits chasing an event the forecaster
+could not see) are measurable.
+
+All perturbations are deterministic given ``seed``: redraws use one
+seeded generator, and per-key remaps hash the key, so a get's
+read-through refill size always matches the set it would restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import zlib
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.distribution import (PAGE_SIZE, PaperWorkload,
+                                     lognormal_params_from_moments)
+from repro.memcached.traffic import TenantOp
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantJoin:
+    """A new tenant starts sending traffic at op ``at``: one set with
+    probability ``rate`` per base op, sizes from ``workload``, each
+    item deleted ``~lifetime`` base ops later (0 = no churn)."""
+
+    at: int
+    tenant: int
+    workload: PaperWorkload
+    rate: float = 0.5
+    lifetime: int = 0
+
+    @property
+    def label(self) -> str:
+        return f"join:t{self.tenant}"
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantLeave:
+    """Tenant ``tenant`` disconnects at op ``at``: its remaining base
+    ops are dropped, and with ``flush`` its live keys are deleted in
+    one tombstone burst (the cache-side shadow of a teardown)."""
+
+    at: int
+    tenant: int
+    flush: bool = True
+
+    @property
+    def label(self) -> str:
+        return f"leave:t{self.tenant}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashCrowd:
+    """For base ops in ``[at, at + duration)``, every set of ``tenant``
+    is amplified ``boost``× with derived fresh keys; the crowd's keys
+    are deleted when the window closes (the spike dissipates, leaving
+    the hole-riddled pages behind)."""
+
+    at: int
+    duration: int
+    tenant: int
+    boost: int = 3
+
+    @property
+    def label(self) -> str:
+        return f"flash:t{self.tenant}x{self.boost}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SizeStep:
+    """From op ``at`` on, item sizes step to a new distribution —
+    ``factor`` rescales every size, or ``workload`` redraws each key's
+    size from a new operating point (stable per key, so refills match).
+    ``tenant=None`` hits every tenant. A step is the forecast-breaking
+    event: seasonal-naive prediction replays the old period's sizes,
+    which after the step are simply wrong."""
+
+    at: int
+    tenant: Optional[int] = None
+    factor: Optional[float] = None
+    workload: Optional[PaperWorkload] = None
+
+    def __post_init__(self):
+        if (self.factor is None) == (self.workload is None):
+            raise ValueError("SizeStep needs exactly one of factor/workload")
+
+    @property
+    def label(self) -> str:
+        who = "all" if self.tenant is None else f"t{self.tenant}"
+        what = (f"x{self.factor}" if self.factor is not None
+                else f"w{self.workload.table}")
+        return f"sizestep:{who}{what}"
+
+
+@dataclasses.dataclass(frozen=True)
+class TTLStorm:
+    """At op ``at``, a fraction ``frac`` of currently-live keys (of
+    ``tenant``, or all) is deleted in one burst — the mass-expiry
+    tombstone wave that punches free chunks through resident pages."""
+
+    at: int
+    frac: float = 0.5
+    tenant: Optional[int] = None
+
+    @property
+    def label(self) -> str:
+        who = "all" if self.tenant is None else f"t{self.tenant}"
+        return f"ttlstorm:{who}@{self.frac}"
+
+
+ChaosEvent = (TenantJoin, TenantLeave, FlashCrowd, SizeStep, TTLStorm)
+
+
+@dataclasses.dataclass
+class ChaosResult:
+    """The perturbed stream plus the event timeline over it."""
+
+    ops: List[TenantOp]
+    marks: List[Tuple[int, str]]    # (output op index, event label)
+
+    def __iter__(self):
+        return iter(self.ops)
+
+    def __len__(self):
+        return len(self.ops)
+
+
+def _stable_unit(key: str, salt: int) -> float:
+    """Deterministic uniform in [0, 1) from a key (remap stability)."""
+    return zlib.crc32(f"{salt}:{key}".encode()) / float(1 << 32)
+
+
+def _redraw_size(key: str, workload: PaperWorkload, salt: int,
+                 max_size: int) -> int:
+    """A per-key size drawn from ``workload``'s lognormal via two key
+    hashes and Box-Muller — stable for the key, so a read-through
+    refill restores exactly what a set stored."""
+    u1 = max(_stable_unit(key, salt), 1e-12)
+    u2 = _stable_unit(key, salt + 1)
+    z = np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2)
+    mu_log, sigma_log = lognormal_params_from_moments(
+        np.asarray([workload.mu]), np.asarray([workload.sigma]))
+    raw = float(np.exp(mu_log[0] + sigma_log[0] * z))
+    return int(np.clip(np.rint(raw), 1, max_size))
+
+
+def apply_chaos(ops: Sequence[TenantOp], events: Sequence[object], *,
+                seed: int = 0, max_size: int = PAGE_SIZE) -> ChaosResult:
+    """Replay ``ops`` through the event list, emitting the perturbed
+    stream. Single pass; deterministic given ``seed``; events fire in
+    ``at`` order (ties: list order)."""
+    rng = np.random.default_rng(seed)
+    for e in events:
+        if not isinstance(e, ChaosEvent):
+            raise TypeError(f"not a chaos event: {e!r}")
+    events = sorted(events, key=lambda e: e.at)
+    out: List[TenantOp] = []
+    marks: List[Tuple[int, str]] = []
+    live: Dict[str, int] = {}           # key -> tenant, live resident view
+    gone: Set[int] = set()              # tenants that left
+    joins: List[TenantJoin] = []        # active join generators
+    join_ctr: Dict[int, int] = {}
+    steps: List[SizeStep] = []          # active size steps, in fire order
+    crowds: List[FlashCrowd] = []       # active flash-crowd windows
+    # (due base index, seq, tenant, key): join-churn + crowd-dissipate
+    scheduled: List[tuple] = []
+    seq = 0
+    ev_i = 0
+
+    def emit(op: TenantOp) -> None:
+        if op.op == "set":
+            live[op.key] = op.tenant
+        elif op.op == "delete":
+            live.pop(op.key, None)
+        out.append(op)
+
+    def schedule(due: int, tenant: int, key: str) -> None:
+        nonlocal seq
+        heapq.heappush(scheduled, (due, seq, tenant, key))
+        seq += 1
+
+    def remap(op: TenantOp) -> TenantOp:
+        """Apply active size steps to a set/get payload size."""
+        size = op.size
+        for st in steps:
+            if st.tenant is not None and st.tenant != op.tenant:
+                continue
+            if st.factor is not None:
+                size = int(np.clip(np.rint(size * st.factor), 1, max_size))
+            else:
+                size = _redraw_size(op.key, st.workload, st.at, max_size)
+        return op if size == op.size else dataclasses.replace(op, size=size)
+
+    n_base = len(ops)
+    for i in range(n_base + 1):          # +1: drain events/schedules at end
+        while scheduled and scheduled[0][0] <= i:
+            _, _, d_tenant, d_key = heapq.heappop(scheduled)
+            if d_key in live:
+                emit(TenantOp(d_tenant, "delete", d_key, 0))
+        while ev_i < len(events) and events[ev_i].at <= i:
+            ev = events[ev_i]
+            ev_i += 1
+            marks.append((len(out), ev.label))
+            if isinstance(ev, TenantJoin):
+                joins.append(ev)
+                join_ctr.setdefault(ev.tenant, 0)
+            elif isinstance(ev, TenantLeave):
+                gone.add(ev.tenant)
+                joins = [j for j in joins if j.tenant != ev.tenant]
+                if ev.flush:
+                    for key in sorted(k for k, t in live.items()
+                                      if t == ev.tenant):
+                        emit(TenantOp(ev.tenant, "delete", key, 0))
+            elif isinstance(ev, SizeStep):
+                steps.append(ev)
+            elif isinstance(ev, FlashCrowd):
+                crowds.append(ev)
+            elif isinstance(ev, TTLStorm):
+                keys = sorted(k for k, t in live.items()
+                              if ev.tenant is None or t == ev.tenant)
+                n_kill = int(ev.frac * len(keys))
+                for key in rng.permutation(keys)[:n_kill].tolist():
+                    emit(TenantOp(live[key], "delete", key, 0))
+        if i == n_base:
+            break
+        for j in joins:
+            if rng.random() < j.rate:
+                key = f"t{j.tenant}:c{join_ctr[j.tenant]}"
+                join_ctr[j.tenant] += 1
+                size = _redraw_size(key, j.workload, j.at, max_size)
+                emit(remap(TenantOp(j.tenant, "set", key, size)))
+                if j.lifetime:
+                    due = i + int(rng.uniform(0.5, 1.5) * j.lifetime)
+                    schedule(due, j.tenant, key)
+        op = ops[i]
+        if op.tenant in gone:
+            continue
+        if op.op in ("set", "get"):
+            op = remap(op)
+        emit(op)
+        if op.op == "set":
+            for c in crowds:
+                if (c.tenant == op.tenant
+                        and c.at <= i < c.at + c.duration):
+                    for rep in range(max(0, c.boost - 1)):
+                        clone = f"{op.key}#f{rep}"
+                        emit(TenantOp(op.tenant, "set", clone, op.size))
+                        schedule(c.at + c.duration, op.tenant, clone)
+    return ChaosResult(ops=out, marks=marks)
+
+
+def tenants_of(ops: Sequence[TenantOp],
+               events: Sequence[object] = ()) -> List[int]:
+    """Every tenant index the perturbed stream can mention — base
+    stream tenants plus joiners — so a driver can register them all
+    up front."""
+    seen = {op.tenant for op in ops}
+    seen.update(e.tenant for e in events
+                if isinstance(e, TenantJoin))
+    return sorted(seen)

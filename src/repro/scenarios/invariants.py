@@ -1,0 +1,104 @@
+"""Invariant checks the torture suite enforces under every scenario.
+
+Each checker returns a list of violation strings (empty = healthy), so
+the bench can count violations across a whole matrix and CI can fail on
+any non-empty result while still printing *what* broke. The invariants
+are the ones past bugs actually violated (see CHANGES.md: the
+``_prune`` mass leak, negative waste charges) plus the conservation and
+dispatch-accounting contracts the arbiter and device sketch advertise.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+def check_conservation(pool) -> List[str]:
+    """``ResourcePool`` conservation: free + Σ owned == total, and no
+    tenant below its floor or above its quota bookkeeping."""
+    out: List[str] = []
+    if not pool.conserved:
+        owned = sum(t.owned for t in pool.tenants().values())
+        out.append(
+            f"pool not conserved: free={pool.free_units} + owned={owned} "
+            f"!= total={pool.total_units}")
+    for name, t in pool.tenants().items():
+        if t.owned < 0:
+            out.append(f"tenant {name!r} owns {t.owned} < 0 units")
+        if t.quota is not None and t.quota < 0:
+            out.append(f"tenant {name!r} quota {t.quota} < 0")
+    return out
+
+
+def check_sketch_mass(sketch, *, rel_tol: float = 1e-6) -> List[str]:
+    """Decayed-sketch mass accounting: the running ``_total`` must equal
+    the sum of the (synced) per-bin weights — the exact invariant the
+    PR-4 ``_prune`` leak violated — and the decayed effective count can
+    never exceed the lifetime observation count."""
+    out: List[str] = []
+    total = float(sketch.effective_count)
+    if hasattr(sketch, "_synced_weights"):          # host dict sketch
+        recomputed = float(sum(sketch._synced_weights().values()))
+    else:                                           # device dense sketch
+        _, weights = sketch.snapshot_weights()
+        recomputed = float(weights.sum())
+    scale = max(abs(total), abs(recomputed), 1.0)
+    if abs(total - recomputed) > rel_tol * scale:
+        out.append(
+            f"sketch mass leak: effective_count={total} != "
+            f"sum(weights)={recomputed}")
+    if total > sketch.n_observed * (1.0 + rel_tol) + rel_tol:
+        out.append(
+            f"decayed mass {total} exceeds lifetime n_observed="
+            f"{sketch.n_observed}")
+    return out
+
+
+def check_dispatch_accounting(sketch, *, max_windows: int = None
+                              ) -> List[str]:
+    """Device-observe launch accounting: a host sketch never dispatches;
+    a fused device sketch dispatches at most once per flushed window
+    (pass ``max_windows`` = number of cadence windows driven)."""
+    out: List[str] = []
+    n = getattr(sketch, "n_dispatches", 0)
+    if not hasattr(sketch, "weights_device"):       # host path
+        if n != 0:
+            out.append(f"host sketch reports {n} device dispatches")
+    elif max_windows is not None and n > max_windows:
+        out.append(
+            f"fused sketch dispatched {n} times for {max_windows} "
+            f"windows (contract: <= 1 per window)")
+    return out
+
+
+def check_kv_pool(kv_pool) -> List[str]:
+    """``KVSlabPool`` token accounting: allocated + retained + free can
+    never exceed the pool (carving may strand sub-min-class remainders,
+    so the sum may fall short — never over), and nothing is negative."""
+    out: List[str] = []
+    s = kv_pool.stats()
+    for field in ("allocated_tokens", "retained_tokens", "free_tokens"):
+        v = getattr(s, field)
+        if v < 0:
+            out.append(f"kv pool {field}={v} < 0")
+    covered = s.allocated_tokens + s.retained_tokens + s.free_tokens
+    if covered > s.pool_tokens:
+        out.append(
+            f"kv pool over-committed: allocated={s.allocated_tokens} + "
+            f"retained={s.retained_tokens} + free={s.free_tokens} > "
+            f"pool={s.pool_tokens}")
+    return out
+
+
+def check_all(*, pool=None, sketches=(), kv_pool=None,
+              max_windows: int = None) -> List[str]:
+    """Run every applicable checker; one flat violation list."""
+    out: List[str] = []
+    if pool is not None:
+        out.extend(check_conservation(pool))
+    for sketch in sketches:
+        out.extend(check_sketch_mass(sketch))
+        out.extend(check_dispatch_accounting(sketch,
+                                             max_windows=max_windows))
+    if kv_pool is not None:
+        out.extend(check_kv_pool(kv_pool))
+    return out

@@ -1,0 +1,289 @@
+"""Cache-trace replay: published CSV schemas → ``TenantOp`` streams.
+
+Every workload the repo has measured so far is synthetic; the paper's
+premise is that slab schedules must survive *real* traffic. This module
+is the adapter: it parses the published cache-trace CSV shape — the
+Twitter production traces (SoCC'20, one row per request:
+``timestamp, key, key size, value size, client id, operation, TTL``)
+and the Meta/CacheLib kvcache shape (``op_time, key, key_size, op,
+op_count, size, ttl``) — into the same
+:class:`~repro.memcached.traffic.TenantOp` stream the arbiter and the
+benchmarks already replay, with the ``client id`` column as the tenant
+tag.
+
+Because CI must run with **no external downloads**, the module is
+symmetric: :func:`format_trace` renders any ``TenantOp`` stream back
+into trace rows, and :func:`synthetic_trace_ops` builds realistic op
+streams from the repo's own generators — so
+``parse_trace(format_trace(ops)) == ops`` round-trips and the torture
+bench exercises the full parse path on a trace it wrote itself.
+Pointing :func:`parse_trace` at a real downloaded trace file is the
+same one call.
+
+:func:`downsample` thins a trace by *key* (all ops of a sampled key
+survive together), so set/delete pairing and the re-reference structure
+of the stream are preserved at any sampling rate — per-op sampling
+would orphan deletes and destroy hit ratios.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import os
+import zlib
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Union
+
+import numpy as np
+
+from repro.core.distribution import PAGE_SIZE
+from repro.memcached.traffic import (TenantOp, multitenant_phased_ops,
+                                     zipfian_rereference_ops)
+
+# Column roles a schema may assign. "-" ignores a column.
+_ROLES = ("timestamp", "key", "key_size", "value_size", "client_id",
+          "op", "ttl", "-")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSchema:
+    """One CSV trace dialect: which column holds which role, and which
+    operation names mean set / get / delete (anything else is treated
+    as a ``get`` — ``incr``/``cas``/``touch`` all read the key)."""
+
+    columns: tuple                       # role name per CSV column
+    set_ops: frozenset = frozenset(
+        {"set", "add", "replace", "cas", "append", "prepend", "store"})
+    get_ops: frozenset = frozenset({"get", "gets", "read"})
+    delete_ops: frozenset = frozenset({"delete", "del", "remove"})
+    size_includes_key: bool = True       # item size = key_size + value_size
+
+    def __post_init__(self):
+        bad = [c for c in self.columns if c not in _ROLES]
+        if bad:
+            raise ValueError(f"unknown column roles {bad}; valid: {_ROLES}")
+        for role in ("key", "op"):
+            if role not in self.columns:
+                raise ValueError(f"schema must place a {role!r} column")
+
+
+#: The Twitter production cache-trace shape (SoCC'20 open data set).
+TWITTER_SCHEMA = TraceSchema(columns=(
+    "timestamp", "key", "key_size", "value_size", "client_id", "op", "ttl"))
+
+#: The Meta/CacheLib kvcache trace shape (op_count collapsed per row).
+META_SCHEMA = TraceSchema(columns=(
+    "timestamp", "key", "key_size", "op", "-", "value_size", "ttl"))
+
+
+def _default_tenant_of() -> Callable[[str], int]:
+    """Map client ids to dense tenant indices: a trailing integer in the
+    id wins (``c17`` → 17 — what :func:`format_trace` emits, so round
+    trips are exact); otherwise first-seen order."""
+    seen: Dict[str, int] = {}
+
+    def tenant_of(client: str) -> int:
+        digits = ""
+        for ch in reversed(client):
+            if not ch.isdigit():
+                break
+            digits = ch + digits
+        if digits:
+            return int(digits)
+        if client not in seen:
+            seen[client] = len(seen)
+        return seen[client]
+
+    return tenant_of
+
+
+def parse_trace(source: Union[str, Iterable[str]], *,
+                schema: TraceSchema = TWITTER_SCHEMA,
+                tenant_of: Optional[Callable[[str], int]] = None,
+                max_tenants: int = 0,
+                max_ops: Optional[int] = None,
+                max_size: int = PAGE_SIZE,
+                delimiter: str = ",") -> List[TenantOp]:
+    """Parse one trace (a path or an iterable of CSV lines) into the
+    ``TenantOp`` stream the arbiter replays.
+
+    * ``set`` rows become set ops; a positive TTL column schedules the
+      matching delete at ``timestamp + ttl`` (emitted in timestamp
+      order, memcached lazy-expiry style: a later overwrite refreshes
+      the TTL; items whose TTL outlives the trace are never deleted).
+    * ``get`` rows carry the key's last-known stored size (the
+      read-through refill size) — falling back to the row's own value
+      size for keys first seen through a get.
+    * item size is ``key_size + value_size`` when the schema says
+      stored items carry their key (memcached does), clamped to
+      ``[0, max_size]`` so one corrupt row cannot poison a replay.
+    * ``max_tenants > 0`` folds the client-id space onto that many
+      tenants (trace client ids number thousands; the arbiter wants a
+      handful of tenant tags).
+
+    Blank lines and ``#`` comments are skipped; short rows raise.
+    """
+    tenant_fn = tenant_of or _default_tenant_of()
+    idx = {role: i for i, role in enumerate(schema.columns) if role != "-"}
+    need = max(idx.values()) + 1
+    ops: List[TenantOp] = []
+    # (expiry_ts, seq, tenant, key, ttl_tag): lazy-expiry heap
+    due: List[tuple] = []
+    live_ttl: Dict[str, float] = {}      # key -> current expiry timestamp
+    last_size: Dict[str, int] = {}       # key -> last stored size
+    ts = 0.0
+    lines = _iter_lines(source, delimiter)
+    for seq, row in enumerate(lines):
+        if len(row) < need:
+            raise ValueError(
+                f"trace row {seq} has {len(row)} columns, schema needs "
+                f"{need}: {row!r}")
+        if "timestamp" in idx:
+            ts = float(row[idx["timestamp"]])
+        while due and due[0][0] <= ts:
+            _, _, d_tenant, d_key, d_expiry = heapq.heappop(due)
+            if live_ttl.get(d_key) == d_expiry:     # not refreshed since
+                del live_ttl[d_key]
+                ops.append(TenantOp(d_tenant, "delete", d_key, 0))
+                if max_ops is not None and len(ops) >= max_ops:
+                    return ops
+        key = row[idx["key"]]
+        op = row[idx["op"]].strip().lower()
+        tenant = tenant_fn(row[idx["client_id"]]) if "client_id" in idx else 0
+        if max_tenants:
+            tenant %= max_tenants
+        size = _row_size(row, idx, schema, max_size)
+        if op in schema.delete_ops:
+            live_ttl.pop(key, None)
+            ops.append(TenantOp(tenant, "delete", key, 0))
+        elif op in schema.set_ops:
+            last_size[key] = size
+            ttl = float(row[idx["ttl"]]) if "ttl" in idx else 0.0
+            if ttl > 0:
+                expiry = ts + ttl
+                live_ttl[key] = expiry
+                heapq.heappush(due, (expiry, seq, tenant, key, expiry))
+            else:
+                live_ttl.pop(key, None)
+            ops.append(TenantOp(tenant, "set", key, size))
+        else:                            # get / gets / incr / cas / ...
+            ops.append(TenantOp(tenant, "get", key,
+                                last_size.get(key, size)))
+        if max_ops is not None and len(ops) >= max_ops:
+            return ops
+    return ops
+
+
+def _iter_lines(source: Union[str, Iterable[str]],
+                delimiter: str) -> Iterator[List[str]]:
+    if isinstance(source, str):
+        with open(source) as f:
+            yield from _iter_lines(f, delimiter)
+        return
+    for line in source:
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        yield line.split(delimiter)
+
+
+def _row_size(row: List[str], idx: Dict[str, int], schema: TraceSchema,
+              max_size: int) -> int:
+    size = 0
+    if "value_size" in idx:
+        size += int(float(row[idx["value_size"]]))
+    if schema.size_includes_key and "key_size" in idx:
+        size += int(float(row[idx["key_size"]]))
+    return max(0, min(size, max_size))
+
+
+# -- rendering (the synthetic-trace writer CI replays) -----------------------
+
+def format_trace(ops: Iterable[TenantOp], *,
+                 schema: TraceSchema = TWITTER_SCHEMA,
+                 delimiter: str = ",") -> Iterator[str]:
+    """Render a ``TenantOp`` stream as trace rows in ``schema``'s
+    dialect: timestamps are the op index, client ids are ``c<tenant>``
+    (so the default parser maps them straight back), deletes are
+    explicit rows (TTL 0 — the stream already carries its churn), and
+    sizes ride the value-size column. ``parse_trace(format_trace(ops))``
+    reproduces ``ops`` exactly."""
+    for i, op in enumerate(ops):
+        row = ["0"] * len(schema.columns)
+        for j, role in enumerate(schema.columns):
+            if role == "timestamp":
+                row[j] = str(i)
+            elif role == "key":
+                row[j] = op.key
+            elif role == "value_size":
+                row[j] = str(op.size if op.op != "delete" else 0)
+            elif role == "client_id":
+                row[j] = f"c{op.tenant}"
+            elif role == "op":
+                row[j] = op.op
+        yield delimiter.join(row)
+
+
+def write_trace(path: str, ops: Iterable[TenantOp], *,
+                schema: TraceSchema = TWITTER_SCHEMA) -> str:
+    """Write ``ops`` as a trace file (atomically: temp + rename, so a
+    killed writer can never leave a truncated trace for the next run
+    to replay). Returns ``path``."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        for line in format_trace(ops, schema=schema):
+            f.write(line + "\n")
+    os.replace(tmp, path)
+    return path
+
+
+def synthetic_trace_ops(kind: str = "phased", *, n_ops: int = 10_000,
+                        n_tenants: int = 3, seed: int = 0,
+                        workloads=None) -> List[TenantOp]:
+    """A realistic op stream from the repo's own generators, for trace
+    round-trips without downloads: ``"phased"`` (out-of-phase tenant
+    peaks + TTL churn) or ``"zipfian"`` (Zipf re-references with a
+    mid-stream tail shift)."""
+    from repro.core.distribution import PAPER_WORKLOADS
+    workloads = (PAPER_WORKLOADS[:n_tenants] if workloads is None
+                 else workloads)
+    if kind == "phased":
+        return multitenant_phased_ops(workloads, n_sets=n_ops,
+                                      trough_mix=0.5, seed=seed)
+    if kind == "zipfian":
+        return zipfian_rereference_ops(workloads, n_ops=n_ops, seed=seed)
+    raise ValueError(f"unknown synthetic trace kind {kind!r}")
+
+
+# -- down-sampling -----------------------------------------------------------
+
+def downsample(ops: Iterable[TenantOp], keep: float, *,
+               seed: int = 0) -> List[TenantOp]:
+    """Thin a trace to ~``keep`` of its keys, deterministically.
+
+    Sampling is by *key hash* (salted with ``seed``): every op of a
+    sampled key survives, every op of a dropped key vanishes — so
+    set/delete pairs stay paired and a key's re-reference pattern is
+    intact, which per-op sampling would destroy. ``keep=1`` is the
+    identity."""
+    if not 0.0 < keep <= 1.0:
+        raise ValueError(f"keep must be in (0, 1], got {keep}")
+    if keep == 1.0:
+        return list(ops)
+    cut = int(keep * (1 << 32))
+    salt = f"{seed}:".encode()
+
+    def kept(key: str) -> bool:
+        return zlib.crc32(salt + key.encode()) < cut
+
+    return [op for op in ops if kept(op.key)]
+
+
+def trace_histogram(ops: Iterable[TenantOp]):
+    """``(support, freqs)`` of the stored sizes in a trace — what an
+    offline fitter (or the adversary's oracle) consumes."""
+    sizes = np.asarray([op.size for op in ops if op.op == "set"],
+                       dtype=np.int64)
+    if sizes.size == 0:
+        return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
+    support, freqs = np.unique(sizes, return_counts=True)
+    return support.astype(np.int64), freqs.astype(np.int64)

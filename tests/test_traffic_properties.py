@@ -1,0 +1,134 @@
+"""Hypothesis properties every traffic generator must hold.
+
+The torture suite replays these streams through allocators that charge
+real bytes, so the generators carry contracts: bit-determinism under a
+fixed seed (fixtures and CI compares depend on replayability), sizes a
+driver can always store-and-charge (positive, at most a page, so
+``charge_waste`` never goes negative), and coherent tenant tagging
+(every op of a key carries the key's tenant, gets carry the refill size
+of the last set) — the properties the chaos layer assumes when it
+perturbs a stream.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+import numpy as np
+
+from repro.core.distribution import PAGE_SIZE, PAPER_WORKLOADS
+from repro.memcached.traffic import (diurnal_multimodal_traffic,
+                                     diurnal_traffic, drift_traffic,
+                                     multitenant_phased_ops,
+                                     phase_shift_traffic,
+                                     zipfian_rereference_ops)
+
+W = st.integers(0, len(PAPER_WORKLOADS) - 1)
+SEED = st.integers(0, 2**16 - 1)
+N = st.integers(50, 400)
+SETTINGS = dict(max_examples=25, deadline=None)
+
+MODES = [(1.0, 96.0, 20.0), (0.6, 512.0, 64.0), (0.4, 2048.0, 300.0)]
+
+
+def _size_generators(a, b, n, seed):
+    """Every size-array generator, invoked identically twice."""
+    wa, wb = PAPER_WORKLOADS[a], PAPER_WORKLOADS[b]
+    yield lambda: phase_shift_traffic(wa, wb, n_items=n, shift_at=0.5,
+                                      seed=seed)
+    yield lambda: drift_traffic(wa, wb, n_items=n, seed=seed)
+    yield lambda: diurnal_traffic(wa, wb, n_items=n, period=max(4, n // 3),
+                                  seed=seed)
+    yield lambda: diurnal_multimodal_traffic(MODES[:2], MODES[1:], n_items=n,
+                                             period=max(4, n // 3),
+                                             seed=seed)
+
+
+def _op_generators(a, b, n, seed):
+    """Every TenantOp-stream generator, invoked identically twice."""
+    workloads = [PAPER_WORKLOADS[a], PAPER_WORKLOADS[b]]
+    yield lambda: multitenant_phased_ops(workloads, n_sets=n,
+                                         trough_mix=0.5, seed=seed)
+    yield lambda: zipfian_rereference_ops(workloads, n_ops=n, seed=seed)
+
+
+@hypothesis.given(a=W, b=W, n=N, seed=SEED)
+@hypothesis.settings(**SETTINGS)
+def test_size_generators_deterministic_and_chargeable(a, b, n, seed):
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent
+                           / "benchmarks"))
+    from adaptive_bench import charge_waste
+    chunks = np.asarray([64, 256, 1024, 4096, PAGE_SIZE], dtype=np.int64)
+    for gen in _size_generators(a, b, n, seed):
+        first, second = gen(), gen()
+        np.testing.assert_array_equal(first, second)
+        assert len(first) == n
+        assert np.all(first >= 1), "sizes must be storable (positive)"
+        assert np.all(first <= PAGE_SIZE), "sizes must fit one page"
+        # spot-check the charging rule stays non-negative on the stream
+        for s in np.unique(first)[:: max(1, len(np.unique(first)) // 8)]:
+            assert charge_waste(chunks, int(s), PAGE_SIZE) >= 0
+
+
+@hypothesis.given(a=W, b=W, n=N, seed=SEED)
+@hypothesis.settings(**SETTINGS)
+def test_op_generators_deterministic(a, b, n, seed):
+    for gen in _op_generators(a, b, n, seed):
+        assert gen() == gen()
+
+
+@hypothesis.given(a=W, b=W, n=N, seed=SEED)
+@hypothesis.settings(**SETTINGS)
+def test_op_generators_sizes_and_ops_well_formed(a, b, n, seed):
+    for gen in _op_generators(a, b, n, seed):
+        for op in gen():
+            assert op.op in ("set", "get", "delete")
+            assert 0 <= op.tenant < 2
+            if op.op == "delete":
+                assert op.size == 0
+            else:
+                assert 1 <= op.size <= PAGE_SIZE
+
+
+@hypothesis.given(a=W, b=W, n=N, seed=SEED)
+@hypothesis.settings(**SETTINGS)
+def test_op_generators_preserve_tenant_tag_totals(a, b, n, seed):
+    """Tenant tagging is coherent: a key belongs to exactly one tenant
+    for its whole life, both tenants get traffic, and the per-tenant
+    set-byte totals are reproducible under the seed (what the chaos
+    layer's bookkeeping and the arbiter's per-tenant accounting rely
+    on)."""
+    for gen in _op_generators(a, b, n, seed):
+        ops = gen()
+        key_tenant = {}
+        totals = {0: 0, 1: 0}
+        for op in ops:
+            assert key_tenant.setdefault(op.key, op.tenant) == op.tenant, \
+                "a key changed tenants mid-stream"
+            if op.op == "set":
+                totals[op.tenant] += op.size
+        assert totals[0] > 0 and totals[1] > 0
+        retotals = {0: 0, 1: 0}
+        for op in gen():
+            if op.op == "set":
+                retotals[op.tenant] += op.size
+        assert retotals == totals
+
+
+@hypothesis.given(a=W, b=W, n=N, seed=SEED)
+@hypothesis.settings(**SETTINGS)
+def test_get_ops_carry_last_stored_size(a, b, n, seed):
+    """A get's size is the read-through refill size: it must equal the
+    key's most recent set size (or the size the first set of that key
+    will use), so a driver's refill restores exactly what was (or will
+    be) resident."""
+    for gen in _op_generators(a, b, n, seed):
+        last = {}
+        for op in gen():
+            if op.op == "set":
+                if op.key in last:
+                    assert op.size == last[op.key]
+                last[op.key] = op.size
+            elif op.op == "get" and op.key in last:
+                assert op.size == last[op.key]
