@@ -44,7 +44,10 @@ N_SETS = 20_000
 K = 6
 SCENARIOS = ("trace_replay", "join_leave", "flash_crowd", "size_step",
              "ttl_storm", "adversarial_drift", "kv_chaos")
-AXES = ("reactive", "forecast")
+# policy columns; "fleet" = the forecast policy decided by
+# TenantArbiter(fleet=True) stacked state (decision-identical to
+# "forecast" — the fleet-consistency invariant is what it tortures)
+AXES = ("reactive", "forecast", "fleet")
 
 
 def make_stream(scenario: str, *, n_sets: int, n_tenants: int = 3,
@@ -91,8 +94,11 @@ def make_stream(scenario: str, *, n_sets: int, n_tenants: int = 3,
 
 
 def _build_arbiter(n_tenants: int, *, total_pages: int, axis: str,
-                   check_every: int) -> TenantArbiter:
-    forecast = DemandForecaster(ring=16) if axis == "forecast" else None
+                   check_every: int, fleet: bool = False
+                   ) -> TenantArbiter:
+    fleet = fleet or axis == "fleet"
+    forecast = (DemandForecaster(ring=16)
+                if axis in ("forecast", "fleet") else None)
     cfg = ControllerConfig(
         k=K, page_size=PAGE_SIZE, check_every=check_every,
         drift_threshold=0.12, min_items_between_refits=2 * check_every,
@@ -101,7 +107,7 @@ def _build_arbiter(n_tenants: int, *, total_pages: int, axis: str,
     arb = TenantArbiter(pool, controller_config=cfg,
                         arbitrate_every=max(500, check_every // 2),
                         amortization_windows=8.0, cost_weight=0.1,
-                        forecast=forecast)
+                        forecast=forecast, fleet=fleet)
     classes = default_memcached_schedule(page_size=PAGE_SIZE)
     for t in range(n_tenants):
         name = f"tenant{t}"
@@ -114,13 +120,17 @@ def _build_arbiter(n_tenants: int, *, total_pages: int, axis: str,
 
 
 def drive(ops, marks, *, n_tenants: int, total_pages: int, axis: str,
-          check_every: int, sample_every: int = 250) -> Dict:
+          check_every: int, sample_every: int = 250,
+          fleet: bool = False) -> Dict:
     """Replay one scenario stream through the arbitrated stack,
     checking every invariant at every sample point. Chaos marks are
     fed to ``TenantArbiter.note_event`` as they are crossed, so the
-    forecast-miss accounting lines up with the injections."""
+    forecast-miss accounting lines up with the injections. ``fleet``
+    routes the same stream through ``TenantArbiter(fleet=True)`` —
+    chaos churn over stacked rows, with the fleet-consistency
+    invariant checked at every sample point."""
     arb = _build_arbiter(n_tenants, total_pages=total_pages, axis=axis,
-                         check_every=check_every)
+                         check_every=check_every, fleet=fleet)
     pool_bytes = total_pages * PAGE_SIZE
     marks = sorted(marks)
     mark_i = 0
@@ -156,10 +166,12 @@ def drive(ops, marks, *, n_tenants: int, total_pages: int, axis: str,
             violations.extend(check_all(
                 pool=arb.pool,
                 sketches=[t.controller.sketch
-                          for t in arb.tenants.values()]))
+                          for t in arb.tenants.values()],
+                arbiter=arb))
     violations.extend(check_all(
         pool=arb.pool,
-        sketches=[t.controller.sketch for t in arb.tenants.values()]))
+        sketches=[t.controller.sketch for t in arb.tenants.values()],
+        arbiter=arb))
     return {
         "n_ops": len(ops),
         "mean_hole_frac": (sum(hole_fracs) / max(len(hole_fracs), 1)),
@@ -223,7 +235,8 @@ def drive_kv(*, n_sets: int, axis: str, check_every: int,
         FlashCrowd(at=n // 3, duration=max(100, n // 6), tenant=0, boost=3),
         SizeStep(at=2 * n // 3, factor=1.7),
     ], seed=seed)
-    forecast = DemandForecaster(ring=16) if axis == "forecast" else None
+    forecast = (DemandForecaster(ring=16)
+                if axis in ("forecast", "fleet") else None)
     cfg = ControllerConfig(k=K, check_every=check_every, align=128,
                            min_chunk=128, page_size=1 << 13,
                            forecast=forecast)
@@ -231,7 +244,8 @@ def drive_kv(*, n_sets: int, axis: str, check_every: int,
                     controller_config=cfg)
     for t in tenants_of(base, []):
         kv.register_tenant(f"stream{t}", quota_tokens=n_sets * 80)
-    arb = token_quota_arbiter(kv, arbitrate_every=max(500, check_every))
+    arb = token_quota_arbiter(kv, arbitrate_every=max(500, check_every),
+                              fleet=axis == "fleet")
     live: Dict[str, int] = {}
     next_id = 0
     n_alloc = n_denied = 0
@@ -257,10 +271,10 @@ def drive_kv(*, n_sets: int, axis: str, check_every: int,
         if i % 250 == 0:
             violations.extend(check_all(pool=arb.pool,
                                         sketches=[kv.controller.sketch],
-                                        kv_pool=kv))
+                                        kv_pool=kv, arbiter=arb))
     violations.extend(check_all(pool=arb.pool,
                                 sketches=[kv.controller.sketch],
-                                kv_pool=kv))
+                                kv_pool=kv, arbiter=arb))
     s = kv.stats()
     return {
         "n_ops": len(res.ops),
@@ -352,9 +366,17 @@ def main(argv=None) -> int:
     out = run_matrix(n_sets=n_sets, scenarios=scenarios, axes=axes,
                      seed=args.seed)
     from bench_io import write_bench_json
-    name = "torture" if args.scenario == "all" and args.axis == "all" \
-        else f"torture_{args.scenario}_{args.axis}"
-    write_bench_json(name, out)
+    if args.scenario == "all" and args.axis == "all":
+        write_bench_json("torture", out)
+    else:
+        # sharded runs (the CI matrix) write under benchmarks/artifacts/
+        # instead of littering the repo root with one file per shard
+        art = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "artifacts")
+        os.makedirs(art, exist_ok=True)
+        name = f"torture_{args.scenario}_{args.axis}"
+        write_bench_json(name, out,
+                         path=os.path.join(art, f"BENCH_{name}.json"))
     print(json.dumps(out, indent=2, default=str))
     n_viol = out["worst_case"]["total_invariant_violations"]
     if n_viol:

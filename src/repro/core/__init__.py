@@ -12,6 +12,8 @@ Public surface:
     controller   — SlabController, the online observe→detect→refit loop
     arbiter      — ResourcePool/PagePool + TenantArbiter, cross-tenant
                    resource arbitration (pages, KV token quotas)
+    fleet        — FleetState, the per-tenant arbiter state stacked
+                   into [n_tenants, ...] arrays (TenantArbiter(fleet=True))
 """
 from repro.core.distribution import (PAGE_SIZE, PAPER_N_ITEMS,
                                      PAPER_WORKLOADS, PaperWorkload,
@@ -36,15 +38,16 @@ from repro.core.observe import (DecayedSizeHistogram, DeviceSizeSketch,
                                 histogram_distance,
                                 histogram_distance_device)
 from repro.core.forecast import (DemandForecaster, Forecast, Reactive,
-                                 blend_histograms)
+                                 acf_period_batch, blend_histograms)
 from repro.core.controller import (ControllerConfig, RefitDecision,
                                    SlabController)
 from repro.core.arbiter import (PagePool, ResourcePool, TenantArbiter,
                                 TenantPages, TransferDecision)
+from repro.core.fleet import FleetSketchView, FleetState
 
 
 def __getattr__(name):
-    if name == "StreamingSizeSketch":   # deprecated alias, see observe.py
+    if name == "StreamingSizeSketch":   # removed alias, see observe.py
         from repro.core import observe
         return observe.StreamingSizeSketch
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
@@ -62,8 +65,9 @@ __all__ = [
     "utilization_exact", "waste_batch_jax", "waste_exact", "waste_jax",
     "DecayedSizeHistogram", "DeviceSizeSketch",
     "histogram_distance", "histogram_distance_device",
-    "DemandForecaster", "Forecast", "Reactive", "blend_histograms",
+    "DemandForecaster", "Forecast", "Reactive", "acf_period_batch",
+    "blend_histograms",
     "ControllerConfig", "RefitDecision", "SlabController",
     "PagePool", "ResourcePool", "TenantArbiter", "TenantPages",
-    "TransferDecision",
+    "TransferDecision", "FleetSketchView", "FleetState",
 ]

@@ -126,6 +126,21 @@ class ResourcePool:
                 rec.floor = floor
         return rec
 
+    def unregister(self, tenant: str, *, force: bool = False) -> None:
+        """Remove ``tenant`` from the pool. The tenant must own nothing
+        (drain with ``release``/``release_page`` first) unless
+        ``force=True``, which returns any still-owned units to the free
+        pool — conservation holds either way."""
+        rec = self._tenants[tenant]
+        if rec.owned:
+            if not force:
+                raise ValueError(
+                    f"tenant {tenant!r} still owns {rec.owned} "
+                    f"{self.kind}; drain first or pass force=True")
+            self.free_units += rec.owned
+            rec.owned = 0
+        del self._tenants[tenant]
+
     def equal_partition(self, *, floor: Optional[int] = None) -> None:
         """Set every registered tenant's quota to an equal share of the
         pool (remainder units go to the earliest-registered tenants)."""
@@ -280,6 +295,11 @@ class _Tenant:
     # demand-forecast stream state
     window_demand_bytes: float = 0.0   # set payload since last round
     last_donated_at: int = -1          # op clock of last approved donation
+    # fleet mode: stacked-state row + duck-hooks cached at registration
+    row: int = -1
+    sync_owned_fn: Optional[object] = None
+    demand_fn: Optional[object] = None
+    apply_quota_fn: Optional[object] = None
 
 
 class TenantArbiter:
@@ -332,7 +352,9 @@ class TenantArbiter:
                  forecast_horizon: int = 1,
                  forecast_min_confidence: float = 0.35,
                  forecast_weight: float = 1.0,
-                 bounce_window: Optional[int] = None):
+                 bounce_window: Optional[int] = None,
+                 fleet: bool = False,
+                 fleet_capacity: int = 8):
         self.pool = pool
         self.controller_config = controller_config
         self.arbitrate_every = int(arbitrate_every)
@@ -359,6 +381,21 @@ class TenantArbiter:
         # many tenants came due together.
         self.n_score_launches = 0
         self.n_frontiers_scored = 0
+        # fleet=True: per-tenant state lives in stacked FleetState rows
+        # (pressure, quotas, forecast rings, cadence mirrors, device
+        # sketches) and every arbitration stage runs batched over the
+        # whole fleet; the per-tenant loop above stays available as the
+        # bit-exact oracle (fleet=False). n_gate_launches counts the
+        # one-launch-per-tick batched drift gate.
+        self.fleet = None
+        self.n_gate_launches = 0
+        self._by_row: Dict[int, _Tenant] = {}
+        self._sorted_cache: Optional[List[_Tenant]] = None
+        if fleet:
+            from repro.core.fleet import FleetState
+            self.fleet = FleetState(
+                capacity=fleet_capacity,
+                forecaster=self.forecaster if self._forecast_on else None)
 
     # -- registration --------------------------------------------------------
     def register(self, name: str, allocator, *,
@@ -383,13 +420,64 @@ class TenantArbiter:
             raise ValueError(
                 f"allocator tenant tag {allocator.tenant!r} != {name!r}")
         self.pool.register(name, quota=quota, floor=floor_pages)
+        row = -1
+        if self.fleet is not None:
+            row = self.fleet.alloc_row(name)
+            self.fleet.adopt_pool_record(self.pool, name)
         if controller is None:
             cfg = self.controller_config or ControllerConfig(
                 page_size=self.pool.unit_size)
-            controller = SlabController(allocator.chunk_sizes, config=cfg)
-        self.tenants[name] = _Tenant(name=name, allocator=allocator,
-                                     controller=controller)
+            sketch = None
+            if self.fleet is not None and cfg.device:
+                sketch = self.fleet.sketch_view(row, cfg)
+            controller = SlabController(allocator.chunk_sizes, config=cfg,
+                                        sketch=sketch)
+        t = _Tenant(name=name, allocator=allocator, controller=controller,
+                    row=row,
+                    sync_owned_fn=getattr(allocator, "sync_owned", None),
+                    demand_fn=getattr(allocator, "current_demand_bytes",
+                                      None),
+                    apply_quota_fn=getattr(allocator, "apply_quota", None))
+        self.tenants[name] = t
+        self._sorted_cache = None
+        if self.fleet is not None:
+            self._by_row[row] = t
+            self.fleet.check_every[row] = controller.config.check_every
+            self.fleet.since_check[row] = controller._since_check
         return controller
+
+    def remove(self, name: str, *, release_pages: bool = True):
+        """Unregister one tenant — the leave half of join/leave churn.
+
+        With ``release_pages`` (default) every unit the tenant still
+        owns is drained back to the free pool through its allocator's
+        ``release_page`` (evicting residents, the same reclaim path a
+        transfer uses); allocators without one (KV quota views) fall
+        back to a forced pool unregister, which frees the owned units
+        directly. In fleet mode the tenant's row is zeroed and pushed
+        on the free-list for the next joiner. Returns the tenant's
+        controller (callers may want its decision log)."""
+        t = self.tenants.pop(name)
+        self._sorted_cache = None
+        release = (getattr(t.allocator, "release_page", None)
+                   if release_pages else None)
+        while release is not None and self.pool.owned(name) > 0:
+            release()
+        self.pool.unregister(name, force=self.pool.owned(name) > 0)
+        if self.fleet is not None:
+            del self._by_row[t.row]
+            self.fleet.free_row(name)
+        return t.controller
+
+    def _sorted_tenants(self) -> List[_Tenant]:
+        """Tenants in sorted-name order — the legacy loop's selection
+        order, cached until membership changes (the fleet pricing
+        stages index arrays in exactly this order so argmax/lexsort
+        tie-breaking lands on the same tenant the legacy scan picks)."""
+        if self._sorted_cache is None:
+            self._sorted_cache = [self.tenants[n]
+                                  for n in sorted(self.tenants)]
+        return self._sorted_cache
 
     # -- traffic -------------------------------------------------------------
     def set(self, name: str, key: str, value_size: int) -> bool:
@@ -398,13 +486,31 @@ class TenantArbiter:
         t = self.tenants[name]
         stored = t.allocator.set(key, value_size)
         t.controller.observe(int(value_size) + t.allocator.item_overhead)
-        t.window_demand_bytes += float(value_size)
+        if self.fleet is None:
+            t.window_demand_bytes += float(value_size)
+        else:
+            self.fleet.window_demand[t.row] += float(value_size)
         self._maybe_refit_tenant(t)
+        if self.fleet is not None:
+            self.fleet.since_check[t.row] = t.controller._since_check
         self.n_ops += 1
         self._since_arbitrate += 1
         if self._since_arbitrate >= self.arbitrate_every:
             self.arbitrate()
         return stored
+
+    def observe(self, name: str, sizes, weights=None) -> None:
+        """Feed externally-measured sizes into one tenant's sketch
+        WITHOUT ticking the op cadence (pair with :meth:`tick` — the
+        serving layer's mode). This is the observation route fleet mode
+        requires: it keeps the stacked cadence mirror in sync, so the
+        vectorized due-scan in :meth:`tick` sees the tenant come due.
+        (Legacy mode scans every controller per tick, so direct
+        ``controller.observe`` calls also work there.)"""
+        t = self.tenants[name]
+        t.controller.observe_many(sizes, weights)
+        if self.fleet is not None:
+            self.fleet.since_check[t.row] = t.controller._since_check
 
     def get(self, name: str, key: str) -> bool:
         """Look up one item (touch-on-get feeds the tenant's eviction
@@ -435,10 +541,16 @@ class TenantArbiter:
         ``KVSlabPool.alloc`` and the batcher just reports op counts.
         Every tenant whose controller came due (externally-fed sketches)
         gets its drift check here, with all pending candidate frontiers
-        scored in ONE batched ``waste_eval`` launch."""
+        scored in ONE batched ``waste_eval`` launch. Fleet mode finds
+        the due tenants with one vectorized mask over the stacked
+        cadence mirror (kept in sync by :meth:`set`/:meth:`observe`)
+        and batches their device drift gates into one launch."""
         self.n_ops += int(n)
         self._since_arbitrate += int(n)
-        self._drain_checks(self.tenants.values())
+        if self.fleet is None:
+            self._drain_checks(self.tenants.values())
+        else:
+            self._drain_checks_fleet()
         if self._since_arbitrate >= self.arbitrate_every:
             self.arbitrate()
 
@@ -476,7 +588,7 @@ class TenantArbiter:
     def _maybe_refit_tenant(self, t: _Tenant) -> None:
         self._drain_checks([t])
 
-    def _drain_checks(self, tenants) -> None:
+    def _drain_checks(self, tenants, drifts=None) -> None:
         """Run every due tenant's drift check, batching all surviving
         candidate frontiers into one fleet ``waste_eval`` launch.
 
@@ -487,7 +599,9 @@ class TenantArbiter:
         solo-tenant decisions stay bit-identical to ``maybe_refit``;
         with several pending tenants the fleet kernel scores every
         frontier row against its own histogram in one launch (padding
-        is score-neutral — see ``score_requests``)."""
+        is score-neutral — see ``score_requests``). ``drifts`` maps
+        ``id(tenant)`` to a drift value precomputed by the fleet's
+        batched gate launch (see :meth:`_batched_gate`)."""
         pending = []
         for t in tenants:
             if not t.controller.check_due:
@@ -495,7 +609,9 @@ class TenantArbiter:
             out = t.controller.begin_check(
                 cost_bytes_fn=lambda c, _t=t:
                     _t.allocator.migration_cost_bytes(
-                        self._deploy_schedule(c)))
+                        self._deploy_schedule(c)),
+                precomputed_drift=(None if drifts is None
+                                   else drifts.get(id(t))))
             if out is None:
                 continue
             if isinstance(out, ScoreRequest):
@@ -524,6 +640,57 @@ class TenantArbiter:
             scores = [scored[id(req)] for _, req in pending]
         for (t, req), s in zip(pending, scores):
             self._apply_refit(t, t.controller.finish_check(req, s))
+
+    def _drain_checks_fleet(self) -> None:
+        """Fleet due-scan: one vectorized mask over the stacked cadence
+        mirror picks the due rows; their device drift gates run as one
+        batched launch; the surviving frontiers batch-score as usual."""
+        f = self.fleet
+        due_rows = np.nonzero(f.active
+                              & (f.check_every > 0)
+                              & (f.since_check >= f.check_every))[0]
+        if due_rows.size == 0:
+            return
+        due = [self._by_row[int(r)] for r in due_rows]
+        self._drain_checks(due, self._batched_gate(due))
+        for t in due:
+            f.since_check[t.row] = t.controller._since_check
+
+    def _batched_gate(self, due) -> Optional[Dict[int, float]]:
+        """One ``drift_gate_fleet`` launch + one vector readback for
+        every due device-sketch tenant with an adopted reference.
+
+        Returns ``id(tenant) -> drift`` for the gated tenants (others
+        fall through to their controller's solo gate). A single ready
+        tenant uses the solo fused flush+gate — same one-launch cost,
+        and bit-identical to legacy, matching the score-launch idiom.
+        Groups by (metric, grid) — one launch per group; fleets share
+        a controller_config, so in practice one group, one launch."""
+        ready = [t for t in due
+                 if t.controller._device
+                 and t.controller.reference is not None
+                 and t.controller.sketch.n_observed > 0]
+        if len(ready) < 2:
+            return None
+        groups: Dict[Tuple[str, int], List[_Tenant]] = {}
+        for t in ready:
+            key = (t.controller.config.drift_metric,
+                   int(t.controller.sketch.num_buckets))
+            groups.setdefault(key, []).append(t)
+        from repro.kernels.fleet_gate import drift_gate_fleet
+        import jax.numpy as jnp
+        out: Dict[int, float] = {}
+        for (metric, _), ts in groups.items():
+            for t in ts:
+                t.controller.sketch.flush_window()
+            refs = jnp.stack([t.controller.reference for t in ts])
+            live = jnp.stack([t.controller.sketch.weights_device
+                              for t in ts])
+            vals = np.asarray(drift_gate_fleet(refs, live, metric=metric))
+            self.n_gate_launches += 1
+            for t, v in zip(ts, vals):
+                out[id(t)] = float(v)
+        return out
 
     # -- arbitration ---------------------------------------------------------
     def _refresh_pressure(self) -> None:
@@ -583,6 +750,8 @@ class TenantArbiter:
 
     def arbitrate(self) -> List[TransferDecision]:
         """One arbitration round; returns this round's decisions."""
+        if self.fleet is not None:
+            return self._arbitrate_fleet()
         self._since_arbitrate = 0
         # Two passes: set_owned clamps growth to the units free at that
         # moment, so shrinking tenants must release first — the second
@@ -669,6 +838,133 @@ class TenantArbiter:
             recipient.pressure = max(
                 0.0, recipient.pressure - float(unit_size))
         self._reset_window()
+        return round_decisions
+
+    def _arbitrate_fleet(self) -> List[TransferDecision]:
+        """One arbitration round over the stacked fleet state.
+
+        Decision-for-decision (and bit-for-bit, on host sketches) the
+        same as the legacy loop in :meth:`arbitrate`, with every
+        O(n_tenants) Python pass replaced by one batched stage:
+
+        * pressure refresh — two ``np.fromiter`` gathers of the
+          allocator counters, then elementwise float64 (the exact ops
+          ``_refresh_pressure`` runs per tenant),
+        * forecast surcharge — one stacked ring push plus one batched
+          ACF pass (:meth:`FleetState.demand_growth`, which shares its
+          implementation with the scalar ``DemandForecaster``), once
+          per round — legacy recomputes it per transfer iteration, but
+          the rings don't change within a round, so once is identical,
+        * donor pricing — ``page_release_cost_bytes`` (a pure query) is
+          gathered once per round for the at-quota eligible tenants and
+          cached; after an executed transfer only the donor's entry is
+          invalidated (the one allocator that mutated). Selection is a
+          stable lexsort on (cost, pressure, sorted-name position) —
+          exactly the legacy scan's strict-< replacement rule.
+
+        Transfers still execute one at a time through the pool (each
+        changes the eligibility landscape for the next), so the
+        decision *sequence* is the legacy sequence.
+        """
+        self._since_arbitrate = 0
+        f = self.fleet
+        for _ in range(2):      # same two clamped-growth sync passes
+            for t in self.tenants.values():
+                if t.sync_owned_fn is not None:
+                    t.sync_owned_fn()
+        ts = self._sorted_tenants()
+        n = len(ts)
+        if n == 0:
+            return []
+        unit = self.pool.unit_size
+        rows = np.asarray([t.row for t in ts], dtype=np.int64)
+        ev = np.fromiter((t.allocator.evicted_bytes for t in ts),
+                         dtype=np.int64, count=n)
+        dn = np.fromiter((t.allocator.n_page_denials for t in ts),
+                         dtype=np.int64, count=n)
+        press = ((ev - f.evicted0[rows]).astype(np.float64)
+                 + (dn - f.denials0[rows]).astype(np.float64) * unit)
+        if self._forecast_on:
+            demand = f.window_demand[rows].copy()
+            for i, t in enumerate(ts):
+                if t.demand_fn is not None:
+                    demand[i] = float(t.demand_fn())
+            f.record_demand(rows, demand)
+            growth, conf = f.demand_growth(rows, self.forecast_horizon)
+            pen = np.where((conf >= self.forecast_min_confidence)
+                           & (growth > 0.0),
+                           self.forecast_weight * growth, 0.0)
+        else:
+            pen = np.zeros(n, dtype=np.float64)
+        release_cost = np.full(n, np.nan)   # per-round pure-query cache
+        has_cost = np.zeros(n, dtype=bool)
+        round_decisions: List[TransferDecision] = []
+        for _ in range(self.max_transfers_per_round):
+            ri = int(np.argmax(press))      # first max == legacy's scan
+            if press[ri] <= 0.0:
+                break    # nobody is starved; no decision to record
+            recipient = ts[ri]
+            benefit = (min(float(press[ri]), float(unit))
+                       * self.amortization_windows)
+            q = f.quota[rows]
+            can = (q >= 0) & (q - 1 >= f.floor[rows])
+            can[ri] = False
+            zero_cost = can & (f.owned[rows] < q)
+            for i in np.nonzero(can & ~zero_cost & ~has_cost)[0]:
+                c0 = ts[i].allocator.page_release_cost_bytes()
+                release_cost[i] = np.nan if c0 is None else float(c0)
+                has_cost[i] = True
+            base = np.where(zero_cost, 0.0, release_cost)
+            c = base + pen
+            elig = can & ~np.isnan(base)
+            if not elig.any():
+                round_decisions.append(self._decide(
+                    False, "no-eligible-donor", None, recipient.name,
+                    benefit, 0.0))
+                break
+            idx = np.nonzero(elig)[0]
+            # stable sort by (cost, pressure), position ascending within
+            # ties — the legacy strict-< scan's winner
+            di = int(idx[np.lexsort((press[idx], c[idx]))[0]])
+            donor = ts[di]
+            donor_cost = float(c[di])
+            donor_penalty = float(pen[di])
+            cost = (self.cost_weight * float(donor_cost - donor_penalty)
+                    + donor_penalty)
+            if benefit <= cost:
+                round_decisions.append(self._decide(
+                    False, "cost-exceeds-benefit", donor.name,
+                    recipient.name, benefit, cost,
+                    forecast_penalty=donor_penalty))
+                break
+            self.pool.move_quota(donor.name, recipient.name, 1)
+            evicted_items = evicted_bytes = 0
+            if self.pool.owned(donor.name) > self.pool.quota(donor.name):
+                evicted_items, evicted_bytes = donor.allocator.release_page()
+            for moved in (donor, recipient):
+                if moved.apply_quota_fn is not None:
+                    moved.apply_quota_fn(self.pool.quota(moved.name))
+            self.n_transfers += 1
+            if (f.last_donated[recipient.row] >= 0
+                    and self.n_ops - f.last_donated[recipient.row]
+                    <= self.bounce_window):
+                self.n_bounced += 1
+            f.last_donated[donor.row] = self.n_ops
+            round_decisions.append(self._decide(
+                True, "transfer", donor.name, recipient.name, benefit,
+                cost, evicted_items=evicted_items,
+                evicted_bytes=evicted_bytes,
+                forecast_penalty=donor_penalty))
+            press[ri] = max(0.0, float(press[ri]) - float(unit))
+            has_cost[di] = False      # the one allocator that mutated
+        f.pressure[rows] = press
+        f.evicted0[rows] = np.fromiter(
+            (t.allocator.evicted_bytes for t in ts), dtype=np.int64,
+            count=n)
+        f.denials0[rows] = np.fromiter(
+            (t.allocator.n_page_denials for t in ts), dtype=np.int64,
+            count=n)
+        f.window_demand[rows] = 0.0
         return round_decisions
 
     def _decide(self, approved: bool, reason: str, donor: Optional[str],

@@ -149,6 +149,21 @@ class ScoreRequest:
     new_reference: object = None     # blend reference (predictive path)
 
 
+def device_sketch_kwargs(config: ControllerConfig) -> dict:
+    """The :class:`~repro.core.observe.DeviceSizeSketch` constructor
+    kwargs a controller with ``config`` uses — shared with
+    :meth:`repro.core.fleet.FleetState.sketch_view` so a fleet-stacked
+    sketch row is configured exactly like a solo controller's sketch."""
+    half_life = config.half_life
+    if half_life is None:
+        half_life = 2.0 * config.check_every
+    if not np.isfinite(half_life):
+        half_life = None        # undecayed: full-history histogram
+    return dict(half_life=half_life, num_buckets=config.device_buckets,
+                bucket_width=config.device_bucket_width,
+                window=config.fused_observe)
+
+
 def _quantize_up(chunks: np.ndarray, align: int) -> np.ndarray:
     chunks = np.asarray(chunks, dtype=np.int64)
     if align > 1:
@@ -260,24 +275,22 @@ class SlabController:
     def __init__(self, chunk_sizes, *,
                  config: Optional[ControllerConfig] = None,
                  policy=None,
-                 reference: Optional[Tuple[np.ndarray, np.ndarray]] = None):
+                 reference: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                 sketch=None):
         self.config = config or ControllerConfig()
         self.chunks = np.unique(np.asarray(chunk_sizes, dtype=np.int64))
         if self.chunks.size == 0:
             raise ValueError("need at least one slab class")
-        half_life = self.config.half_life
-        if half_life is None:
-            half_life = 2.0 * self.config.check_every
-        if not np.isfinite(half_life):
-            half_life = None        # undecayed: full-history histogram
         self._device = bool(self.config.device)
-        if self._device:
-            self.sketch = DeviceSizeSketch(
-                half_life=half_life,
-                num_buckets=self.config.device_buckets,
-                bucket_width=self.config.device_bucket_width,
-                window=self.config.fused_observe)
+        if sketch is not None:
+            # Injected sketch (e.g. a FleetSketchView over a stacked
+            # fleet row) — must match the config's path.
+            self.sketch = sketch
+        elif self._device:
+            self.sketch = DeviceSizeSketch(**device_sketch_kwargs(
+                self.config))
         else:
+            half_life = device_sketch_kwargs(self.config)["half_life"]
             self.sketch = DecayedSizeHistogram(
                 half_life=half_life, max_bins=self.config.max_bins)
         self._policy = policy
@@ -415,7 +428,7 @@ class SlabController:
 
     def begin_check(self,
                     cost_bytes_fn: Optional[Callable[[np.ndarray], float]]
-                    = None):
+                    = None, *, precomputed_drift: Optional[float] = None):
         """First half of a drift check: run every gate up to candidate
         scoring. Returns ``None`` (not due / nothing observed), a
         final :class:`RefitDecision` (a gate declined), or a
@@ -423,6 +436,14 @@ class SlabController:
         :meth:`finish_check` — the arbiter batches many tenants'
         requests into one ``waste_eval`` launch; :meth:`maybe_refit`
         scores a single request inline.
+
+        ``precomputed_drift`` is the fleet seam: when the arbiter has
+        already computed this controller's drift in a batched gate
+        launch (``repro.kernels.fleet_gate.drift_gate_fleet`` over
+        every due tenant at once), passing it here skips the solo
+        distance computation — the rest of the pipeline runs
+        unchanged. The caller is responsible for having flushed any
+        buffered device window before computing the value it passes.
         """
         if self._since_check < self.config.check_every:
             return None
@@ -439,7 +460,7 @@ class SlabController:
             if self.sketch.n_observed == 0:
                 return None
             drift_dev = None
-            if self.reference is not None:
+            if self.reference is not None and precomputed_drift is None:
                 drift_dev = self.sketch.flush_window(
                     reference=self.reference,
                     metric=self.config.drift_metric)
@@ -450,7 +471,9 @@ class SlabController:
             if self.reference is None:
                 self.reference = self.sketch.weights_device
                 return None
-            if drift_dev is None:
+            if precomputed_drift is not None:
+                drift = float(precomputed_drift)
+            elif drift_dev is None:
                 drift = self.drift()    # nothing was buffered this window
             else:
                 self.sketch.n_scalar_syncs += 1
@@ -470,8 +493,10 @@ class SlabController:
                 # initial schedule is presumed fit to.
                 self.reference = live
                 return None
-            drift = histogram_distance(self.reference, live,
-                                       metric=self.config.drift_metric)
+            drift = (float(precomputed_drift)
+                     if precomputed_drift is not None
+                     else histogram_distance(self.reference, live,
+                                             metric=self.config.drift_metric))
         self.last_drift = drift
         if drift < self.config.drift_threshold:
             if self._forecast_on:

@@ -170,39 +170,19 @@ class DemandForecaster:
         alike), so the global max would lock onto lag 2 and never see
         the cycle; the true period is where the ACF *peaks*. A flat
         series has no period (every lag would correlate perfectly, but
-        there is nothing to forecast)."""
+        there is nothing to forecast).
+
+        Delegates to :func:`acf_period_batch` with a single row, so the
+        scalar answer and the fleet-batched answer go through the one
+        implementation and cannot diverge (the bit-parity contract the
+        ``TenantArbiter(fleet=True)`` differential suite relies on)."""
         s = self.demand_series(stream)
-        max_lag = int(len(s) / self.min_cycles)
-        if max_lag < 3:
+        lags, confs = acf_period_batch(
+            s[None, :], np.array([len(s)], dtype=np.int64),
+            min_cycles=self.min_cycles, min_confidence=self.min_confidence)
+        if lags[0] < 0:
             return None, 0.0
-        s = s - s.mean()
-        var = float(np.dot(s, s))
-        if var <= 0.0 or not np.isfinite(var):
-            return None, 0.0
-        denom_floor = 1e-12 * var
-        acf = np.full(max_lag + 2, -np.inf)
-        for lag in range(1, max_lag + 2):
-            if lag >= len(s):
-                break
-            a, b = s[lag:], s[:-lag]
-            denom = float(np.sqrt(np.dot(a, a) * np.dot(b, b)))
-            if denom <= denom_floor:
-                continue
-            acf[lag] = float(np.dot(a, b)) / denom
-        best_lag, best_r = None, 0.0
-        for lag in range(2, max_lag + 1):
-            r = acf[lag]
-            # a peak, not a shoulder: both neighbours must be computed
-            # and lower — a series too short to see past the candidate
-            # lag yields None rather than a spurious smooth-lag match
-            if not np.isfinite(r) or not np.isfinite(acf[lag - 1]) \
-                    or not np.isfinite(acf[lag + 1]):
-                continue
-            if acf[lag - 1] <= r >= acf[lag + 1] and r > best_r:
-                best_lag, best_r = lag, r
-        if best_lag is None or best_r < self.min_confidence:
-            return None, 0.0
-        return best_lag, best_r
+        return int(lags[0]), float(confs[0])
 
     # -- prediction ----------------------------------------------------------
     def predict(self, stream: str, horizon: int = 1) -> Optional[Forecast]:
@@ -237,6 +217,73 @@ class DemandForecaster:
             return 0.0, 0.0
         s = self.demand_series(stream)
         return fc.demand_bytes - float(s[-1]), fc.confidence
+
+
+def acf_period_batch(series: np.ndarray, lengths: np.ndarray, *,
+                     min_cycles: float, min_confidence: float
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized ACF peak detection over many demand series at once.
+
+    ``series`` is ``[n_streams, max_len]`` float64, row ``c`` valid over
+    ``series[c, :lengths[c]]`` (entries past the length are ignored).
+    Returns ``(lags, confs)``: detected period per row (``-1`` for none)
+    and its autocorrelation (``0.0`` for none).
+
+    Rows are grouped by length and each group is processed on arrays
+    trimmed to exactly that length, with all inner products going
+    through one ``np.einsum`` code path. That makes a batch of N rows
+    bit-identical to N single-row calls — the reduction order depends
+    only on the row length, never on the batch size — which is what
+    lets :meth:`DemandForecaster.period` (scalar, legacy arbiter) and
+    the fleet-stacked ring (``TenantArbiter(fleet=True)``) share this
+    one implementation and stay decision-identical.
+
+    Lengths saturate at the forecaster ring size, so a steady fleet
+    collapses to a single group; join/leave churn adds at most one
+    group per distinct join cohort.
+    """
+    series = np.asarray(series, dtype=np.float64)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    n = series.shape[0]
+    lags = np.full(n, -1, dtype=np.int64)
+    confs = np.zeros(n, dtype=np.float64)
+    for ln in np.unique(lengths):
+        max_lag = int(int(ln) / min_cycles)
+        if max_lag < 3:
+            continue
+        idx = np.nonzero(lengths == ln)[0]
+        length = int(ln)
+        s = series[idx, :length]
+        mean = np.einsum("cj->c", s) / float(length)
+        s = s - mean[:, None]
+        var = np.einsum("cj,cj->c", s, s)
+        ok = (var > 0.0) & np.isfinite(var)
+        denom_floor = 1e-12 * var
+        acf = np.full((len(idx), max_lag + 2), -np.inf)
+        for lag in range(1, max_lag + 2):
+            if lag >= length:
+                break
+            a, b = s[:, lag:], s[:, :length - lag]
+            denom = np.sqrt(np.einsum("cj,cj->c", a, a)
+                            * np.einsum("cj,cj->c", b, b))
+            num = np.einsum("cj,cj->c", a, b)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                vals = num / denom
+            acf[:, lag] = np.where(ok & (denom > denom_floor), vals,
+                                   -np.inf)
+        best_r = np.zeros(len(idx))
+        best_lag = np.full(len(idx), -1, dtype=np.int64)
+        for lag in range(2, max_lag + 1):
+            r, lo, hi = acf[:, lag], acf[:, lag - 1], acf[:, lag + 1]
+            # a peak, not a shoulder: both neighbours computed and lower
+            cand = (np.isfinite(r) & np.isfinite(lo) & np.isfinite(hi)
+                    & (lo <= r) & (r >= hi) & (r > best_r))
+            best_lag = np.where(cand, lag, best_lag)
+            best_r = np.where(cand, r, best_r)
+        good = (best_lag >= 0) & (best_r >= min_confidence)
+        lags[idx] = np.where(good, best_lag, -1)
+        confs[idx] = np.where(good, best_r, 0.0)
+    return lags, confs
 
 
 def blend_histograms(live: Tuple[np.ndarray, np.ndarray],

@@ -169,17 +169,14 @@ class DecayedSizeHistogram:
 
 
 def __getattr__(name):
-    # Deprecated alias: the early docs called this the "streaming size
-    # sketch"; the class has been DecayedSizeHistogram since PR 1 and
-    # every in-repo consumer now says so. The shim keeps old imports
-    # working one release longer, loudly.
+    # The "streaming size sketch" alias from the early docs was
+    # deprecated in PR 5 and removed in PR 8. ImportError (not
+    # AttributeError) so `from repro.core.observe import ...` surfaces
+    # THIS message instead of a generic cannot-import line.
     if name == "StreamingSizeSketch":
-        import warnings
-        warnings.warn(
-            "StreamingSizeSketch is a deprecated alias; use "
-            "repro.core.observe.DecayedSizeHistogram",
-            DeprecationWarning, stacklevel=2)
-        return DecayedSizeHistogram
+        raise ImportError(
+            "StreamingSizeSketch was removed; use "
+            "repro.core.observe.DecayedSizeHistogram instead")
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

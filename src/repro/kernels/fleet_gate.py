@@ -1,0 +1,58 @@
+"""Fleet-batched drift gate — one launch for every due tenant.
+
+The legacy arbiter runs each due tenant's drift gate as its own device
+launch (fused into that tenant's observe-window flush). At fleet scale
+that is O(due tenants) dispatches per tick; this module collapses the
+whole gate stage into ONE vmapped jitted launch over stacked
+``[n_due, num_buckets]`` reference / live-sketch weight matrices,
+followed by a single vector readback — the per-stage dispatch
+accounting ``TenantArbiter(fleet=True)`` reports as
+``n_gate_launches``.
+
+The per-row math is :func:`repro.core.observe._dense_distance` — the
+exact traced ops the solo gate (``histogram_distance_device`` and the
+fused observe-window flush) runs — so a fleet row computes the same
+distance the tenant would have computed alone, up to vmap's reduction
+framing (float32 sums may differ in the last ulp; the bit-identical
+differential contract is carried by the host-sketch path, and the
+device path is held to decision-level parity in ``tests/test_fleet.py``).
+"""
+from __future__ import annotations
+
+_GATE_CACHE = {}
+
+
+def _build_gate(metric: str):
+    import jax
+
+    from repro.core.observe import _dense_distance
+
+    @jax.jit
+    def gate(refs, sketches):
+        return jax.vmap(lambda a, b: _dense_distance(a, b, metric))(
+            refs, sketches)
+
+    return gate
+
+
+def drift_gate_fleet(refs, sketches, *, metric: str = "l1"):
+    """Drift distance per fleet row, in one jitted launch.
+
+    ``refs`` and ``sketches`` are ``[n, num_buckets]`` stacks of dense
+    per-bucket weight vectors (reference vs live, same grid). Returns a
+    ``[n]`` device vector of distances in [0, 1]; the caller reads it
+    back in one host sync for the whole fleet.
+    """
+    if metric not in ("l1", "emd"):
+        raise ValueError(f"unknown metric {metric!r}")
+    fn = _GATE_CACHE.get(metric)
+    if fn is None:
+        fn = _GATE_CACHE[metric] = _build_gate(metric)
+    import jax.numpy as jnp
+    refs = jnp.asarray(refs)
+    sketches = jnp.asarray(sketches)
+    if refs.ndim != 2 or refs.shape != sketches.shape:
+        raise ValueError(
+            f"need matching [n, buckets] stacks, got {refs.shape} "
+            f"vs {sketches.shape}")
+    return fn(refs, sketches)

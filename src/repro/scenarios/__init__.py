@@ -13,7 +13,8 @@ harness — see ``docs/scenarios.md``:
   maximizing controller regret vs the hindsight dp-optimal schedule;
   worst finds persist under ``fixtures/`` as pinned regressions.
 * :mod:`repro.scenarios.invariants` — conservation / sketch-mass /
-  dispatch-accounting / KV-token checkers the bench gates CI on.
+  dispatch-accounting / KV-token / fleet-consistency checkers the
+  bench gates CI on.
 """
 from repro.scenarios.adversary import (DriftSchedule, EvalResult,
                                        SearchResult, WORST_FIXTURE, evaluate,
@@ -24,7 +25,8 @@ from repro.scenarios.chaos import (ChaosResult, FlashCrowd, SizeStep,
                                    apply_chaos, tenants_of)
 from repro.scenarios.invariants import (check_all, check_conservation,
                                         check_dispatch_accounting,
-                                        check_kv_pool, check_sketch_mass)
+                                        check_fleet, check_kv_pool,
+                                        check_sketch_mass)
 from repro.scenarios.trace import (META_SCHEMA, TWITTER_SCHEMA, TraceSchema,
                                    downsample, format_trace, parse_trace,
                                    synthetic_trace_ops, trace_histogram,
@@ -39,5 +41,5 @@ __all__ = [
     "DriftSchedule", "EvalResult", "SearchResult", "evaluate", "search",
     "save_fixture", "load_fixture", "replay_fixture", "WORST_FIXTURE",
     "check_all", "check_conservation", "check_sketch_mass",
-    "check_dispatch_accounting", "check_kv_pool",
+    "check_dispatch_accounting", "check_fleet", "check_kv_pool",
 ]

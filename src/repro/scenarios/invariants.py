@@ -89,8 +89,77 @@ def check_kv_pool(kv_pool) -> List[str]:
     return out
 
 
+def check_fleet(arbiter) -> List[str]:
+    """Fleet-consistency contract for ``TenantArbiter(fleet=True)``
+    (no-op on a legacy arbiter): the stacked arrays, the pool records
+    they masquerade as, the allocators' own page counts, and the row
+    bookkeeping must all tell one story, and freed rows must hold zero
+    mass everywhere — including their stacked device-sketch rows,
+    summed in one launch however many rows are free."""
+    f = getattr(arbiter, "fleet", None)
+    if f is None:
+        return []
+    out: List[str] = []
+    import numpy as np
+    pool = arbiter.pool
+    # stacked totals: active rows' owned + pool free == pool total
+    owned_sum = int(f.owned[f.active].sum())
+    if owned_sum + pool.free_units != pool.total_units:
+        out.append(
+            f"fleet not conserved: sum(owned[active])={owned_sum} + "
+            f"free={pool.free_units} != total={pool.total_units}")
+    if f.n_active != len(arbiter.tenants):
+        out.append(f"fleet has {f.n_active} active rows for "
+                   f"{len(arbiter.tenants)} tenants")
+    for name, t in arbiter.tenants.items():
+        row = f.row_of.get(name)
+        if row is None or f.name_of[row] != name or not f.active[row]:
+            out.append(f"tenant {name!r} row bookkeeping broken "
+                       f"(row={row})")
+            continue
+        if int(f.owned[row]) != pool.owned(name):
+            out.append(
+                f"tenant {name!r}: fleet owned={int(f.owned[row])} != "
+                f"pool view {pool.owned(name)}")
+        q = pool.quota(name)
+        if int(f.quota[row]) != (-1 if q is None else q):
+            out.append(
+                f"tenant {name!r}: fleet quota={int(f.quota[row])} != "
+                f"pool view {q}")
+        pages = getattr(t.allocator, "pages_allocated", None)
+        if pages is not None and pages != int(f.owned[row]):
+            out.append(
+                f"tenant {name!r}: allocator holds {pages} pages, "
+                f"fleet row says {int(f.owned[row])}")
+        if int(f.check_every[row]) != t.controller.config.check_every:
+            out.append(f"tenant {name!r}: cadence mirror check_every="
+                       f"{int(f.check_every[row])} != config "
+                       f"{t.controller.config.check_every}")
+        if int(f.since_check[row]) != t.controller._since_check:
+            out.append(f"tenant {name!r}: cadence mirror since_check="
+                       f"{int(f.since_check[row])} != controller "
+                       f"{t.controller._since_check}")
+    free = ~f.active
+    for field in ("owned", "floor", "n_denied", "pressure",
+                  "window_demand", "since_check", "check_every",
+                  "ring_len"):
+        v = getattr(f, field)[free]
+        if v.size and np.abs(v).sum() != 0:
+            out.append(f"free fleet rows carry nonzero {field}")
+    if free.any():
+        if not (f.quota[free] == -1).all():
+            out.append("free fleet rows carry a quota")
+        if f.ring and np.abs(f.demand_ring[free]).sum() != 0:
+            out.append("free fleet rows carry demand-ring mass")
+        if f.sketch is not None:
+            mass = float(abs(f.sketch[np.nonzero(free)[0]]).sum())
+            if mass != 0.0:
+                out.append(f"free fleet rows carry sketch mass {mass}")
+    return out
+
+
 def check_all(*, pool=None, sketches=(), kv_pool=None,
-              max_windows: int = None) -> List[str]:
+              max_windows: int = None, arbiter=None) -> List[str]:
     """Run every applicable checker; one flat violation list."""
     out: List[str] = []
     if pool is not None:
@@ -101,4 +170,6 @@ def check_all(*, pool=None, sketches=(), kv_pool=None,
                                              max_windows=max_windows))
     if kv_pool is not None:
         out.extend(check_kv_pool(kv_pool))
+    if arbiter is not None:
+        out.extend(check_fleet(arbiter))
     return out

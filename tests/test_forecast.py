@@ -465,13 +465,12 @@ def test_batcher_ticks_arbiter():
     assert arb.n_ops == 8      # one tick per step
 
 
-# -- deprecated alias --------------------------------------------------------
+# -- removed alias -----------------------------------------------------------
 
-def test_streaming_size_sketch_alias_deprecated():
-    from repro.core import observe
-    with pytest.warns(DeprecationWarning, match="DecayedSizeHistogram"):
-        cls = observe.StreamingSizeSketch
-    assert cls is observe.DecayedSizeHistogram
-    import repro.core as core
-    assert core.__getattr__("StreamingSizeSketch") \
-        is observe.DecayedSizeHistogram
+def test_streaming_size_sketch_removed_with_pointer():
+    """The deprecated ``StreamingSizeSketch`` alias is gone; the error
+    must still point anyone holding an old import at the replacement."""
+    with pytest.raises(ImportError, match="DecayedSizeHistogram"):
+        from repro.core.observe import StreamingSizeSketch  # noqa: F401
+    with pytest.raises(ImportError, match="removed"):
+        from repro.core import StreamingSizeSketch  # noqa: F401

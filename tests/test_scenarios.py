@@ -16,7 +16,8 @@ from repro.scenarios import (META_SCHEMA, TWITTER_SCHEMA, DriftSchedule,
                              FlashCrowd, SizeStep, TenantJoin, TenantLeave,
                              TTLStorm, WORST_FIXTURE, apply_chaos, check_all,
                              check_conservation, check_dispatch_accounting,
-                             check_sketch_mass, downsample, evaluate,
+                             check_fleet, check_sketch_mass, downsample,
+                             evaluate,
                              format_trace, load_fixture, parse_trace,
                              replay_fixture, search, synthetic_trace_ops,
                              tenants_of, trace_histogram, write_trace)
@@ -298,13 +299,14 @@ def test_arbiter_note_event_forwards_to_tenants():
 
 # -- invariants under chaos -------------------------------------------------
 
-def _drive_with_invariants(events, n=1200, seed=13):
+def _drive_with_invariants(events, n=1200, seed=13, axis="reactive",
+                           fleet=False):
     from torture_bench import drive
     base = _base(n=n, seed=seed)
     res = apply_chaos(base, events, seed=seed)
     return drive(res.ops, res.marks, n_tenants=3,
-                 total_pages=max(12, 3 * n // 1000), axis="reactive",
-                 check_every=max(200, n // 6))
+                 total_pages=max(12, 3 * n // 1000), axis=axis,
+                 check_every=max(200, n // 6), fleet=fleet)
 
 
 def test_invariants_hold_under_join_leave():
@@ -320,6 +322,52 @@ def test_invariants_hold_under_flash_crowd():
     out = _drive_with_invariants(
         [FlashCrowd(at=300, duration=300, tenant=1, boost=3)])
     assert out["violations"] == []
+
+
+def test_fleet_invariants_hold_under_join_leave_chaos():
+    """The same chaos stream through ``TenantArbiter(fleet=True)``:
+    tenant churn allocates and frees stacked rows mid-stream, and the
+    fleet-consistency checker (stacked totals, per-view equality, free
+    rows hold zero mass) runs at every sample point."""
+    out = _drive_with_invariants([
+        TenantJoin(at=300, tenant=3, workload=PAPER_WORKLOADS[4],
+                   rate=0.4, lifetime=200),
+        TenantLeave(at=800, tenant=0, flush=True)], fleet=True)
+    assert out["violations"] == []
+    assert out["n_events"] == 2
+
+
+def test_fleet_invariants_hold_under_flash_crowd_forecast():
+    out = _drive_with_invariants(
+        [FlashCrowd(at=300, duration=300, tenant=1, boost=3)],
+        axis="fleet")
+    assert out["violations"] == []
+
+
+def test_fleet_checker_catches_desync():
+    """check_fleet must actually bite: corrupt one stacked counter and
+    one freed row, expect both violations named."""
+    pool = PagePool(8, page_size=PAGE_SIZE)
+    cfg = ControllerConfig(k=4, check_every=10**9, page_size=PAGE_SIZE)
+    arb = TenantArbiter(pool, controller_config=cfg, fleet=True)
+    for name in ("a", "b"):
+        arb.register(name, SlabAllocator(
+            [256, 1024], page_size=PAGE_SIZE, page_pool=pool,
+            tenant=name))
+    pool.equal_partition(floor=1)
+    for i in range(20):
+        arb.set("a", f"k{i}", 800)
+    assert check_fleet(arb) == []
+    assert check_fleet(object()) == []            # legacy arbiter: no-op
+    arb.fleet.owned[arb.tenants["a"].row] += 1    # desync the view
+    assert any("not conserved" in v for v in check_fleet(arb))
+    arb.fleet.owned[arb.tenants["a"].row] -= 1
+    arb.remove("b")
+    assert check_fleet(arb) == []
+    freed = [r for r in range(arb.fleet.capacity)
+             if not arb.fleet.active[r]][0]
+    arb.fleet.window_demand[freed] = 3.0          # mass on a free row
+    assert any("free fleet rows" in v for v in check_fleet(arb))
 
 
 def test_sketch_mass_checker_catches_a_leak():
