@@ -188,27 +188,35 @@ def bench_cell(n_tenants: int, *, seed: int = 7) -> Dict:
 
 
 def gate_cell(n_tenants: int = 24, *, rounds: int = 8,
-              seed: int = 7) -> Dict:
+              seed: int = 7, guard: bool = False) -> Dict:
     """Device-sketch dispatch accounting: ``observe``/``tick`` driven
     (the serving mode), all tenants coming due together each check
     window. Fleet must hold ``gate + score launches <= 2 * ticks``;
     refit verdicts must agree with legacy (drift to float tolerance —
     the batched gate and the fused solo gate reduce in different
     launch shapes)."""
+    from contextlib import nullcontext
+
+    from repro.analysis.guards import no_implicit_transfers
+
     w = len(PAPER_WORKLOADS)
     side: Dict[str, Dict] = {}
     for mode, fleet in (("legacy", False), ("fleet", True)):
         arb = build_arbiter(n_tenants, fleet=fleet, check_every=128,
                             device=True)
         rng = np.random.default_rng(seed)
-        for r in range(rounds):
-            for i in range(n_tenants):
-                wl = PAPER_WORKLOADS[i % w]
-                mu = wl.mu * (1.6 if (r // 2) % 2 else 1.0)  # drift
-                sizes = sample_lognormal_sizes(rng, 64, mu, wl.sigma,
-                                               max_size=PAGE_SIZE)
-                arb.observe(_name(i), sizes)
-            arb.tick(1)
+        # --guard arms the transfer sanitizer for the whole drive: any
+        # sync outside a deliberate_sync seam aborts instead of hiding
+        # a per-tenant readback inside the batched-gate timings
+        with no_implicit_transfers() if guard else nullcontext():
+            for r in range(rounds):
+                for i in range(n_tenants):
+                    wl = PAPER_WORKLOADS[i % w]
+                    mu = wl.mu * (1.6 if (r // 2) % 2 else 1.0)  # drift
+                    sizes = sample_lognormal_sizes(rng, 64, mu, wl.sigma,
+                                                   max_size=PAGE_SIZE)
+                    arb.observe(_name(i), sizes)
+                arb.tick(1)
         side[mode] = {
             "refit_sig": [
                 (n, d.approved, d.reason, round(float(d.drift), 6))
@@ -239,7 +247,7 @@ def gate_cell(n_tenants: int = 24, *, rounds: int = 8,
     }
 
 
-def run_sweep(sweep=SWEEP, *, seed: int = 7) -> Dict:
+def run_sweep(sweep=SWEEP, *, seed: int = 7, guard: bool = False) -> Dict:
     cells: Dict[str, Dict] = {}
     for n in sweep:
         t0 = time.perf_counter()
@@ -247,7 +255,8 @@ def run_sweep(sweep=SWEEP, *, seed: int = 7) -> Dict:
         cell["seconds"] = round(time.perf_counter() - t0, 3)
         cells[str(n)] = cell
     gate = gate_cell(16 if max(sweep) <= 200 else 24,
-                     rounds=6 if max(sweep) <= 200 else 8, seed=seed)
+                     rounds=6 if max(sweep) <= 200 else 8, seed=seed,
+                     guard=guard)
     failures: List[str] = []
     for n, cell in cells.items():
         if not cell["decisions_match"]:
@@ -266,7 +275,7 @@ def run_sweep(sweep=SWEEP, *, seed: int = 7) -> Dict:
                 f"{SPEEDUP_FLOOR:.0f}x")
     return {"page_size": PAGE_SIZE, "sweep": list(sweep),
             "sets_per_tenant_per_tick": SETS_PER_TENANT_ROUND,
-            "decision_stages": DECISION_STAGES,
+            "decision_stages": DECISION_STAGES, "guarded": guard,
             "cells": cells, "gate_cell": gate, "failures": failures}
 
 
@@ -292,9 +301,12 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: small sweep, parity + dispatch gates")
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--guard", action="store_true",
+                    help="arm repro.analysis.guards.no_implicit_transfers "
+                         "around the device-sketch gate cell")
     args = ap.parse_args(argv)
     sweep = QUICK_SWEEP if args.quick else SWEEP
-    out = run_sweep(sweep, seed=args.seed)
+    out = run_sweep(sweep, seed=args.seed, guard=args.guard)
     from bench_io import write_bench_json
     write_bench_json("fleet", out)
     print(json.dumps(out, indent=2, default=str))

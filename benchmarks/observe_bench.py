@@ -220,12 +220,22 @@ def arbiter_axis(*, n_tenants: int = 8, per_tenant: int = 4000) -> Dict:
     return out
 
 
-def main(n_items: int) -> Dict:
-    return {
-        "observe_throughput": observe_throughput(n_items),
-        "syncs": sync_axis(n_items),
-        "arbiter": arbiter_axis(),
-    }
+def main(n_items: int, *, guard: bool = False) -> Dict:
+    from contextlib import nullcontext
+
+    from repro.analysis.guards import no_implicit_transfers
+
+    # --guard runs every axis under the transfer sanitizer: any implicit
+    # device->host sync in the measured loops aborts the bench instead
+    # of silently serializing the device queue into the timings
+    with no_implicit_transfers() if guard else nullcontext():
+        out = {
+            "observe_throughput": observe_throughput(n_items),
+            "syncs": sync_axis(n_items),
+            "arbiter": arbiter_axis(),
+        }
+    out["guarded"] = guard
+    return out
 
 
 def run(n_items: int = 60_000) -> List[Tuple[str, float, str]]:
@@ -262,8 +272,11 @@ if __name__ == "__main__":
     ap.add_argument("--n-items", type=int, default=200_000)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke size")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm repro.analysis.guards.no_implicit_transfers "
+                         "around every measured loop")
     args = ap.parse_args()
     n = min(args.n_items, 20_000) if args.quick else args.n_items
-    out = main(n)
+    out = main(n, guard=args.guard)
     write_bench_json("observe", out)
     print(json.dumps(out, indent=2))

@@ -3,14 +3,64 @@
 Prints ``name,us_per_call,derived`` CSV rows (and trailing roofline rows
 when dry-run artifacts exist). Scale knobs keep the full run a few
 minutes on one CPU core; paper_tables uses the paper's full 1e6 items.
+
+Every run opens with a slablint self-check (``repro.analysis`` over
+``src/`` under the checked-in baseline): benchmark numbers from a tree
+with dispatch-discipline violations are not comparable, so an
+unsuppressed finding fails the run before anything is timed.
+``--quick`` runs ONLY that self-check — the per-suite ``--quick``
+smoke flags live on the individual bench scripts (see CI).
 """
 from __future__ import annotations
 
+import argparse
 import sys
+import time
 import traceback
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
 
 
-def main() -> None:
+def slablint_self_check() -> tuple:
+    """One CSV row; raises on any unsuppressed finding/stale entry."""
+    from repro.analysis import baseline as baseline_mod
+    from repro.analysis import run_check
+
+    t0 = time.perf_counter()
+    findings = run_check(REPO / "src", tests_root=REPO / "tests")
+    applied, stale = baseline_mod.apply(
+        findings, baseline_mod.load(REPO / ".slablint-baseline"))
+    us = 1e6 * (time.perf_counter() - t0)
+    unsup = [f for f in applied if not f.suppressed]
+    if unsup or stale:
+        raise SystemExit(
+            "slablint self-check failed: "
+            + "; ".join([f.render().splitlines()[0] for f in unsup]
+                        + [f"stale: {s}" for s in stale]))
+    n_sup = len(applied) - len(unsup)
+    return ("slablint", us,
+            f"findings={len(applied)};suppressed={n_sup};unsuppressed=0")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="run only the slablint self-check")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    try:
+        name, us, derived = slablint_self_check()
+        print(f"analysis.{name},{us:.0f},{derived}", flush=True)
+    except SystemExit as e:
+        failures += 1
+        print(f"analysis.ERROR,0,{str(e)!r}", flush=True)
+    if args.quick:
+        if failures:
+            sys.exit(1)
+        return
+
     from benchmarks import (adaptive_bench, bucketing_bench,
                             convergence_bench, forecast_bench, k_sweep,
                             kernel_bench, kv_pool_bench, multitenant_bench,
@@ -28,7 +78,6 @@ def main() -> None:
         ("observe", lambda: observe_bench.run()),
         ("forecast", lambda: forecast_bench.run()),
     ]
-    failures = 0
     for suite, fn in suites:
         try:
             for name, us, derived in fn():

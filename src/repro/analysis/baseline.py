@@ -1,0 +1,66 @@
+"""Baseline file: deliberate, justified suppressions.
+
+Format — one fingerprint per line, justification after ``#``::
+
+    DN001:repro/kernels/sketch_update.py:sketch_update_pallas:sketch_update_pallas  # callers retain state
+
+Unlisted findings are *unsuppressed* and fail ``--check``; listed
+fingerprints that no longer fire are reported as stale so the file
+can't rot into a wildcard.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from repro.analysis.findings import Finding
+
+DEFAULT_NAME = ".slablint-baseline"
+
+
+def load(path: Path) -> Dict[str, str]:
+    """fingerprint -> justification ('' if none)."""
+    out: Dict[str, str] = {}
+    if not Path(path).is_file():
+        return out
+    for raw in Path(path).read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        fp, _, just = line.partition("#")
+        out[fp.strip()] = just.strip()
+    return out
+
+
+def apply(findings: List[Finding], baseline: Dict[str, str]
+          ) -> Tuple[List[Finding], List[str]]:
+    """Mark suppressed findings; return (findings, stale fingerprints)."""
+    seen = set()
+    out: List[Finding] = []
+    for f in findings:
+        just = baseline.get(f.fingerprint)
+        if just is not None:
+            seen.add(f.fingerprint)
+            f = Finding(**{**f.__dict__, "suppressed": True,
+                           "justification": just or None})
+        out.append(f)
+    stale = sorted(set(baseline) - seen)
+    return out, stale
+
+
+def write(path: Path, findings: List[Finding],
+          old: Dict[str, str]) -> None:
+    """Write every current finding's fingerprint, keeping existing
+    justifications and flagging new entries for a human to justify."""
+    lines = ["# slablint baseline — every line is a deliberate,",
+             "# justified suppression. Regenerate with --write-baseline;",
+             "# keep justifications current.", ""]
+    done = set()
+    for f in findings:
+        fp = f.fingerprint
+        if fp in done:
+            continue
+        done.add(fp)
+        just = old.get(fp, "") or "TODO: justify"
+        lines.append(f"{fp}  # {just}")
+    Path(path).write_text("\n".join(lines) + "\n")

@@ -1,0 +1,289 @@
+"""AST project model: functions, imports, jit sites, hot reachability.
+
+Pure stdlib. The model is deliberately conservative where it matters
+for soundness of the hot-path walk and documentedly imprecise where
+precision would require type inference:
+
+* plain-name calls ``foo()`` link to *every* scanned module-level
+  function named ``foo`` (imports are not chased across renames);
+* attribute calls ``obj.m()`` link to every scanned method named ``m``
+  unless ``obj`` is a recognisably external module alias (``np.`` /
+  ``jnp.`` / ``functools.`` ...). Yes, that links ``d.get(k)`` to
+  ``TenantArbiter.get`` — over-approximation keeps the reachability
+  walk sound, and the rules it feeds only fire on concrete sinks;
+* a nested ``def`` is reachable from its enclosing function (defining
+  a closure inside a hot path makes the closure hot).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+# Top-level packages we treat as external libraries: attribute calls on
+# these aliases are never project method calls.
+EXTERNAL_PACKAGES = {
+    "numpy", "jax", "jaxlib", "functools", "itertools", "collections",
+    "dataclasses", "typing", "math", "os", "sys", "time", "logging",
+    "warnings", "random", "json", "re", "csv", "argparse", "pathlib",
+    "contextlib", "threading", "queue", "heapq", "bisect", "pytest",
+}
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    path: str                 # scan-root-relative posix path
+    qualname: str             # "Class.method", "fn", "outer.inner"
+    name: str                 # bare name
+    node: ast.AST             # FunctionDef / AsyncFunctionDef
+    class_name: Optional[str]
+    hot_seed: bool
+    jitted: bool              # carries a jax.jit decorator
+    jit_donates: bool         # ... with donate_argnums/argnames
+    callees: List[str] = dataclasses.field(default_factory=list)
+    hot_counters: Tuple[str, ...] = ()
+
+    @property
+    def key(self) -> str:
+        return f"{self.path}::{self.qualname}"
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.numpy.sum' for nested Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def is_jit_expr(node: ast.AST, aliases: Dict[str, str]
+                ) -> Tuple[bool, bool, Optional[ast.Call]]:
+    """Classify ``node`` as a jax.jit application.
+
+    Returns ``(is_jit, has_donate, call_node)`` where ``call_node`` is
+    the Call carrying keyword args (donate/static), if any. Handles
+    ``jit`` / ``jax.jit`` bare, called, and via ``functools.partial``.
+    """
+    def names_jit(n: ast.AST) -> bool:
+        d = _dotted(n)
+        if d is None:
+            return False
+        if d in ("jit", "jax.jit"):
+            return True
+        full = aliases.get(d.split(".")[0])
+        return bool(full and (full + d[len(d.split(".")[0]):]) == "jax.jit")
+
+    if names_jit(node):
+        return True, False, None
+    if isinstance(node, ast.Call):
+        if names_jit(node.func):
+            donate = any(k.arg and k.arg.startswith("donate")
+                         for k in node.keywords)
+            return True, donate, node
+        d = _dotted(node.func)
+        if d and d.split(".")[-1] == "partial" and node.args:
+            if names_jit(node.args[0]):
+                donate = any(k.arg and k.arg.startswith("donate")
+                             for k in node.keywords)
+                return True, donate, node
+    return False, False, None
+
+
+def _is_hot_decorator(dec: ast.AST) -> Tuple[bool, Tuple[str, ...]]:
+    """(is hot_path decorator, declared counters=(...) string literals)."""
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    d = _dotted(target)
+    if not (d and d.split(".")[-1] == "hot_path"):
+        return False, ()
+    counters: List[str] = []
+    if isinstance(dec, ast.Call):
+        for k in dec.keywords:
+            if k.arg == "counters" and isinstance(k.value,
+                                                  (ast.Tuple, ast.List)):
+                counters = [e.value for e in k.value.elts
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, str)]
+    return True, tuple(counters)
+
+
+class ModuleInfo:
+    def __init__(self, path: str, tree: ast.Module, source: str):
+        self.path = path                    # root-relative posix
+        self.tree = tree
+        self.source = source
+        self.aliases: Dict[str, str] = {}   # local name -> dotted origin
+        self.functions: List[FunctionInfo] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = (
+                        f"{node.module}.{a.name}")
+
+    def is_external(self, base: str) -> bool:
+        origin = self.aliases.get(base, base)
+        return origin.split(".")[0] in EXTERNAL_PACKAGES
+
+
+class _FnCollector(ast.NodeVisitor):
+    def __init__(self, mod: ModuleInfo):
+        self.mod = mod
+        self.stack: List[str] = []
+        self.class_stack: List[str] = []
+
+    def _visit_fn(self, node) -> None:
+        qual = ".".join(self.stack + [node.name])
+        hot, counters = False, ()
+        jitted = donates = False
+        for dec in node.decorator_list:
+            h, c = _is_hot_decorator(dec)
+            if h:
+                hot, counters = True, c
+            j, d, _ = is_jit_expr(dec, self.mod.aliases)
+            if j:
+                jitted, donates = True, donates or d
+        info = FunctionInfo(
+            path=self.mod.path, qualname=qual, name=node.name, node=node,
+            class_name=self.class_stack[-1] if self.class_stack else None,
+            hot_seed=hot, jitted=jitted, jit_donates=donates,
+            hot_counters=counters)
+        self.mod.functions.append(info)
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = visit_AsyncFunctionDef = _visit_fn
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.stack.append(node.name)
+        self.class_stack.append(node.name)
+        self.generic_visit(node)
+        self.class_stack.pop()
+        self.stack.pop()
+
+
+class Project:
+    """All scanned modules plus the indexes the rules query."""
+
+    def __init__(self) -> None:
+        self.modules: Dict[str, ModuleInfo] = {}      # path -> ModuleInfo
+        self.functions: Dict[str, FunctionInfo] = {}  # key -> info
+        self.reader_corpus: str = ""   # tests + invariants source text
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def scan(cls, root: Path, tests_root: Optional[Path] = None
+             ) -> "Project":
+        proj = cls()
+        root = Path(root)
+        for py in sorted(root.rglob("*.py")):
+            if "__pycache__" in py.parts:
+                continue
+            rel = py.relative_to(root).as_posix()
+            proj.add_source(py.read_text(), rel)
+        readers: List[str] = []
+        if tests_root and Path(tests_root).is_dir():
+            for py in sorted(Path(tests_root).rglob("*.py")):
+                if "__pycache__" not in py.parts:
+                    readers.append(py.read_text())
+        readers.extend(m.source for p, m in proj.modules.items()
+                       if p.endswith("invariants.py"))
+        proj.reader_corpus = "\n".join(readers)
+        proj._link()
+        return proj
+
+    @classmethod
+    def from_source(cls, source: str, path: str = "<snippet>") -> "Project":
+        proj = cls()
+        proj.add_source(source, path)
+        proj._link()
+        return proj
+
+    def add_source(self, source: str, path: str) -> None:
+        tree = ast.parse(source)
+        mod = ModuleInfo(path, tree, source)
+        _FnCollector(mod).visit(tree)
+        self.modules[path] = mod
+        for fn in mod.functions:
+            self.functions[fn.key] = fn
+
+    # -- linking ----------------------------------------------------------
+    def _link(self) -> None:
+        by_name: Dict[str, List[str]] = {}
+        for fn in self.functions.values():
+            by_name.setdefault(fn.name, []).append(fn.key)
+        for fn in self.functions.values():
+            mod = self.modules[fn.path]
+            callees: Set[str] = set()
+            # nested defs are reachable from their definer
+            for child in ast.iter_child_nodes(fn.node):
+                self._collect_nested(child, fn, callees)
+            for node in ast.walk(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                if isinstance(f, ast.Name):
+                    callees.update(by_name.get(f.id, ()))
+                    # renamed imports: `from m import g as h; h()` -> g
+                    origin = mod.aliases.get(f.id)
+                    if origin:
+                        callees.update(
+                            by_name.get(origin.split(".")[-1], ()))
+                elif isinstance(f, ast.Attribute):
+                    base = f.value
+                    if isinstance(base, ast.Name) and mod.is_external(
+                            base.id):
+                        continue
+                    callees.update(by_name.get(f.attr, ()))
+            callees.discard(fn.key)
+            fn.callees = sorted(callees)
+
+    def _collect_nested(self, node: ast.AST, parent: FunctionInfo,
+                        out: Set[str]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            key = f"{parent.path}::{parent.qualname}.{node.name}"
+            if key in self.functions:
+                out.add(key)
+            return  # grandchildren belong to the child
+        for child in ast.iter_child_nodes(node):
+            self._collect_nested(child, parent, out)
+
+    # -- queries ----------------------------------------------------------
+    def hot_seeds(self) -> List[FunctionInfo]:
+        return [f for f in self.functions.values() if f.hot_seed]
+
+    def hot_reachable(self) -> Set[str]:
+        """Keys of every function reachable from a ``@hot_path`` seed."""
+        frontier = [f.key for f in self.hot_seeds()]
+        seen: Set[str] = set(frontier)
+        while frontier:
+            key = frontier.pop()
+            for callee in self.functions[key].callees:
+                if callee not in seen:
+                    seen.add(callee)
+                    frontier.append(callee)
+        return seen
+
+    def jitted_names(self, path: str) -> Set[str]:
+        """Bare names known to be jax.jit-wrapped *in module* ``path``
+        (decorator form or ``name = jax.jit(fn)`` assignments). Scoped
+        per module: generic names like ``fn`` must not taint unrelated
+        calls elsewhere. Cross-module device producers belong in the
+        curated DEVICE_FNS surface instead."""
+        mod = self.modules[path]
+        out = {f.name for f in mod.functions if f.jitted}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign):
+                j, _, _ = is_jit_expr(node.value, mod.aliases)
+                if j:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            out.add(t.id)
+        return out

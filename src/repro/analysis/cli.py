@@ -1,0 +1,129 @@
+"""``python -m repro.analysis`` — run slablint over a source tree.
+
+Exit status: 0 when every finding is baseline-suppressed (or none),
+1 when unsuppressed findings remain and ``--check`` was passed,
+2 on usage errors. Stdlib-only: the lint CI job needs no jax.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Set
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.callgraph import Project
+from repro.analysis.findings import Finding
+from repro.analysis.rules import RULES, run_rules
+
+
+def run_check(root, *, tests_root=None,
+              only: Optional[Set[str]] = None) -> List[Finding]:
+    """Scan ``root`` and return raw (un-baselined) findings."""
+    root = Path(root)
+    if tests_root is None:
+        for cand in (root.parent / "tests", root / "tests",
+                     Path("tests")):
+            if cand.is_dir():
+                tests_root = cand
+                break
+    project = Project.scan(root, tests_root=tests_root)
+    return run_rules(project, only=only)
+
+
+def check_source(source: str,
+                 only: Optional[Set[str]] = None) -> List[str]:
+    """Rule ids firing on a source snippet — the doctest-friendly API.
+
+    >>> check_source("import jax\\n@jax.jit\\ndef f(state): return state")
+    ['DN001']
+    """
+    project = Project.from_source(source)
+    return sorted({f.rule_id for f in run_rules(project, only=only)})
+
+
+def _default_baseline(root: Path) -> Path:
+    for cand in (Path.cwd() / baseline_mod.DEFAULT_NAME,
+                 root.parent / baseline_mod.DEFAULT_NAME):
+        if cand.is_file():
+            return cand
+    return Path.cwd() / baseline_mod.DEFAULT_NAME
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="slablint: dispatch-discipline static analysis")
+    ap.add_argument("root", nargs="?", default="src",
+                    help="source tree to scan (default: src)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any unsuppressed finding")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write all findings (incl. suppressed) as JSON")
+    ap.add_argument("--baseline", metavar="PATH",
+                    help=f"baseline file (default: ./"
+                         f"{baseline_mod.DEFAULT_NAME})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="suppress every current finding (keeps existing "
+                         "justifications; new entries get TODO markers)")
+    ap.add_argument("--tests", metavar="PATH",
+                    help="tests dir for counter-coverage readers "
+                         "(default: <root>/../tests)")
+    ap.add_argument("--rules", metavar="IDS",
+                    help="comma-separated rule ids to run "
+                         f"(known: {','.join(sorted(RULES))})")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, r in sorted(RULES.items()):
+            print(f"{rid}  {r['name']}")
+        return 0
+
+    root = Path(args.root)
+    if not root.is_dir():
+        print(f"slablint: no such directory: {root}", file=sys.stderr)
+        return 2
+    only = None
+    if args.rules:
+        only = {r.strip().upper() for r in args.rules.split(",")}
+        unknown = only - set(RULES)
+        if unknown:
+            print(f"slablint: unknown rules: {sorted(unknown)}",
+                  file=sys.stderr)
+            return 2
+
+    findings = run_check(root, tests_root=args.tests, only=only)
+    bl_path = Path(args.baseline) if args.baseline else \
+        _default_baseline(root)
+    old = baseline_mod.load(bl_path)
+
+    if args.write_baseline:
+        baseline_mod.write(bl_path, findings, old)
+        print(f"slablint: wrote {len({f.fingerprint for f in findings})} "
+              f"suppressions to {bl_path}")
+        return 0
+
+    findings, stale = baseline_mod.apply(findings, old)
+    unsuppressed = [f for f in findings if not f.suppressed]
+    for f in findings:
+        print(f.render())
+    for fp in stale:
+        print(f"stale baseline entry (no longer fires): {fp}")
+    if args.json:
+        Path(args.json).write_text(json.dumps(
+            {"findings": [f.to_json() for f in findings],
+             "stale_baseline": stale,
+             "n_unsuppressed": len(unsuppressed)}, indent=2))
+    n_sup = len(findings) - len(unsuppressed)
+    print(f"slablint: {len(findings)} finding(s), {n_sup} suppressed, "
+          f"{len(unsuppressed)} unsuppressed, {len(stale)} stale "
+          f"baseline entr{'y' if len(stale) == 1 else 'ies'}")
+    if args.check and (unsuppressed or stale):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

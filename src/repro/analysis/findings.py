@@ -1,0 +1,45 @@
+"""Finding records and stable fingerprints for baseline suppression."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location.
+
+    ``fingerprint`` deliberately excludes the line number so baselines
+    survive unrelated edits: two identical sinks in one function share
+    a fingerprint (suppressing "this function deliberately does X" is
+    the right granularity). ``path`` is relative to the scan root and
+    posix-flavoured so baselines are machine-independent.
+    """
+    rule_id: str          # e.g. "HS001"
+    path: str             # scan-root-relative posix path
+    line: int             # 1-based
+    qualname: str         # enclosing function ("<module>" at top level)
+    symbol: str           # what tripped: "float", "np.asarray", fn name
+    message: str
+    hint: str
+    suppressed: bool = False
+    justification: Optional[str] = None
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule_id}:{self.path}:{self.qualname}:{self.symbol}"
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+    def render(self) -> str:
+        tag = " [suppressed]" if self.suppressed else ""
+        out = (f"{self.path}:{self.line}: {self.rule_id}{tag} "
+               f"[{self.qualname}] {self.message}")
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        if self.suppressed and self.justification:
+            out += f"\n    baseline: {self.justification}"
+        return out

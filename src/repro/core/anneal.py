@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.guards import deliberate_sync
 from repro.core.distribution import PAGE_SIZE
 from repro.core.hillclimb import MIN_CHUNK, SearchResult
 from repro.core.waste import waste_exact, waste_jax
@@ -70,7 +71,8 @@ def anneal(key, init_chunks, support, freqs, *, n_steps: int = 20_000,
                          support_j, freqs_j, n_steps=n_steps, t0=t0,
                          t_final=t_final, page_size=page_size,
                          min_chunk=min_chunk)
-    chunks = np.sort(np.asarray(chunks, dtype=np.int64))
+    with deliberate_sync("anneal.result"):
+        chunks = np.sort(np.asarray(chunks, dtype=np.int64))
     return SearchResult(
         chunks=chunks,
         waste=waste_exact(chunks, support, freqs, page_size=page_size),

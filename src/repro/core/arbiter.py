@@ -59,6 +59,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.guards import deliberate_sync
+from repro.analysis.registry import hot_path
 from repro.core.controller import (ControllerConfig, ScoreRequest,
                                    SlabController, _score_frontier,
                                    score_requests)
@@ -480,6 +482,7 @@ class TenantArbiter:
         return self._sorted_cache
 
     # -- traffic -------------------------------------------------------------
+    @hot_path(counters=("n_ops",))
     def set(self, name: str, key: str, value_size: int) -> bool:
         """Store one item for ``name``: feeds its allocator + sketch, runs
         the tenant's own refit pipeline, and the arbitration cadence."""
@@ -499,6 +502,7 @@ class TenantArbiter:
             self.arbitrate()
         return stored
 
+    @hot_path
     def observe(self, name: str, sizes, weights=None) -> None:
         """Feed externally-measured sizes into one tenant's sketch
         WITHOUT ticking the op cadence (pair with :meth:`tick` — the
@@ -512,6 +516,7 @@ class TenantArbiter:
         if self.fleet is not None:
             self.fleet.since_check[t.row] = t.controller._since_check
 
+    @hot_path(counters=("n_ops",))
     def get(self, name: str, key: str) -> bool:
         """Look up one item (touch-on-get feeds the tenant's eviction
         policy — re-referenced items gain rank, so donor pages are
@@ -524,6 +529,7 @@ class TenantArbiter:
             self.arbitrate()
         return hit
 
+    @hot_path(counters=("n_ops",))
     def delete(self, name: str, key: str) -> bool:
         """Delete one item; counts toward the arbitration cadence (TTL
         churn frees the chunks that make cheap donors)."""
@@ -534,6 +540,8 @@ class TenantArbiter:
             self.arbitrate()
         return deleted
 
+    @hot_path(counters=("n_score_launches", "n_gate_launches",
+                        "n_frontiers_scored"))
     def tick(self, n: int = 1) -> None:
         """Advance the arbitration cadence by ``n`` operations that did
         NOT route through :meth:`set`/:meth:`get`/:meth:`delete` — the
@@ -686,7 +694,9 @@ class TenantArbiter:
             refs = jnp.stack([t.controller.reference for t in ts])
             live = jnp.stack([t.controller.sketch.weights_device
                               for t in ts])
-            vals = np.asarray(drift_gate_fleet(refs, live, metric=metric))
+            with deliberate_sync("arbiter.fleet-drift-gate"):
+                vals = np.asarray(drift_gate_fleet(refs, live,
+                                                   metric=metric))
             self.n_gate_launches += 1
             for t, v in zip(ts, vals):
                 out[id(t)] = float(v)
@@ -748,6 +758,7 @@ class TenantArbiter:
             return 0            # unexercised quota: giving it away is free
         return t.allocator.page_release_cost_bytes()
 
+    @hot_path(counters=("n_transfers", "n_bounced"))
     def arbitrate(self) -> List[TransferDecision]:
         """One arbitration round; returns this round's decisions."""
         if self.fleet is not None:

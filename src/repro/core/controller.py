@@ -42,6 +42,8 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.guards import deliberate_sync
+from repro.analysis.registry import hot_path
 from repro.core.distribution import PAGE_SIZE
 from repro.core.observe import (DecayedSizeHistogram, DeviceSizeSketch,
                                 histogram_distance,
@@ -198,7 +200,8 @@ def _score_frontier(rows: List[np.ndarray], support: np.ndarray,
     except Exception:  # pragma: no cover - kernel stack unavailable
         from repro.core.waste import waste_batch_jax
         scores = waste_batch_jax(batch, support, freqs, page_size=page_size)
-    return np.asarray(scores, dtype=np.float64)
+    with deliberate_sync("controller.frontier-scores"):
+        return np.asarray(scores, dtype=np.float64)
 
 
 def score_requests(reqs: List["ScoreRequest"]) -> List[np.ndarray]:
@@ -236,9 +239,10 @@ def score_requests(reqs: List["ScoreRequest"]) -> List[np.ndarray]:
     freqs = np.concatenate(frq_out, axis=0)
     try:
         from repro.kernels.ops import waste_eval_fleet
-        scores = np.asarray(waste_eval_fleet(chunks, supports, freqs,
-                                             page_size=page_size),
-                            dtype=np.float64)
+        with deliberate_sync("controller.fleet-frontier-scores"):
+            scores = np.asarray(waste_eval_fleet(chunks, supports, freqs,
+                                                 page_size=page_size),
+                                dtype=np.float64)
     except Exception:  # pragma: no cover - kernel stack unavailable
         return [_score_frontier(r.rows, r.support, r.freqs,
                                 page_size=page_size) for r in reqs]
@@ -362,11 +366,13 @@ class SlabController:
         return n
 
     # -- observe -------------------------------------------------------------
+    @hot_path
     def observe(self, size: int) -> None:
         """Feed one observed item size into the live sketch. O(1)."""
         self.sketch.observe(size)
         self._since_check += 1
 
+    @hot_path
     def observe_many(self, sizes, weights=None) -> None:
         """Feed a batch of sizes (one flat array) into the live sketch.
 
@@ -398,9 +404,10 @@ class SlabController:
             return 0.0
         if self._device:
             self.sketch.n_scalar_syncs += 1
-            return float(histogram_distance_device(
-                self.reference, self.sketch.weights_device,
-                metric=self.config.drift_metric))
+            with deliberate_sync("controller.drift-gate"):
+                return float(histogram_distance_device(
+                    self.reference, self.sketch.weights_device,
+                    metric=self.config.drift_metric))
         return histogram_distance(self.reference,
                                   self.sketch.snapshot_weights(),
                                   metric=self.config.drift_metric)
@@ -411,6 +418,7 @@ class SlabController:
         will actually run a drift check (the cadence is due)."""
         return self._since_check >= self.config.check_every
 
+    @hot_path(counters=("n_checks",))
     def maybe_refit(self,
                     cost_bytes_fn: Optional[Callable[[np.ndarray], float]]
                     = None) -> Optional[RefitDecision]:
@@ -426,6 +434,7 @@ class SlabController:
                                  page_size=out.page_size)
         return self.finish_check(out, scores)
 
+    @hot_path(counters=("n_checks",))
     def begin_check(self,
                     cost_bytes_fn: Optional[Callable[[np.ndarray], float]]
                     = None, *, precomputed_drift: Optional[float] = None):
@@ -477,7 +486,8 @@ class SlabController:
                 drift = self.drift()    # nothing was buffered this window
             else:
                 self.sketch.n_scalar_syncs += 1
-                drift = float(drift_dev)
+                with deliberate_sync("controller.window-drift-gate"):
+                    drift = float(drift_dev)
         else:
             live = self.sketch.snapshot_weights()
             if live[0].size == 0:
@@ -522,8 +532,9 @@ class SlabController:
         jnp = self.sketch._jnp
         w = self.sketch.weights_device
         self.sketch.n_scalar_syncs += 1
-        demand = float(jnp.sum(
-            self.sketch.support_device.astype(jnp.float32) * w))
+        with deliberate_sync("controller.forecast-demand"):
+            demand = float(jnp.sum(
+                self.sketch.support_device.astype(jnp.float32) * w))
         self.forecaster.record_window(self._stream, demand_bytes=demand,
                                       device_weights=w)
 
@@ -543,9 +554,10 @@ class SlabController:
             if fc.device_weights is None:
                 return None
             self.sketch.n_scalar_syncs += 1
-            fdrift = float(histogram_distance_device(
-                self.reference, fc.device_weights,
-                metric=cfg.drift_metric))
+            with deliberate_sync("controller.forecast-drift-gate"):
+                fdrift = float(histogram_distance_device(
+                    self.reference, fc.device_weights,
+                    metric=cfg.drift_metric))
         else:
             if fc.support is None or fc.support.size == 0:
                 return None
@@ -574,7 +586,8 @@ class SlabController:
             blend = ((1.0 - cfg.forecast_blend) * live
                      + cfg.forecast_blend * scale * fc.device_weights)
             self.sketch.n_host_syncs += 1      # materialized below
-            w = np.asarray(blend, dtype=np.float64)
+            with deliberate_sync("controller.forecast-mixture"):
+                w = np.asarray(blend, dtype=np.float64)
             freqs = np.rint(w).astype(np.int64)
             keep = freqs > 0
             support = ((np.nonzero(keep)[0].astype(np.int64) + 1)
@@ -624,6 +637,7 @@ class SlabController:
                             forecast_drift=forecast_drift,
                             new_reference=new_reference)
 
+    @hot_path(counters=("n_refits",))
     def finish_check(self, req: ScoreRequest,
                      scores: np.ndarray) -> RefitDecision:
         """Second half of a drift check: turn the waste ``scores`` of

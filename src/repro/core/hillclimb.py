@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.guards import deliberate_sync
 from repro.core.distribution import PAGE_SIZE
 from repro.core.waste import waste_batch_jax, waste_exact, waste_jax
 
@@ -105,13 +106,17 @@ def paper_hillclimb(key, init_chunks, support, freqs, *,
         key, _as_i32(init_chunks), support_j, freqs_j,
         patience=patience, max_steps=max_steps,
         page_size=page_size, min_chunk=min_chunk)
-    chunks = np.sort(np.asarray(chunks, dtype=np.int64))
+    # Refit-time result readback: one deliberate device->host pull at the
+    # end of the whole search, not a per-step sync.
+    with deliberate_sync("hillclimb.paper-result"):
+        chunks = np.sort(np.asarray(chunks, dtype=np.int64))
+        steps_host = int(steps)
     return SearchResult(
         chunks=chunks,
         waste=waste_exact(chunks, support, freqs, page_size=page_size),
         init_waste=waste_exact(init_chunks, support, freqs,
                                page_size=page_size),
-        steps=int(steps), method="paper_hillclimb")
+        steps=steps_host, method="paper_hillclimb")
 
 
 DEFAULT_DELTAS: tuple = tuple(
@@ -174,13 +179,15 @@ def parallel_hillclimb(init_chunks, support, freqs, *,
         _as_i32(init_chunks), support_j, freqs_j, max_iters=max_iters,
         page_size=page_size, min_chunk=min_chunk, deltas=tuple(deltas),
         batch_eval=batch_eval)
-    chunks = np.sort(np.asarray(chunks, dtype=np.int64))
+    with deliberate_sync("hillclimb.parallel-result"):
+        chunks = np.sort(np.asarray(chunks, dtype=np.int64))
+        iters_host = int(iters)
     return SearchResult(
         chunks=chunks,
         waste=waste_exact(chunks, support, freqs, page_size=page_size),
         init_waste=waste_exact(init_chunks, support, freqs,
                                page_size=page_size),
-        steps=int(iters), method="parallel_hillclimb")
+        steps=iters_host, method="parallel_hillclimb")
 
 
 def multi_restart(key, init_chunks, support, freqs, *, n_restarts: int = 16,
@@ -210,11 +217,13 @@ def multi_restart(key, init_chunks, support, freqs, *, n_restarts: int = 16,
     all_chunks, iters = jax.vmap(lambda c: run(c))(starts)
     wastes = waste_batch_jax(all_chunks, support_j, freqs_j,
                              page_size=page_size)
-    best = int(jnp.argmin(wastes))
-    chunks = np.sort(np.asarray(all_chunks[best], dtype=np.int64))
+    with deliberate_sync("hillclimb.restart-result"):
+        best = int(jnp.argmin(wastes))
+        chunks = np.sort(np.asarray(all_chunks[best], dtype=np.int64))
+        steps_host = int(np.max(np.asarray(iters)))
     return SearchResult(
         chunks=chunks,
         waste=waste_exact(chunks, support, freqs, page_size=page_size),
         init_waste=waste_exact(init_chunks, support, freqs,
                                page_size=page_size),
-        steps=int(np.max(np.asarray(iters))), method="multi_restart")
+        steps=steps_host, method="multi_restart")

@@ -37,6 +37,11 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+# Both are stdlib-only (guards imports jax lazily and only while a
+# transfer guard is armed), so the host sketch stays jax-free.
+from repro.analysis.guards import deliberate_sync
+from repro.analysis.registry import hot_path
+
 
 class DecayedSizeHistogram:
     """Exponentially-decayed sparse size histogram, O(1) per observation.
@@ -66,6 +71,7 @@ class DecayedSizeHistogram:
         self.n_dispatches = 0                # device launches (host: none)
 
     # -- updates -----------------------------------------------------------
+    @hot_path
     def observe(self, size: int, weight: float = 1.0) -> None:
         """Record one size. O(1); decay of other bins is lazy."""
         s = int(size)
@@ -89,6 +95,7 @@ class DecayedSizeHistogram:
             self._w[s] = weight
         self._last[s] = self._t
 
+    @hot_path
     def observe_many(self, sizes, weights=None) -> None:
         """Record a batch of sizes, optionally with per-item weights
         (scalar or array-like broadcast against ``sizes``)."""
@@ -299,6 +306,7 @@ class DeviceSizeSketch:
         return jnp.where(s < 0, -1,
                          jnp.clip(idx, 0, self.num_buckets - 1))
 
+    @hot_path(counters=("n_dispatches", "n_scalar_syncs"))
     def observe(self, size: int, weight: float = 1.0) -> None:
         """Record one size (a one-element batch; prefer observe_many)."""
         self.observe_many([int(size)], [float(weight)])
@@ -318,6 +326,7 @@ class DeviceSizeSketch:
                 weights = np.asarray(weights, dtype=np.float32)
         return sizes, weights, n
 
+    @hot_path(counters=("n_dispatches",))
     def observe_many(self, sizes, weights=None) -> None:
         """Record a batch of sizes — ONE jitted dispatch (or zero, in
         window mode, where batches buffer until ``flush_window``).
@@ -340,6 +349,7 @@ class DeviceSizeSketch:
             return
         self._launch([row])
 
+    @hot_path(counters=("n_dispatches",))
     def observe_window(self, sizes_chunk, weights_chunk=None, *,
                        reference=None, metric: str = "l1"):
         """Fold a whole chunk of observe batches in ONE fused dispatch.
@@ -370,6 +380,7 @@ class DeviceSizeSketch:
             return None
         return self._launch(rows, reference=reference, metric=metric)
 
+    @hot_path(counters=("n_dispatches",))
     def flush_window(self, *, reference=None, metric: str = "l1"):
         """Fold every buffered batch into the sketch in one dispatch.
 
@@ -493,13 +504,15 @@ class DeviceSizeSketch:
         """Decayed total mass (scalar readback, not a materialization)."""
         self.flush_window()
         self.n_scalar_syncs += 1
-        return float(self._jnp.sum(self._weights))
+        with deliberate_sync("DeviceSizeSketch.effective_count"):
+            return float(self._jnp.sum(self._weights))
 
     def snapshot(self) -> Tuple[np.ndarray, np.ndarray]:
         """``(support, freqs)`` int64 — THE device→host sync point."""
         self.flush_window()
         self.n_host_syncs += 1
-        w = np.asarray(self._weights)
+        with deliberate_sync("DeviceSizeSketch.snapshot"):
+            w = np.asarray(self._weights)
         freqs = np.rint(w).astype(np.int64)
         keep = freqs > 0
         support = (np.nonzero(keep)[0].astype(np.int64) + 1) \
@@ -510,7 +523,8 @@ class DeviceSizeSketch:
         """Float-weight variant of :meth:`snapshot` (no rounding)."""
         self.flush_window()
         self.n_host_syncs += 1
-        w = np.asarray(self._weights, dtype=np.float64)
+        with deliberate_sync("DeviceSizeSketch.snapshot_weights"):
+            w = np.asarray(self._weights, dtype=np.float64)
         keep = w > 0.0
         support = (np.nonzero(keep)[0].astype(np.int64) + 1) \
             * self.bucket_width

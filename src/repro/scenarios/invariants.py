@@ -158,6 +158,35 @@ def check_fleet(arbiter) -> List[str]:
     return out
 
 
+def check_hot_path_counters(obj) -> List[str]:
+    """The ``@hot_path(counters=...)`` contract at runtime: every
+    counter a hot-path annotation on ``obj``'s class declares must
+    exist on the instance as a non-negative number. This is the dynamic
+    half of slablint's CC001 — the registry
+    (``repro.analysis.registry.HOT_PATHS``) is the shared source of
+    truth, so an annotation drifting from the real accounting fails
+    here and in the lint job alike."""
+    from repro.analysis.registry import HOT_PATHS
+
+    out: List[str] = []
+    cls = type(obj)
+    for entry in HOT_PATHS.values():
+        fn = entry["fn"]
+        if getattr(cls, fn.__name__, None) is not fn:
+            continue
+        for counter in entry["counters"]:
+            v = getattr(obj, counter, None)
+            if v is None:
+                out.append(
+                    f"{cls.__name__}.{fn.__name__} declares hot-path "
+                    f"counter {counter!r} the instance lacks")
+            elif v < 0:
+                out.append(
+                    f"hot-path counter {cls.__name__}.{counter} is "
+                    f"negative: {v}")
+    return out
+
+
 def check_all(*, pool=None, sketches=(), kv_pool=None,
               max_windows: int = None, arbiter=None) -> List[str]:
     """Run every applicable checker; one flat violation list."""
@@ -168,8 +197,10 @@ def check_all(*, pool=None, sketches=(), kv_pool=None,
         out.extend(check_sketch_mass(sketch))
         out.extend(check_dispatch_accounting(sketch,
                                              max_windows=max_windows))
+        out.extend(check_hot_path_counters(sketch))
     if kv_pool is not None:
         out.extend(check_kv_pool(kv_pool))
     if arbiter is not None:
         out.extend(check_fleet(arbiter))
+        out.extend(check_hot_path_counters(arbiter))
     return out

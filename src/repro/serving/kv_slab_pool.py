@@ -48,6 +48,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.registry import hot_path
 from repro.core import ControllerConfig, SlabController, SlabPolicy
 from repro.core.controller import RefitDecision
 from repro.memcached.eviction import ColdestLRU, EvictionPolicy
@@ -248,6 +249,7 @@ class KVSlabPool:
         return rec
 
     # -- alloc/free ------------------------------------------------------------
+    @hot_path
     def alloc(self, request_id: int, length: int, *,
               tenant: str = "default") -> Optional[Allocation]:
         rec = self._tenants.get(tenant)
@@ -494,6 +496,7 @@ class KVSlabPool:
         return n, freed
 
     # -- learning -------------------------------------------------------------
+    @hot_path
     def observe_lengths(self, lengths) -> None:
         """Feed one batch of request KV lengths into the controller's
         sketch (the ``batch_observe`` feeding mode). ``lengths`` may be

@@ -1,0 +1,17 @@
+"""Seeded CC001 violations: counters nobody reads, plus a @hot_path
+annotation declaring a counter the module never defines. The stem
+contains "observe" so the rule scans it. Parsed, never imported."""
+from repro.analysis.registry import hot_path
+
+
+class FixtureObserver:
+    n_fixture_inline_count: int = 0      # CC001: never read
+
+    def __init__(self):
+        self.n_fixture_unread_total = 0  # CC001: never read
+        self.n_fixture_read_total = 0    # read by readers/reads_counters
+
+    @hot_path(counters=("n_ghost_total",))   # CC001: no backing counter
+    def observe(self, item):
+        self.n_fixture_unread_total += 1
+        self.n_fixture_read_total += 1

@@ -1,0 +1,23 @@
+"""Disciplined hot-path code: every rule must stay quiet here.
+Parsed, never imported."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.registry import hot_path
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def flush(state, deltas):
+    return state + deltas
+
+
+@jax.jit
+def double(sizes):
+    return sizes * 2
+
+
+@hot_path
+def observe(state, sizes):
+    return flush(state, double(sizes))

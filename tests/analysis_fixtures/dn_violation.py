@@ -1,0 +1,14 @@
+"""Seeded DN001 violations: jitted carry buffers without donation —
+decorator form and call form. Parsed, never imported."""
+import jax
+
+
+@jax.jit
+def fold(state, deltas):         # DN001: `state` carried, not donated
+    return state + deltas
+
+
+def make_flush():
+    def run(state, deltas):      # DN001 via the jax.jit(run) call form
+        return state + deltas
+    return jax.jit(run)

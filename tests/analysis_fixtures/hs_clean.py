@@ -1,0 +1,13 @@
+"""Same readback as hs_violation.py but declared via deliberate_sync —
+the analyzer must stay quiet. Parsed, never imported."""
+import jax.numpy as jnp
+
+from repro.analysis.guards import deliberate_sync
+from repro.analysis.registry import hot_path
+
+
+@hot_path
+def tick(state):
+    total = jnp.sum(state)
+    with deliberate_sync("fixture.tick-readback"):
+        return float(total)

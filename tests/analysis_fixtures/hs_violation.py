@@ -1,0 +1,13 @@
+"""Seeded HS001 violation: implicit host sync inside a hot path.
+
+Parsed by slablint in tests/test_analysis.py — never imported.
+"""
+import jax.numpy as jnp
+
+from repro.analysis.registry import hot_path
+
+
+@hot_path
+def tick(state):
+    total = jnp.sum(state)
+    return float(total)          # HS001: blocks on the device queue

@@ -1,0 +1,9 @@
+"""Seeded KC001 violations: a Pallas wrapper with no interpret=
+fallback, no *_ref oracle, and unclamped index-map arithmetic.
+Parsed, never imported."""
+from jax.experimental import pallas as pl
+
+
+def fuse_pallas(state, sizes):   # KC001: no interpret=, no fuse_ref
+    spec = pl.BlockSpec((128,), lambda i: i * 2 + 1)   # KC001: no clamp
+    return state

@@ -1,0 +1,5 @@
+"""Reader corpus for the CC001 fixture: blesses exactly one counter."""
+
+
+def check_fixture(observer):
+    assert observer.n_fixture_read_total >= 0

@@ -1,0 +1,31 @@
+"""Seeded RT001 violations: jit-in-loop, mutable closure capture, and a
+runtime-derived scalar flowing into a shape. Parsed, never imported."""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.guards import deliberate_sync
+from repro.analysis.registry import hot_path
+
+
+def refit_all(windows):
+    outs = []
+    for w in windows:
+        f = jax.jit(lambda x: x * 2)     # RT001: fresh trace per iter
+        outs.append(f(w))
+    return outs
+
+
+def make_step(cfg):
+    table = [1, 2, 3]
+
+    @jax.jit
+    def step(x):                 # RT001: trace bakes in a snapshot
+        return x + table[0]
+    return step
+
+
+@hot_path
+def grow(buf):
+    with deliberate_sync("fixture.size-readback"):
+        n = int(jnp.sum(buf))
+    return jnp.zeros(n)          # RT001: new value => new compile

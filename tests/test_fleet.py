@@ -22,6 +22,7 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
+from repro.analysis.guards import no_implicit_transfers
 from repro.core import (ControllerConfig, FleetState, PagePool,
                         TenantArbiter)
 from repro.core.distribution import (PAPER_WORKLOADS,
@@ -183,13 +184,16 @@ def test_tick_driven_batched_gate_parity():
                    arbitrate_every=10**9)
     for arb in (legacy, fleet):
         rng = np.random.default_rng(3)
-        for r in range(ticks):
-            for i in range(n):
-                w = PAPER_WORKLOADS[i % len(PAPER_WORKLOADS)]
-                mu = w.mu * (1.7 if (r // 2) % 2 else 1.0)
-                arb.observe(f"t{i}", sample_lognormal_sizes(
-                    rng, 60, mu, w.sigma, max_size=PAGE))
-            arb.tick(1)
+        # batched gate launches run under the transfer sanitizer: the
+        # only legal syncs are the deliberate_sync-declared gate reads
+        with no_implicit_transfers():
+            for r in range(ticks):
+                for i in range(n):
+                    w = PAPER_WORKLOADS[i % len(PAPER_WORKLOADS)]
+                    mu = w.mu * (1.7 if (r // 2) % 2 else 1.0)
+                    arb.observe(f"t{i}", sample_lognormal_sizes(
+                        rng, 60, mu, w.sigma, max_size=PAGE))
+                arb.tick(1)
     assert _refit_sig(legacy, exact_drift=False) \
         == _refit_sig(fleet, exact_drift=False)
     assert legacy.n_gate_launches == 0

@@ -4,6 +4,7 @@ CPU), the on-device drift metric, and host/device controller parity."""
 import numpy as np
 import pytest
 
+from repro.analysis.guards import no_implicit_transfers
 from repro.core import (ControllerConfig, DecayedSizeHistogram,
                         DeviceSizeSketch, SlabController, SlabPolicy,
                         histogram_distance, histogram_distance_device,
@@ -369,7 +370,10 @@ def test_observe_window_bitwise_matches_sequential(engine):
 
     win = DeviceSizeSketch(half_life=300.0, num_buckets=256,
                            bucket_width=4, window=True, **engine)
-    drift_win = win.observe_window(batches, weights, reference=reference)
+    # the fused launch must not smuggle in implicit device->host syncs
+    with no_implicit_transfers():
+        drift_win = win.observe_window(batches, weights,
+                                       reference=reference)
 
     assert win.n_dispatches == 1
     assert win.n_observed == seq.n_observed
@@ -450,8 +454,10 @@ def test_fused_window_single_dispatch_no_retrace():
                            window_kernel=False)
     win.observe_window([rng.integers(1, 900, 64) for _ in range(8)])
     traces0 = su.WINDOW_TRACE_COUNT
-    for _ in range(3):
-        win.observe_window([rng.integers(1, 900, 64) for _ in range(8)])
+    with no_implicit_transfers():
+        for _ in range(3):
+            win.observe_window([rng.integers(1, 900, 64)
+                                for _ in range(8)])
     assert win.n_dispatches == 4
     assert su.WINDOW_TRACE_COUNT == traces0      # shapes reuse the jit
     # ragged batch lengths pad to the same compiled shapes too
@@ -488,11 +494,15 @@ def test_controller_fused_window_matches_per_batch_decisions():
         **common, fused_observe=False))
     fused = SlabController(deployed, config=ControllerConfig(**common))
     assert fused.sketch._window and not per_batch.sketch._window
-    for i in range(0, n, 125):          # 4 batches per cadence window
-        per_batch.observe_many(sizes[i:i + 125])
-        fused.observe_many(sizes[i:i + 125])
-        per_batch.maybe_refit()
-        fused.maybe_refit()
+    # the whole drive runs under the transfer sanitizer: the only
+    # device->host pulls allowed are the declared deliberate_sync sites
+    # (drift gates, refit-search readbacks)
+    with no_implicit_transfers():
+        for i in range(0, n, 125):      # 4 batches per cadence window
+            per_batch.observe_many(sizes[i:i + 125])
+            fused.observe_many(sizes[i:i + 125])
+            per_batch.maybe_refit()
+            fused.maybe_refit()
     assert fused.n_refits == per_batch.n_refits >= 1
     assert ([(d.approved, d.reason, d.drift) for d in fused.decisions]
             == [(d.approved, d.reason, d.drift)
