@@ -1,0 +1,341 @@
+"""Offline serving bench: batched one-dispatch-per-tick decode vs the
+legacy per-request loop over the same slab KV pool.
+
+Twin ``OfflineHarness`` runs (``mode="batched"`` / ``mode="legacy"``)
+replay the SAME open-loop workload — Poisson arrivals with log-normal
+prompt/output lengths, or a tenant-tagged trace replayed through
+``scenarios.trace.trace_requests`` — against identical pools. Per sweep
+point the bench reports
+
+* **throughput** — generated tokens per wall-second for each mode and
+  the batched/legacy speedup (headline gate: batched >= legacy at
+  batch >= 64; the legacy loop pays one jitted dispatch per active
+  request per tick, the batched step pays ONE),
+* **bit-parity** — generated token streams AND the decision
+  fingerprint (ticks, completions, rejections, realloc copies/tokens,
+  refits, admission denials) compared exactly; any mismatch fails the
+  run,
+* **dispatch accounting** — ``n_decode_dispatches <= ticks`` for the
+  batched mode (the O(ticks) contract, CI-gated),
+
+plus an **admission cell** — two tenant streams with out-of-phase
+arrival peaks over a deliberately tight pool, static half-pool quotas
+vs the forecast-driven ``token_quota_arbiter`` moving quota between
+peaks — reporting rejected requests and p99 queue delay per policy,
+and a **trace cell** — ``synthetic_trace_ops`` round-tripped through
+``write_trace``/``parse_trace`` and replayed via ``trace_requests``
+(key-hash downsampling preserved), with the same parity + dispatch
+gates. ``--trace FILE`` replays a trace file you supply (e.g. one the
+scenario torture suite wrote) instead of the synthetic stream.
+
+``python benchmarks/serving_bench.py --quick`` is the CI smoke size:
+it still asserts bit-parity, the dispatch bound, and the batch-64
+throughput gate, exiting nonzero on any failure. Results go to
+``BENCH_serving.json``; ``run()`` returns CSV rows for
+``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.scenarios import (parse_trace, synthetic_trace_ops,
+                             trace_requests, write_trace)
+from repro.serving import (KVSlabPool, OfflineHarness, Request,
+                           lognormal_request_workload, token_quota_arbiter)
+
+CLASSES = (128, 256, 512, 1024)
+POOL_TOKENS = 32768          # throughput cells: roomy, admission rare
+SWEEP = (16, 64, 128)        # max_batch sweep points
+QUICK_SWEEP = (16, 64)
+N_REQUESTS = {False: 160, True: 72}       # keyed by quick
+ARRIVAL_RATE = 4.0           # requests per tick (open loop)
+SPEEDUP_AT = 64              # batched >= legacy from this batch size up
+
+# admission cell: pool tight enough that one tenant's peak cannot fit
+# in a static half-pool quota, so the arbiter has real work to do
+ADM_POOL_TOKENS = 8192
+ADM_PER_TENANT = 40
+ADM_PHASE_GAP = 30.0         # ticks between the two tenants' peaks
+
+
+def make_workload(n: int, seed: int) -> List[Request]:
+    """Deterministic per seed — rebuilt fresh for every run because the
+    harness mutates Request.decoded in place."""
+    rng = np.random.default_rng(seed)
+    return lognormal_request_workload(
+        rng, n, prompt_mean=96.0, prompt_std=64.0,
+        output_mean=10.0, output_std=5.0, arrival_rate=ARRIVAL_RATE)
+
+
+def _fresh(mode: str, batch: int, *, pool_tokens: int = POOL_TOKENS,
+           quotas: Optional[Dict[str, int]] = None,
+           with_arbiter: bool = False) -> OfflineHarness:
+    pool = KVSlabPool(pool_tokens, CLASSES)
+    for name, q in (quotas or {}).items():
+        pool.register_tenant(name, quota_tokens=q)
+    arb = None
+    if with_arbiter:
+        arb = token_quota_arbiter(pool, unit_tokens=512,
+                                  arbitrate_every=2)
+    return OfflineHarness(pool, max_batch=batch, mode=mode, arbiter=arb)
+
+
+def _warmup(batch: int) -> None:
+    """Compile both modes' step functions at this batch size so the
+    timed cells measure steady-state dispatch, not tracing."""
+    for mode in ("batched", "legacy"):
+        h = _fresh(mode, batch)
+        h.run([Request(rid=0, prompt_len=8, output_len=2)], max_ticks=8)
+
+
+def _side(res, wall: float) -> Dict:
+    return {
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(res.generated_tokens / max(wall, 1e-9), 1),
+        "generated_tokens": res.generated_tokens,
+        "ticks": res.ticks,
+        "decode_dispatches": res.n_decode_dispatches,
+        "prefill_dispatches": res.n_prefill_dispatches,
+        "completed": res.completed,
+        "rejected": res.rejected,
+        "realloc_copies": res.realloc_copies,
+        "queue_delay_p50": round(res.queue_delay_p50, 3),
+        "queue_delay_p99": round(res.queue_delay_p99, 3),
+        "mean_waste_fraction": round(res.mean_waste_fraction, 4),
+    }
+
+
+def _twin_run(batch: int, workload_of, *, pool_tokens: int = POOL_TOKENS
+              ) -> Dict:
+    """Batched + legacy over identical workloads/pools; parity and the
+    dispatch bound are computed here, throughput gates at the caller."""
+    side: Dict[str, Dict] = {}
+    results = {}
+    for mode in ("batched", "legacy"):
+        h = _fresh(mode, batch, pool_tokens=pool_tokens)
+        wl = workload_of()
+        t0 = time.perf_counter()
+        res = h.run(wl)
+        wall = time.perf_counter() - t0
+        results[mode] = res
+        side[mode] = _side(res, wall)
+    ra, rb = results["batched"], results["legacy"]
+    return {
+        "batch": batch,
+        "batched": side["batched"],
+        "legacy": side["legacy"],
+        "speedup": round(side["legacy"]["wall_s"]
+                         / max(side["batched"]["wall_s"], 1e-9), 2),
+        "decisions_match": ra.decisions() == rb.decisions(),
+        "tokens_match": ra.tokens == rb.tokens,
+        "dispatch_bound_ok": ra.n_decode_dispatches <= ra.ticks,
+    }
+
+
+def parity_cell(batch: int, n_requests: int, *, seed: int) -> Dict:
+    _warmup(batch)
+    cell = _twin_run(batch, lambda: make_workload(n_requests, seed))
+    cell["n_requests"] = n_requests
+    return cell
+
+
+# -- admission: static quotas vs arbiter-managed -----------------------------
+
+def admission_workload(seed: int) -> List[Request]:
+    """Two tenant streams with out-of-phase peaks: tenant ``a`` arrives
+    hot from tick 0, tenant ``b``'s identical burst lands
+    ``ADM_PHASE_GAP`` ticks later — the KV analogue of the paper's
+    phased multi-tenant traffic."""
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    for k, (tenant, phase) in enumerate((("a", 0.0),
+                                         ("b", ADM_PHASE_GAP))):
+        prompts = np.clip(rng.lognormal(5.2, 0.5, ADM_PER_TENANT),
+                          16, 1024).astype(int)
+        outputs = np.clip(rng.lognormal(2.2, 0.5, ADM_PER_TENANT),
+                          1, 64).astype(int)
+        arrivals = phase + np.cumsum(
+            rng.exponential(1.0 / ARRIVAL_RATE, ADM_PER_TENANT))
+        for i in range(ADM_PER_TENANT):
+            reqs.append(Request(rid=1000 * k + i,
+                                prompt_len=int(prompts[i]),
+                                output_len=int(outputs[i]),
+                                arrival=float(arrivals[i]),
+                                tenant=tenant))
+    return reqs
+
+
+def admission_cell(batch: int, *, seed: int) -> Dict:
+    """Static half-pool quotas vs the token-quota arbiter over the same
+    phased two-tenant stream (both batched mode): with static quotas a
+    peaking tenant rejects against its half of the pool while the other
+    half idles; the arbiter moves quota toward the observed peak."""
+    quotas = {"a": ADM_POOL_TOKENS // 2, "b": ADM_POOL_TOKENS // 2}
+    side: Dict[str, Dict] = {}
+    for policy, with_arb in (("static", False), ("arbiter", True)):
+        h = _fresh("batched", batch, pool_tokens=ADM_POOL_TOKENS,
+                   quotas=quotas, with_arbiter=with_arb)
+        t0 = time.perf_counter()
+        res = h.run(admission_workload(seed))
+        wall = time.perf_counter() - t0
+        side[policy] = _side(res, wall)
+        side[policy]["admission_denials"] = res.n_admission_denials
+    return {
+        "batch": batch,
+        "pool_tokens": ADM_POOL_TOKENS,
+        "quota_tokens": quotas,
+        "n_requests": 2 * ADM_PER_TENANT,
+        "static": side["static"],
+        "arbiter": side["arbiter"],
+        "rejected_delta": (side["arbiter"]["rejected"]
+                          - side["static"]["rejected"]),
+    }
+
+
+# -- trace replay ------------------------------------------------------------
+
+def trace_cell(batch: int, *, seed: int, keep: float = 1.0,
+               trace_path: Optional[str] = None,
+               max_requests: int = 64) -> Dict:
+    """Replay a memcached-side trace through the serving harness.
+
+    Default: ``synthetic_trace_ops`` round-tripped through
+    ``write_trace``/``parse_trace`` (the same fixture path the scenario
+    torture suite replays), converted by ``trace_requests`` — key-hash
+    downsampling (``keep``) included so a thinned replay keeps exactly
+    the keys the memcached-side replay kept. ``trace_path`` replays an
+    existing trace file instead."""
+    if trace_path is None:
+        ops = synthetic_trace_ops("phased", n_ops=800, n_tenants=2,
+                                  seed=seed)
+        fd, path = tempfile.mkstemp(suffix=".trace")
+        os.close(fd)
+        try:
+            write_trace(path, ops)
+            ops = parse_trace(path)
+        finally:
+            os.unlink(path)
+        source = "synthetic-roundtrip"
+    else:
+        ops = parse_trace(trace_path)
+        source = trace_path
+    reqs = trace_requests(ops, ops_per_tick=16.0, bytes_per_token=64,
+                          output_max=8, keep=keep, seed=seed,
+                          max_requests=max_requests)
+
+    def replay() -> List[Request]:
+        return [Request(rid=r.rid, prompt_len=r.prompt_len,
+                        output_len=r.output_len, arrival=r.arrival,
+                        tenant=r.tenant) for r in reqs]
+
+    cell = _twin_run(batch, replay)
+    cell.update(source=source, keep=keep, n_requests=len(reqs),
+                n_tenants=len({r.tenant for r in reqs}))
+    return cell
+
+
+# -- driver ------------------------------------------------------------------
+
+def run_sweep(sweep=SWEEP, *, quick: bool = False, seed: int = 7,
+              trace: Optional[str] = None) -> Dict:
+    n_requests = N_REQUESTS[quick]
+    cells: Dict[str, Dict] = {}
+    for b in sweep:
+        t0 = time.perf_counter()
+        cell = parity_cell(b, n_requests, seed=seed)
+        cell["seconds"] = round(time.perf_counter() - t0, 3)
+        cells[str(b)] = cell
+    adm = admission_cell(max(sweep), seed=seed)
+    trc = trace_cell(min(max(sweep), 64), seed=seed, trace_path=trace,
+                     max_requests=48 if quick else 96)
+
+    failures: List[str] = []
+    for b, cell in list(cells.items()) + [("trace", trc)]:
+        if not cell["decisions_match"]:
+            failures.append(f"{b}: decision fingerprints diverge")
+        if not cell["tokens_match"]:
+            failures.append(f"{b}: generated token streams diverge")
+        if not cell["dispatch_bound_ok"]:
+            failures.append(
+                f"{b}: {cell['batched']['decode_dispatches']} decode "
+                f"dispatches > {cell['batched']['ticks']} ticks")
+    for b, cell in cells.items():
+        if int(b) >= SPEEDUP_AT and cell["speedup"] < 1.0:
+            failures.append(
+                f"{b}: batched {cell['batched']['tokens_per_s']:.0f} "
+                f"tok/s < legacy {cell['legacy']['tokens_per_s']:.0f} "
+                f"(speedup {cell['speedup']:.2f}x)")
+    if adm["arbiter"]["rejected"] > adm["static"]["rejected"]:
+        failures.append(
+            f"admission: arbiter rejected {adm['arbiter']['rejected']} "
+            f"> static {adm['static']['rejected']}")
+    return {"classes": list(CLASSES), "pool_tokens": POOL_TOKENS,
+            "sweep": list(sweep), "n_requests": n_requests,
+            "arrival_rate": ARRIVAL_RATE, "quick": quick,
+            "cells": cells, "admission_cell": adm, "trace_cell": trc,
+            "failures": failures}
+
+
+def run() -> List[Tuple[str, float, str]]:
+    out = run_sweep(QUICK_SWEEP, quick=True)
+    rows = []
+    for b, cell in out["cells"].items():
+        rows.append((
+            f"b{b}", 1e6 * cell["batched"]["wall_s"],
+            f"tok_s={cell['batched']['tokens_per_s']:.0f};"
+            f"speedup={cell['speedup']:.2f}x;"
+            f"parity={cell['decisions_match'] and cell['tokens_match']};"
+            f"dispatches={cell['batched']['decode_dispatches']}/"
+            f"{cell['batched']['ticks']}t"))
+    adm = out["admission_cell"]
+    rows.append(("admission", 0.0,
+                 f"static_rej={adm['static']['rejected']};"
+                 f"arbiter_rej={adm['arbiter']['rejected']};"
+                 f"static_p99={adm['static']['queue_delay_p99']};"
+                 f"arbiter_p99={adm['arbiter']['queue_delay_p99']}"))
+    trc = out["trace_cell"]
+    rows.append(("trace", 1e6 * trc["batched"]["wall_s"],
+                 f"n={trc['n_requests']};"
+                 f"parity={trc['decisions_match'] and trc['tokens_match']}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small sweep, parity + dispatch + "
+                         "batch-64 throughput gates")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--trace", type=str, default=None,
+                    help="replay this trace file through the harness "
+                         "instead of the synthetic round-trip")
+    ap.add_argument("--keep", type=float, default=1.0,
+                    help="key-hash downsampling rate for the trace cell")
+    args = ap.parse_args(argv)
+    sweep = QUICK_SWEEP if args.quick else SWEEP
+    out = run_sweep(sweep, quick=args.quick, seed=args.seed,
+                    trace=args.trace)
+    if args.keep != 1.0:
+        out["trace_cell_downsampled"] = trace_cell(
+            min(max(sweep), 64), seed=args.seed, keep=args.keep,
+            trace_path=args.trace)
+    from bench_io import write_bench_json
+    write_bench_json("serving", out)
+    print(json.dumps(out, indent=2, default=str))
+    if out["failures"]:
+        for f in out["failures"]:
+            print(f"[serving] FAIL {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

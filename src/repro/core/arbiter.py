@@ -376,6 +376,9 @@ class TenantArbiter:
         self.events: List[Tuple[int, str]] = []   # (n_ops, label) marks
         self.n_transfers = 0
         self.n_bounced = 0       # recipient had donated within bounce_window
+        # tick-granular admission gate (serving harness seam)
+        self.n_admission_checks = 0
+        self.n_admission_denials = 0
         self.n_ops = 0
         self._since_arbitrate = 0
         # Fleet-batched candidate scoring telemetry: every drain that
@@ -561,6 +564,38 @@ class TenantArbiter:
             self._drain_checks_fleet()
         if self._since_arbitrate >= self.arbitrate_every:
             self.arbitrate()
+
+    @hot_path(counters=("n_admission_checks", "n_admission_denials"))
+    def admission(self, name: str, units: int = 1) -> bool:
+        """Tick-granular admission gate — the serving harness asks the
+        arbiter BEFORE allocating for a new request: may tenant ``name``
+        take ``units`` more of the pool's resource right now?
+
+        Admitted when the tenant is unmanaged (``quota=None``) or its
+        re-synced ownership plus the request fits its arbiter-assigned
+        quota; the underlying allocator's own quota check stays the
+        enforcement backstop (``apply_quota`` keeps the two in
+        agreement). A denial is recorded on the tenant's pressure
+        signal (``note_admission_denial`` on allocators that carry one,
+        e.g. :class:`~repro.serving.kv_slab_pool.KVTenantQuotaView`),
+        so the NEXT arbitration round sees the starvation and can move
+        quota toward the stream — deny now, rebalance at cadence, admit
+        later, instead of letting an over-quota stream fail deep in the
+        allocator."""
+        t = self.tenants.get(name)
+        if t is None:
+            raise KeyError(f"tenant {name!r} not registered")
+        self.n_admission_checks += 1
+        if t.sync_owned_fn is not None:
+            t.sync_owned_fn()
+        quota = self.pool.quota(name)
+        if quota is None or self.pool.owned(name) + units <= quota:
+            return True
+        self.n_admission_denials += 1
+        note = getattr(t.allocator, "note_admission_denial", None)
+        if note is not None:
+            note()
+        return False
 
     def note_event(self, label: str, tenants: Optional[Sequence[str]] = None
                    ) -> None:

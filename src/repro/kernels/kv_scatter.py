@@ -1,0 +1,198 @@
+"""Pallas TPU kernels: batched KV-pool scatter ops (append + chunk copy).
+
+The offline harness's decode tick is ONE jitted dispatch for the whole
+active batch (see serving/offline_harness.py). The two host loops that
+used to force per-request dispatches become device scatters here:
+
+* token append — each active sequence writes its freshly decoded KV row
+  at ``starts[b] + lens[b]`` (:func:`kv_append_pallas`);
+* class-overflow reallocation — sequences that outgrew their slab class
+  copy their whole chunk to the new class's range
+  (:func:`kv_chunk_copy_pallas`).
+
+Both express the scatter through dynamic BlockSpec index maps steered by
+scalar-prefetched descriptors — the same grid-as-gather idiom
+``slab_attention`` uses for its KV window, turned around to write — with
+the pool aliased input→output (``input_output_aliases``) so unvisited
+rows keep their content and the op is in-place on device.
+
+Skip contract (shared by both kernels): batch slots are padded to a
+fixed size (RT001 — one traced shape per pool), and padded/inactive
+entries are routed to a reserved junk range at the END of the pool. A
+skipped entry's index map points both its read and its write at the
+junk range, so it rewrites that range with its own content — a no-op.
+Callers must therefore never place real data in the last
+``max(block rows)`` of the pool; the harness pads its device pools past
+``pool_tokens`` so the allocator can never hand that range out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_T = 128   # copy tile, tokens; matches slab_attention / pool ALIGN
+
+
+def _append_kernel(rows_ref, pool_ref, val_ref, out_ref):
+    b = pl.program_id(0)
+    write = rows_ref[b] >= 0
+    out_ref[...] = jnp.where(write, val_ref[...], pool_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_append_pallas(pool, rows, vals, *, interpret: bool = False
+                     ) -> jnp.ndarray:
+    """Scatter one new KV row per batch slot into a token pool, in place.
+
+    pool: (T, H, D); rows: (B,) int32 destination token row per slot,
+    ``-1`` = inactive slot (skip); vals: (B, H, D). Returns the pool
+    with ``pool[rows[b]] = vals[b]`` for every non-negative row and
+    every other row bit-unchanged (the pool buffer is aliased into the
+    output, so only visited blocks are written).
+
+    Live rows must be distinct — each sequence appends inside its own
+    chunk. Skipped slots park on the reserved LAST row (T-1); see the
+    module docstring's junk-range contract.
+    """
+    t, h, d = pool.shape
+    rows = rows.astype(jnp.int32)
+    vals = vals.astype(pool.dtype)
+    b = rows.shape[0]
+
+    def row_index(bb, rows_t):
+        r = rows_t[bb]
+        return (jnp.clip(jnp.where(r < 0, t - 1, r), 0, t - 1), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, d), row_index),
+            pl.BlockSpec((1, h, d), lambda bb, rows_t: (bb, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), row_index),
+    )
+    # aliasing indices count the scalar-prefetch arg: operands are
+    # (rows, pool, vals) -> pool is input 1, aliased onto output 0
+    return pl.pallas_call(
+        _append_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(rows, pool, vals)
+
+
+@jax.jit
+def kv_append_ref(pool, rows, vals) -> jnp.ndarray:
+    """jnp oracle for :func:`kv_append_pallas` — identical semantics
+    including the junk-row parking (a skipped slot re-writes row T-1
+    with its own current content, a no-op)."""
+    t = pool.shape[0]
+    rows = rows.astype(jnp.int32)
+    valid = rows >= 0
+    idx = jnp.clip(jnp.where(valid, rows, t - 1), 0, t - 1)
+    upd = jnp.where(valid[:, None, None], vals.astype(pool.dtype),
+                    pool[idx])
+    return pool.at[idx].set(upd)
+
+
+def _chunk_copy_kernel(src_ref, dst_ref, lens_ref, pool_ref, out_ref):
+    del src_ref, dst_ref, lens_ref
+    out_ref[...] = pool_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_copy_tokens", "block_t", "interpret"))
+def kv_chunk_copy_pallas(pool, src_starts, dst_starts, n_tokens, *,
+                         max_copy_tokens: int, block_t: int = BLOCK_T,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Batched contiguous range copies inside a token pool, in place.
+
+    pool: (T, H, D) with T a multiple of ``block_t``; src_starts /
+    dst_starts / n_tokens: (M,) int32 move descriptors — copy
+    ``n_tokens[m]`` tokens from ``src_starts[m]`` to ``dst_starts[m]``.
+    Starts must be ``block_t``-aligned (slab chunk starts are) and
+    copies are TILE-granular: ``n_tokens`` is rounded UP to whole
+    ``block_t`` tiles (slab classes are tile multiples, so real moves
+    never see the rounding). ``n_tokens[m] == 0`` skips the move.
+
+    Moves execute in array order (= grid order), so a later move may
+    overwrite a range an earlier move READ — the WAR pattern
+    class-overflow reallocation produces (the allocator frees the old
+    chunk before carving the new one, and a tick's moves are issued in
+    the order the allocator processed them). No move may read a range
+    another move of the same call WRITES. Tiles past a move's length
+    (and skipped moves) park on the reserved LAST tile — see the module
+    docstring's junk-range contract: the final ``block_t`` rows of the
+    pool must never hold real data.
+    """
+    t, h, d = pool.shape
+    if t % block_t:
+        raise ValueError(f"pool rows {t} not a multiple of {block_t}")
+    n_tiles = t // block_t
+    max_tiles = -(-max_copy_tokens // block_t)
+    src_tiles = (src_starts // block_t).astype(jnp.int32)
+    dst_tiles = (dst_starts // block_t).astype(jnp.int32)
+    n_tokens = n_tokens.astype(jnp.int32)
+    m = src_tiles.shape[0]
+
+    def src_index(mm, tt, src_t, dst_t, len_t):
+        live = tt * block_t < len_t[mm]
+        return (jnp.clip(jnp.where(live, src_t[mm] + tt, n_tiles - 1),
+                         0, n_tiles - 1), 0, 0)
+
+    def dst_index(mm, tt, src_t, dst_t, len_t):
+        live = tt * block_t < len_t[mm]
+        return (jnp.clip(jnp.where(live, dst_t[mm] + tt, n_tiles - 1),
+                         0, n_tiles - 1), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(m, max_tiles),
+        in_specs=[pl.BlockSpec((block_t, h, d), src_index)],
+        out_specs=pl.BlockSpec((block_t, h, d), dst_index),
+    )
+    # operands are (src_tiles, dst_tiles, n_tokens, pool): pool is
+    # input 3 (scalar-prefetch args count), aliased onto output 0
+    return pl.pallas_call(
+        _chunk_copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(src_tiles, dst_tiles, n_tokens, pool)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_copy_tokens", "block_t"))
+def kv_chunk_copy_ref(pool, src_starts, dst_starts, n_tokens, *,
+                      max_copy_tokens: int, block_t: int = BLOCK_T
+                      ) -> jnp.ndarray:
+    """jnp oracle for :func:`kv_chunk_copy_pallas`: sequential moves in
+    array order, tile-granular lengths (``n_tokens`` rounded up to
+    ``block_t``), untouched rows preserved."""
+    t, h, d = pool.shape
+    m = src_starts.shape[0]
+    src_starts = src_starts.astype(jnp.int32)
+    dst_starts = dst_starts.astype(jnp.int32)
+    tiled = (((n_tokens.astype(jnp.int32) + block_t - 1) // block_t)
+             * block_t)
+    pos = jnp.arange(max_copy_tokens, dtype=jnp.int32)
+
+    def body(i, p):
+        src = jnp.clip(src_starts[i], 0, t - max_copy_tokens)
+        dst = jnp.clip(dst_starts[i], 0, t - max_copy_tokens)
+        blk = jax.lax.dynamic_slice(p, (src, 0, 0),
+                                    (max_copy_tokens, h, d))
+        cur = jax.lax.dynamic_slice(p, (dst, 0, 0),
+                                    (max_copy_tokens, h, d))
+        mask = (pos < tiled[i])[:, None, None]
+        return jax.lax.dynamic_update_slice(
+            p, jnp.where(mask, blk, cur), (dst, 0, 0))
+
+    return jax.lax.fori_loop(0, m, body, pool)

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.distribution import PAGE_SIZE
+from repro.kernels.kv_scatter import kv_append_pallas, kv_chunk_copy_pallas
 from repro.kernels.sketch_update import sketch_update_pallas
 from repro.kernels.slab_attention import slab_decode_attention_pallas
 from repro.kernels.waste_eval import waste_eval_fleet_pallas, waste_eval_pallas
@@ -50,6 +51,30 @@ def waste_eval_fleet(chunk_batch, supports, freqs, *,
                                    jnp.asarray(supports),
                                    jnp.asarray(freqs),
                                    page_size=page_size, interpret=interpret)
+
+
+def kv_append(pool, rows, vals, *,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """Batched one-row-per-sequence KV scatter, in place (-1 rows skip;
+    see kv_scatter's junk-range contract)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return kv_append_pallas(jnp.asarray(pool), jnp.asarray(rows),
+                            jnp.asarray(vals), interpret=interpret)
+
+
+def kv_chunk_copy(pool, src_starts, dst_starts, n_tokens, *,
+                  max_copy_tokens: int,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Batched contiguous chunk moves inside a KV pool, in place (the
+    class-overflow reallocation path; tile-granular, array order)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return kv_chunk_copy_pallas(jnp.asarray(pool), jnp.asarray(src_starts),
+                                jnp.asarray(dst_starts),
+                                jnp.asarray(n_tokens),
+                                max_copy_tokens=max_copy_tokens,
+                                interpret=interpret)
 
 
 def slab_decode_attention(q, k_pool, v_pool, starts, lens, *,

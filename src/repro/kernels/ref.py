@@ -59,6 +59,36 @@ def slab_decode_attention_ref(q, k_pool, v_pool, starts, lens, *,
     return out.reshape(b, hq, d).astype(q.dtype)
 
 
+def slab_decode_attention_window_ref(q, k_pool, v_pool, starts, lens, *,
+                                     max_chunk_tokens: int,
+                                     sm_scale: float | None = None
+                                     ) -> jnp.ndarray:
+    """:func:`slab_decode_attention_ref` restricted to each sequence's
+    chunk window: gathers ``max_chunk_tokens`` rows at ``starts[b]`` and
+    runs the same masked softmax there. Because a sequence's valid rows
+    all live inside its chunk (``lens <= max_chunk_tokens``), the valid
+    score set is identical to the full-pool oracle's — this is the
+    batch-vectorized form the offline harness serves with on backends
+    where the Pallas kernel would run in interpret mode."""
+    b, hq, d = q.shape
+    t, hkv, _ = k_pool.shape
+    g = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    w = jnp.arange(max_chunk_tokens, dtype=jnp.int32)
+    idx = jnp.clip(starts.astype(jnp.int32)[:, None] + w[None, :],
+                   0, t - 1)                                    # (B, W)
+    valid = w[None, :] < lens[:, None]                          # (B, W)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    kf = k_pool[idx].astype(jnp.float32)                        # (B,W,Hkv,D)
+    vf = v_pool[idx].astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bwhd->bhgw", qf, kf) * sm_scale
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = _softmax(scores)
+    out = jnp.einsum("bhgw,bwhd->bhgd", p, vf)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
 def _softmax(x):
     m = jnp.max(x, axis=-1, keepdims=True)
     # guard fully-masked rows (empty sequences): max = -inf -> output 0

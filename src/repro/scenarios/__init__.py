@@ -30,12 +30,12 @@ from repro.scenarios.invariants import (check_all, check_conservation,
 from repro.scenarios.trace import (META_SCHEMA, TWITTER_SCHEMA, TraceSchema,
                                    downsample, format_trace, parse_trace,
                                    synthetic_trace_ops, trace_histogram,
-                                   write_trace)
+                                   trace_requests, write_trace)
 
 __all__ = [
     "TraceSchema", "TWITTER_SCHEMA", "META_SCHEMA", "parse_trace",
     "format_trace", "write_trace", "synthetic_trace_ops", "downsample",
-    "trace_histogram",
+    "trace_histogram", "trace_requests",
     "TenantJoin", "TenantLeave", "FlashCrowd", "SizeStep", "TTLStorm",
     "ChaosResult", "apply_chaos", "tenants_of",
     "DriftSchedule", "EvalResult", "SearchResult", "evaluate", "search",

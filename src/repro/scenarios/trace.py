@@ -256,6 +256,20 @@ def synthetic_trace_ops(kind: str = "phased", *, n_ops: int = 10_000,
 
 # -- down-sampling -----------------------------------------------------------
 
+def _key_sampler(keep: float, seed: int) -> Callable[[str], bool]:
+    """The shared key-hash predicate behind :func:`downsample` and
+    :func:`trace_requests`: salted crc32 below the keep threshold.
+    Deterministic per (key, seed), so any consumer thinning the same
+    trace keeps exactly the same keys."""
+    if not 0.0 < keep <= 1.0:
+        raise ValueError(f"keep must be in (0, 1], got {keep}")
+    if keep == 1.0:
+        return lambda key: True
+    cut = int(keep * (1 << 32))
+    salt = f"{seed}:".encode()
+    return lambda key: zlib.crc32(salt + key.encode()) < cut
+
+
 def downsample(ops: Iterable[TenantOp], keep: float, *,
                seed: int = 0) -> List[TenantOp]:
     """Thin a trace to ~``keep`` of its keys, deterministically.
@@ -265,17 +279,59 @@ def downsample(ops: Iterable[TenantOp], keep: float, *,
     set/delete pairs stay paired and a key's re-reference pattern is
     intact, which per-op sampling would destroy. ``keep=1`` is the
     identity."""
-    if not 0.0 < keep <= 1.0:
-        raise ValueError(f"keep must be in (0, 1], got {keep}")
-    if keep == 1.0:
-        return list(ops)
-    cut = int(keep * (1 << 32))
-    salt = f"{seed}:".encode()
-
-    def kept(key: str) -> bool:
-        return zlib.crc32(salt + key.encode()) < cut
-
+    kept = _key_sampler(keep, seed)
     return [op for op in ops if kept(op.key)]
+
+
+# -- trace -> open-loop serving workload --------------------------------------
+
+def trace_requests(ops: Iterable[TenantOp], *,
+                   ops_per_tick: float = 64.0,
+                   bytes_per_token: int = 64,
+                   min_prompt: int = 1,
+                   output_max: int = 16,
+                   keep: float = 1.0, seed: int = 0,
+                   max_requests: Optional[int] = None) -> List:
+    """Convert a tenant-tagged ``TenantOp`` trace into the open-loop
+    serving workload ``OfflineHarness``/``ContinuousBatcher`` replay —
+    the bridge from the memcached-side fixtures to the serving side.
+
+    Every ``set`` op becomes one :class:`~repro.serving.scheduler.Request`
+    (gets and deletes carry no stored payload to prefill — they are
+    skipped, like reads hitting a serving cache):
+
+    * ``arrival`` — the op's index in the FULL trace divided by
+      ``ops_per_tick``: trace order is the arrival clock, and because
+      the index is taken before thinning, a downsampled replay keeps
+      every surviving request at its original arrival time;
+    * ``prompt_len`` — the stored size in tokens
+      (``ceil(size / bytes_per_token)``, at least ``min_prompt``);
+    * ``output_len`` — ``1 + crc32(key) % output_max``: deterministic
+      per key, so the same key re-set later decodes the same length in
+      any run that sampled it;
+    * ``tenant`` — ``"t<tenant>"`` (register these on the pool — the
+      harness auto-registers unknown tags on submit).
+
+    ``keep < 1`` thins by the same salted key hash as
+    :func:`downsample`, so `serving_bench --trace` at any sampling rate
+    replays exactly the keys the memcached-side replay kept.
+    """
+    from repro.serving.scheduler import Request
+    kept = _key_sampler(keep, seed)
+    out: List = []
+    for i, op in enumerate(ops):
+        if op.op != "set" or not kept(op.key):
+            continue
+        prompt = max(min_prompt,
+                     -(-int(op.size) // int(bytes_per_token)))
+        output = 1 + zlib.crc32(op.key.encode()) % int(output_max)
+        out.append(Request(rid=len(out), prompt_len=prompt,
+                           output_len=output,
+                           arrival=i / float(ops_per_tick),
+                           tenant=f"t{op.tenant}"))
+        if max_requests is not None and len(out) >= max_requests:
+            break
+    return out
 
 
 def trace_histogram(ops: Iterable[TenantOp]):

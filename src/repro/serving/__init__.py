@@ -1,17 +1,20 @@
 """Serving: slab-pool KV allocation (the paper's technique), decode steps,
-continuous batching."""
+continuous batching, and the offline-scale batched harness."""
 from repro.serving.kv_slab_pool import (ALIGN, Allocation, KVSlabPool,
                                         KVTenantQuotaView, PoolStats,
                                         TenantTokens, default_pow2_classes,
                                         quantize_lengths,
                                         token_quota_arbiter)
+from repro.serving.offline_harness import HarnessResult, OfflineHarness
 from repro.serving.scheduler import (ContinuousBatcher, Request, SimResult,
-                                     lognormal_request_workload)
+                                     lognormal_request_workload,
+                                     queue_delay_stats)
 from repro.serving.serve_step import generate, make_serve_fns, sample_logits
 
 __all__ = ["ALIGN", "Allocation", "KVSlabPool", "KVTenantQuotaView",
            "PoolStats", "TenantTokens",
            "default_pow2_classes", "quantize_lengths", "token_quota_arbiter",
-           "ContinuousBatcher",
+           "ContinuousBatcher", "OfflineHarness", "HarnessResult",
            "Request", "SimResult", "lognormal_request_workload",
+           "queue_delay_stats",
            "generate", "make_serve_fns", "sample_logits"]

@@ -127,6 +127,11 @@ class TenantTokens:
     retained_evicted_tokens: int = 0     # their chunk tokens
     n_quota_reclaims: int = 0            # arbiter-driven reclaims
     quota_reclaimed_tokens: int = 0      # their chunk tokens
+    # requests the arbiter's admission gate turned away BEFORE they
+    # reached alloc (see TenantArbiter.admission) — kept apart from
+    # n_failed so the allocator's own failure ledger stays honest, but
+    # folded into the quota view's pressure signal
+    n_admission_denied: int = 0
 
 
 class KVSlabPool:
@@ -305,6 +310,28 @@ class KVSlabPool:
             return a
         self.free(request_id)
         return self.alloc(request_id, new_length, tenant=a.tenant)
+
+    def extend_bulk(self, updates: List[Tuple[int, int]]) -> None:
+        """Batched within-chunk decode growth: ``updates`` is
+        ``[(request_id, new_length), ...]`` for one tick's worth of
+        sequences whose new length still fits their current chunk — the
+        host-side analogue of the harness's one-dispatch decode tick
+        (no per-request calls, one tenant-accounting pass). Every entry
+        MUST fit its allocation's chunk; class overflow must go through
+        :meth:`extend`, which reallocates (the caller separates the two
+        cases — it needs to know about the chunk copy anyway)."""
+        per_tenant: Dict[str, int] = {}
+        for rid, new_length in updates:
+            a = self._live[rid]
+            if new_length > a.chunk:
+                raise ValueError(
+                    f"extend_bulk: request {rid} new length {new_length} "
+                    f"overflows its chunk {a.chunk}; use extend()")
+            per_tenant[a.tenant] = (per_tenant.get(a.tenant, 0)
+                                    + new_length - a.length)
+            a.length = new_length
+        for tenant, delta in per_tenant.items():
+            self._tenants[tenant].used_tokens += delta
 
     def free(self, request_id: int) -> None:
         a = self._live.pop(request_id)
@@ -640,7 +667,15 @@ class KVTenantQuotaView:
 
     @property
     def n_page_denials(self) -> int:
-        return self._rec.n_failed
+        # admission-gate denials count as pressure too: a stream turned
+        # away at the door is starving exactly like one failing allocs
+        return self._rec.n_failed + self._rec.n_admission_denied
+
+    def note_admission_denial(self) -> None:
+        """Record one arbiter admission-gate denial against this stream
+        (the harness's tick-granular admission seam — see
+        ``TenantArbiter.admission``)."""
+        self._rec.n_admission_denied += 1
 
     def current_demand_bytes(self) -> float:
         """Live chunk tokens — the demand series the forecaster tracks

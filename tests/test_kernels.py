@@ -174,3 +174,38 @@ def test_slab_attention_property(seed, b, g, hkv, d):
     want = slab_decode_attention_ref(q, k, v, starts, lens)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+@hypothesis.given(
+    data=st.data(),
+    b=st.integers(1, 6),
+    tiles=st.integers(1, 4),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_slab_attention_ragged_boundary_property(data, b, tiles):
+    """Ragged lengths biased to the copy-tile edges (0, +-1 around every
+    128 multiple, full chunk) — where the kernel's masked last tile and
+    the oracle's dense mask are most likely to disagree. Also checks the
+    chunk-window oracle the offline harness serves with off-TPU."""
+    from repro.kernels.ref import slab_decode_attention_window_ref
+    block = 128
+    chunk = tiles * block
+    edges = sorted({0, chunk} | {
+        m * block + d for m in range(1, tiles + 1) for d in (-1, 0, 1)
+        if 0 <= m * block + d <= chunk})
+    lens = jnp.asarray(
+        [data.draw(st.sampled_from(edges)) for _ in range(b)], jnp.int32)
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    q, k, v = _mk_attention(rng, b, 2, 1, 32, b * chunk + block,
+                            jnp.float32)
+    starts = jnp.arange(b, dtype=jnp.int32) * chunk
+    got = slab_decode_attention(q, k, v, starts, lens,
+                                max_chunk_tokens=chunk)
+    want = slab_decode_attention_ref(q, k, v, starts, lens)
+    win = slab_decode_attention_window_ref(q, k, v, starts, lens,
+                                           max_chunk_tokens=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(win), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)

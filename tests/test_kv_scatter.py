@@ -1,0 +1,218 @@
+"""KV-pool scatter kernels (append + chunk copy) vs their jnp oracles,
+plus the chunk-window attention oracle — interpret mode on CPU.
+
+Unlike test_kernels.py this file has no module-level hypothesis
+dependency: the scatter kernels back the offline harness's
+one-dispatch decode tick, so their contracts must run everywhere the
+harness runs.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.kv_scatter import (BLOCK_T, kv_append_pallas,
+                                      kv_append_ref, kv_chunk_copy_pallas,
+                                      kv_chunk_copy_ref)
+from repro.kernels.ref import (slab_decode_attention_ref,
+                               slab_decode_attention_window_ref)
+from repro.kernels.slab_attention import slab_decode_attention_pallas
+
+H, D = 2, 8
+
+
+def mk_pool(t, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(t, H, D)), dtype=jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# kv_append
+# ----------------------------------------------------------------------------
+
+
+def test_append_matches_ref_mixed_skips():
+    pool = mk_pool(512)
+    rows = jnp.asarray([3, -1, 200, 511 - BLOCK_T, -1, 0], jnp.int32)
+    vals = mk_pool(6, seed=1)[:, :, :]
+    got = kv_append_pallas(pool, rows, vals, interpret=True)
+    want = kv_append_ref(pool, rows, vals)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_append_writes_rows_and_preserves_rest():
+    pool = mk_pool(256)
+    rows = jnp.asarray([10, 20], jnp.int32)
+    vals = mk_pool(2, seed=2)
+    out = np.asarray(kv_append_pallas(pool, rows, vals, interpret=True))
+    np.testing.assert_array_equal(out[10], np.asarray(vals)[0])
+    np.testing.assert_array_equal(out[20], np.asarray(vals)[1])
+    keep = np.ones(256, bool)
+    keep[[10, 20]] = False
+    np.testing.assert_array_equal(out[keep], np.asarray(pool)[keep])
+
+
+def test_append_all_skipped_is_identity():
+    """Inactive slots park on the reserved last row and rewrite it with
+    its own content — the whole pool must come back bit-unchanged."""
+    pool = mk_pool(256)
+    rows = jnp.full((4,), -1, jnp.int32)
+    vals = mk_pool(4, seed=3)
+    for out in (kv_append_pallas(pool, rows, vals, interpret=True),
+                kv_append_ref(pool, rows, vals)):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(pool))
+
+
+# ----------------------------------------------------------------------------
+# kv_chunk_copy
+# ----------------------------------------------------------------------------
+
+
+def test_chunk_copy_matches_ref():
+    t = 8 * BLOCK_T
+    pool = mk_pool(t)
+    src = jnp.asarray([0, 2 * BLOCK_T], jnp.int32)
+    dst = jnp.asarray([4 * BLOCK_T, 6 * BLOCK_T], jnp.int32)
+    n = jnp.asarray([2 * BLOCK_T, BLOCK_T], jnp.int32)
+    got = kv_chunk_copy_pallas(pool, src, dst, n,
+                               max_copy_tokens=2 * BLOCK_T, interpret=True)
+    want = kv_chunk_copy_ref(pool, src, dst, n,
+                             max_copy_tokens=2 * BLOCK_T)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(got)[4 * BLOCK_T:6 * BLOCK_T],
+        np.asarray(pool)[0:2 * BLOCK_T])
+
+
+def test_chunk_copy_zero_len_skips_move():
+    t = 4 * BLOCK_T
+    pool = mk_pool(t)
+    src = jnp.asarray([0], jnp.int32)
+    dst = jnp.asarray([2 * BLOCK_T], jnp.int32)
+    n = jnp.asarray([0], jnp.int32)
+    for out in (kv_chunk_copy_pallas(pool, src, dst, n,
+                                     max_copy_tokens=2 * BLOCK_T,
+                                     interpret=True),
+                kv_chunk_copy_ref(pool, src, dst, n,
+                                  max_copy_tokens=2 * BLOCK_T)):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(pool))
+
+
+def test_chunk_copy_is_tile_granular():
+    """n_tokens rounds UP to whole tiles: rows past n but inside the
+    tile still copy (slab classes are tile multiples, so real moves
+    never see this — the contract just has to be deterministic)."""
+    t = 4 * BLOCK_T
+    pool = mk_pool(t)
+    src = jnp.asarray([0], jnp.int32)
+    dst = jnp.asarray([2 * BLOCK_T], jnp.int32)
+    n = jnp.asarray([5], jnp.int32)    # 5 tokens -> one whole tile
+    got = kv_chunk_copy_pallas(pool, src, dst, n,
+                               max_copy_tokens=2 * BLOCK_T, interpret=True)
+    want = kv_chunk_copy_ref(pool, src, dst, n,
+                             max_copy_tokens=2 * BLOCK_T)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(got)[2 * BLOCK_T:3 * BLOCK_T],
+        np.asarray(pool)[0:BLOCK_T])
+    np.testing.assert_array_equal(        # second tile NOT copied
+        np.asarray(got)[3 * BLOCK_T:],
+        np.asarray(pool)[3 * BLOCK_T:])
+
+
+def test_chunk_copy_war_ordering():
+    """Moves execute in array order: move 1's write may land on a range
+    move 0 already READ (the WAR pattern class-overflow reallocation
+    produces when a freed chunk is immediately recarved)."""
+    t = 6 * BLOCK_T
+    pool = mk_pool(t)
+    # move 0 reads [0, B); move 1 writes [0, B) after
+    src = jnp.asarray([0, 3 * BLOCK_T], jnp.int32)
+    dst = jnp.asarray([2 * BLOCK_T, 0], jnp.int32)
+    n = jnp.asarray([BLOCK_T, BLOCK_T], jnp.int32)
+    got = kv_chunk_copy_pallas(pool, src, dst, n,
+                               max_copy_tokens=BLOCK_T, interpret=True)
+    want = kv_chunk_copy_ref(pool, src, dst, n, max_copy_tokens=BLOCK_T)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    ref = np.asarray(pool)
+    out = np.asarray(got)
+    np.testing.assert_array_equal(out[2 * BLOCK_T:3 * BLOCK_T],
+                                  ref[0:BLOCK_T])       # pre-overwrite read
+    np.testing.assert_array_equal(out[0:BLOCK_T],
+                                  ref[3 * BLOCK_T:4 * BLOCK_T])
+
+
+def test_chunk_copy_junk_tile_absorbs_dead_lanes():
+    """Tiles past a move's length and fully-skipped moves self-copy the
+    reserved last tile; everything before it is untouched."""
+    t = 6 * BLOCK_T
+    pool = mk_pool(t)
+    src = jnp.asarray([0, BLOCK_T], jnp.int32)
+    dst = jnp.asarray([2 * BLOCK_T, 3 * BLOCK_T], jnp.int32)
+    n = jnp.asarray([BLOCK_T, 0], jnp.int32)   # move 1 fully skipped
+    got = np.asarray(kv_chunk_copy_pallas(
+        pool, src, dst, n, max_copy_tokens=4 * BLOCK_T, interpret=True))
+    ref = np.asarray(pool)
+    np.testing.assert_array_equal(got[2 * BLOCK_T:3 * BLOCK_T],
+                                  ref[0:BLOCK_T])
+    keep = np.ones(t, bool)
+    keep[2 * BLOCK_T:3 * BLOCK_T] = False
+    np.testing.assert_array_equal(got[keep], ref[keep])
+
+
+# ----------------------------------------------------------------------------
+# ragged decode attention: window oracle + kernel edge cases
+# (the hypothesis property sweep lives in test_kernels.py)
+# ----------------------------------------------------------------------------
+
+
+def _attention_case(lens, chunk, seed=0, hq=2, hkv=1, d=16):
+    rng = np.random.default_rng(seed)
+    b = len(lens)
+    t = b * chunk + BLOCK_T            # junk tail past the chunks
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    starts = jnp.arange(b, dtype=jnp.int32) * chunk
+    return q, k, v, starts, jnp.asarray(lens, jnp.int32)
+
+
+@pytest.mark.parametrize("lens", [
+    [0, 0, 0, 0],                      # all-empty batch
+    [0, 1, BLOCK_T, BLOCK_T + 1],      # straddling the first tile edge
+    [2 * BLOCK_T, 2 * BLOCK_T - 1, 17, 0],
+    [256, 256, 256, 256],              # len == max_chunk_tokens
+])
+def test_ragged_attention_kernel_vs_refs(lens):
+    chunk = 2 * BLOCK_T
+    q, k, v, starts, lens = _attention_case(lens, chunk)
+    got = slab_decode_attention_pallas(q, k, v, starts, lens,
+                                       max_chunk_tokens=chunk,
+                                       interpret=True)
+    full = slab_decode_attention_ref(q, k, v, starts, lens)
+    win = slab_decode_attention_window_ref(q, k, v, starts, lens,
+                                           max_chunk_tokens=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(win), np.asarray(full),
+                               rtol=2e-6, atol=2e-6)
+    zero = np.asarray(lens) == 0
+    np.testing.assert_array_equal(np.asarray(got)[zero], 0.0)
+    np.testing.assert_array_equal(np.asarray(win)[zero], 0.0)
+
+
+def test_window_ref_ignores_out_of_window_poison():
+    """The window oracle may only read [start, start+chunk): poisoning
+    every other pool row (other chunks, the junk tail) cannot move any
+    output."""
+    chunk = 2 * BLOCK_T
+    q, k, v, starts, lens = _attention_case([chunk, 40, 0], chunk, seed=3)
+    base = np.asarray(slab_decode_attention_window_ref(
+        q, k, v, starts, lens, max_chunk_tokens=chunk))
+    mask = np.ones(k.shape[0], bool)
+    for s, length in zip(np.asarray(starts), np.asarray(lens)):
+        mask[s:s + length] = False
+    k2 = jnp.asarray(np.where(mask[:, None, None], 1e6, np.asarray(k)))
+    v2 = jnp.asarray(np.where(mask[:, None, None], -1e6, np.asarray(v)))
+    got = np.asarray(slab_decode_attention_window_ref(
+        q, k2, v2, starts, lens, max_chunk_tokens=chunk))
+    np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,260 @@
+"""Offline serving harness: batched one-dispatch ticks vs the legacy
+per-request loop (bit-parity + dispatch accounting), the scheduler's
+phase-structured tick vs its preserved legacy loop, queue-delay
+latency accounting, the arbiter's tick-granular admission gate, and
+the trace -> open-loop-workload adapter.
+"""
+import numpy as np
+import pytest
+
+from repro.scenarios import (downsample, parse_trace, synthetic_trace_ops,
+                             trace_requests, write_trace)
+from repro.serving import (ContinuousBatcher, KVSlabPool, OfflineHarness,
+                           Request, lognormal_request_workload,
+                           queue_delay_stats, token_quota_arbiter)
+
+CLASSES = (128, 256, 512, 1024)
+
+
+def mk_workload(n, seed=0, rate=4.0):
+    rng = np.random.default_rng(seed)
+    return lognormal_request_workload(
+        rng, n, prompt_mean=96.0, prompt_std=64.0,
+        output_mean=8.0, output_std=4.0, arrival_rate=rate)
+
+
+def run_harness(workload, *, mode, pool_tokens=16384, batch=16, **kw):
+    pool = KVSlabPool(pool_tokens, CLASSES)
+    h = OfflineHarness(pool, max_batch=batch, mode=mode, **kw)
+    return h.run([Request(rid=r.rid, prompt_len=r.prompt_len,
+                          output_len=r.output_len, arrival=r.arrival,
+                          tenant=r.tenant) for r in workload])
+
+
+# ----------------------------------------------------------------------------
+# batched vs legacy bit-parity + dispatch accounting
+# ----------------------------------------------------------------------------
+
+
+def test_batched_matches_legacy_bitwise():
+    wl = mk_workload(40, seed=1)
+    rb = run_harness(wl, mode="batched")
+    rl = run_harness(wl, mode="legacy")
+    assert rb.decisions() == rl.decisions()
+    assert rb.tokens == rl.tokens          # exact token ids, per request
+    assert rb.generated_tokens > 0
+    assert rb.n_decode_dispatches <= rb.ticks
+    # legacy pays one dispatch per active request per decode tick
+    assert rl.n_decode_dispatches == rl.generated_tokens
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_parity_under_pool_pressure(seed):
+    """Tight pool: rejections, mid-flight drops and class-overflow
+    chunk moves all fire — and the decision fingerprint and token
+    streams must still match bit-for-bit."""
+    wl = mk_workload(48, seed=seed, rate=8.0)
+    rb = run_harness(wl, mode="batched", pool_tokens=4096, batch=24)
+    rl = run_harness(wl, mode="legacy", pool_tokens=4096, batch=24)
+    assert rb.decisions() == rl.decisions()
+    assert rb.tokens == rl.tokens
+    assert rb.rejected > 0                 # the pressure actually bit
+    assert rb.n_decode_dispatches <= rb.ticks
+
+
+def test_impl_ref_and_pallas_agree_on_decisions():
+    """The decode math differs between the Pallas kernels and their jnp
+    oracles only in float summation order; admission/realloc decisions
+    come from the host allocator and must be identical. Each impl is
+    internally bit-parity checked against its own legacy mode."""
+    wl = mk_workload(12, seed=2)
+    per_impl = {}
+    for impl in ("ref", "pallas"):
+        rb = run_harness(wl, mode="batched", impl=impl, batch=8)
+        rl = run_harness(wl, mode="legacy", impl=impl, batch=8)
+        assert rb.decisions() == rl.decisions()
+        assert rb.tokens == rl.tokens
+        per_impl[impl] = rb
+    assert (per_impl["ref"].decisions()
+            == per_impl["pallas"].decisions())
+
+
+def test_harness_queue_delay_accounting():
+    """max_batch=1 forces queuing: request i admits only after its
+    predecessor's slot frees, so delays are hand-computable."""
+    wl = [Request(rid=0, prompt_len=8, output_len=2, arrival=0.0),
+          Request(rid=1, prompt_len=8, output_len=2, arrival=0.0),
+          Request(rid=2, prompt_len=8, output_len=3, arrival=1.0)]
+    pool = KVSlabPool(2048, CLASSES)
+    h = OfflineHarness(pool, max_batch=1, mode="batched")
+    res = h.run(wl)
+    # rid0 admits at t=0; finishes during tick 1 -> rid1 admits at t=2
+    # and finishes during tick 3 -> rid2 admits at t=4 (arrived at 1)
+    assert h.queue_delays == [0.0, 2.0, 3.0]
+    assert res.queue_delay_p50 == 2.0
+    assert res.queue_delay_p99 == pytest.approx(2.98)
+
+
+def test_adaptive_refit_ceiling_guard():
+    """A refit that grows the top class past the compiled max-chunk
+    ceiling must raise, not silently mis-shape the step functions."""
+    pool = KVSlabPool(16384, (128, 256))
+    h = OfflineHarness(pool, max_batch=4, mode="batched", adaptive=True)
+    assert h.max_chunk == 256
+    pool.set_classes((128, 512))       # what a grown refit would do
+    assert pool.max_chunk_tokens > h.max_chunk
+
+
+# ----------------------------------------------------------------------------
+# scheduler: phase-structured tick vs preserved legacy loop
+# ----------------------------------------------------------------------------
+
+
+def _sim(legacy, workload, **kw):
+    pool = KVSlabPool(8192, CLASSES)
+    b = ContinuousBatcher(pool, max_batch=16, legacy_loop=legacy, **kw)
+    res = b.run([Request(rid=r.rid, prompt_len=r.prompt_len,
+                         output_len=r.output_len, arrival=r.arrival)
+                 for r in workload], steps=600)
+    return b, res
+
+
+def test_step_tick_matches_step_legacy():
+    wl = mk_workload(60, seed=5, rate=6.0)
+    bt, rt = _sim(False, wl)
+    bl, rl = _sim(True, wl)
+    assert rt == rl                        # every SimResult field
+    assert bt.queue_delays == bl.queue_delays
+
+
+def test_extend_bulk_matches_sequential_extend():
+    pa, pb = KVSlabPool(4096, CLASSES), KVSlabPool(4096, CLASSES)
+    for p in (pa, pb):
+        p.alloc(0, 100)
+        p.alloc(1, 200)
+    for rid, ln in ((0, 110), (1, 210)):
+        pa.extend(rid, ln)
+    pb.extend_bulk([(0, 110), (1, 210)])
+    assert pa.stats() == pb.stats()
+    for rid in (0, 1):
+        aa, ab = pa.allocation(rid), pb.allocation(rid)
+        assert (aa.start, aa.length, aa.chunk) == \
+            (ab.start, ab.length, ab.chunk)
+
+
+def test_extend_bulk_rejects_chunk_overflow():
+    pool = KVSlabPool(4096, CLASSES)
+    pool.alloc(0, 100)                     # chunk 128
+    with pytest.raises(ValueError, match="overflows its chunk"):
+        pool.extend_bulk([(0, 300)])
+
+
+def test_queue_delay_stats_and_open_loop_arrivals():
+    assert queue_delay_stats([]) == (0.0, 0.0, 0.0)
+    mean, p50, p99 = queue_delay_stats([0.0, 2.0, 4.0])
+    assert (mean, p50) == (2.0, 2.0)
+    assert p99 == pytest.approx(3.96)
+    # a not-yet-arrived head blocks the FIFO queue
+    pool = KVSlabPool(8192, CLASSES)
+    b = ContinuousBatcher(pool, max_batch=8)
+    b.submit(Request(rid=0, prompt_len=16, output_len=4, arrival=3.0))
+    b.step(0)
+    assert not b.active and b.queue
+    b.step(3)
+    assert 0 in b.active
+    assert b.queue_delays == [0.0]
+
+
+# ----------------------------------------------------------------------------
+# arbiter admission gate
+# ----------------------------------------------------------------------------
+
+
+def test_arbiter_admission_gate_counters():
+    kv = KVSlabPool(4096, CLASSES)
+    kv.register_tenant("a", quota_tokens=1024)
+    kv.register_tenant("b")                # unmanaged
+    arb = token_quota_arbiter(kv, unit_tokens=512)
+    assert arb.admission("b", units=4)     # no quota -> always admitted
+    assert arb.admission("a", units=2)     # 2 units = its whole quota
+    kv.alloc(0, 900, tenant="a")           # owns 1024 tokens = 2 units
+    assert not arb.admission("a", units=1)
+    assert arb.n_admission_checks == 3
+    assert arb.n_admission_denials == 1
+    # the denial lands on the tenant's pressure signal, where the next
+    # arbitration round reads it
+    assert kv._tenants["a"].n_admission_denied == 1
+    view = arb.tenants["a"].allocator
+    assert view.n_page_denials == 1
+    with pytest.raises(KeyError):
+        arb.admission("nobody")
+
+
+def test_harness_admission_gate_rejects_and_records():
+    kv = KVSlabPool(4096, CLASSES)
+    kv.register_tenant("a", quota_tokens=256)
+    arb = token_quota_arbiter(kv, unit_tokens=128)
+    h = OfflineHarness(kv, max_batch=8, mode="batched", arbiter=arb)
+    res = h.run([
+        Request(rid=0, prompt_len=200, output_len=2, tenant="a"),
+        Request(rid=1, prompt_len=200, output_len=2, tenant="a",
+                arrival=0.0),
+    ])
+    # request 0 takes the whole 256-token quota; request 1 is denied at
+    # the gate (before the allocator) and dropped
+    assert res.rejected == 1
+    assert res.completed == 1
+    assert res.n_admission_denials == 1
+    assert arb.n_admission_denials == 1
+
+
+# ----------------------------------------------------------------------------
+# trace -> request adapter
+# ----------------------------------------------------------------------------
+
+
+def test_trace_requests_roundtrip_and_fields():
+    ops = synthetic_trace_ops("phased", n_ops=200, n_tenants=2, seed=1)
+    reqs = trace_requests(ops, ops_per_tick=10.0, bytes_per_token=64)
+    sets = [(i, op) for i, op in enumerate(ops) if op.op == "set"]
+    assert len(reqs) == len(sets)
+    for r, (i, op) in zip(reqs, sets):
+        assert r.arrival == i / 10.0       # full-trace index, in ticks
+        assert r.prompt_len == max(1, -(-op.size // 64))
+        assert 1 <= r.output_len <= 16
+        assert r.tenant == f"t{op.tenant}"
+    assert [r.rid for r in reqs] == list(range(len(reqs)))
+
+
+def test_trace_requests_downsampling_is_key_coherent():
+    """keep<1 must keep exactly the keys `downsample` keeps, at their
+    ORIGINAL arrival times (index taken before thinning)."""
+    ops = synthetic_trace_ops("phased", n_ops=300, n_tenants=2, seed=2)
+    full = trace_requests(ops, ops_per_tick=8.0)
+    thin = trace_requests(ops, ops_per_tick=8.0, keep=0.5, seed=9)
+    alt = trace_requests(downsample(ops, 0.5, seed=9), ops_per_tick=8.0)
+    assert 0 < len(thin) < len(full)
+    full_by_arrival = {r.arrival: r for r in full}
+    for r in thin:
+        f = full_by_arrival[r.arrival]     # same op -> same arrival
+        assert (r.prompt_len, r.output_len, r.tenant) == \
+            (f.prompt_len, f.output_len, f.tenant)
+    # same salted key hash as `downsample`: identical surviving ops.
+    # (Arrivals differ — downsampling FIRST renumbers the trace index,
+    # which is exactly why the adapter takes `keep` itself.)
+    assert [(r.prompt_len, r.output_len, r.tenant) for r in thin] == \
+        [(r.prompt_len, r.output_len, r.tenant) for r in alt]
+    assert any(r.arrival != a.arrival for r, a in zip(thin, alt))
+
+
+def test_trace_replay_parity_through_harness(tmp_path):
+    ops = synthetic_trace_ops("phased", n_ops=240, n_tenants=2, seed=3)
+    path = write_trace(str(tmp_path / "t.trace"), ops)
+    reqs = trace_requests(parse_trace(path), ops_per_tick=12.0,
+                          bytes_per_token=64, max_requests=24)
+    assert len({r.tenant for r in reqs}) > 1
+    rb = run_harness(reqs, mode="batched", batch=8)
+    rl = run_harness(reqs, mode="legacy", batch=8)
+    assert rb.decisions() == rl.decisions()
+    assert rb.tokens == rl.tokens
+    assert rb.n_decode_dispatches <= rb.ticks
